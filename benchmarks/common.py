@@ -1,0 +1,77 @@
+"""Shared helpers for the paper-table benchmarks.
+
+Scale note: the paper's simulations sweep to n=65k (Kronecker) / n=1e6
+(benchmark graphs) on an 80-thread Xeon; this container is a single CPU
+core, so default sizes are reduced (the generators and harness accept
+``--full`` to reproduce at paper scale on real hardware). Phase counts are
+exact properties of (graph, criterion) — reduced n changes the fitted range,
+not the methodology.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import dijkstra_numpy, run_phased
+from repro.graphs import grid_road, kronecker, uniform_gnp, webgraph
+
+
+def bucket_edges(expected_m: int) -> int:
+    """Pad edge arrays to a shared bucket so seeded instances of one size
+    reuse a single jit compile (padding edges are +inf-weight no-ops)."""
+    return -(-int(expected_m * 1.3) // 8192) * 8192
+
+CRITERIA = [
+    "outstatic", "instatic", "instatic|outstatic",
+    "outsimple", "insimple", "insimple|outsimple",
+    "out", "in", "in|out",
+    "oracle",
+]
+
+
+def mean_phases(make_graph, criterion: str, seeds, source=0):
+    """Mean (phases, sum|F|) over seeded graph instances."""
+    phases, sumf = [], []
+    for s in seeds:
+        g = make_graph(s)
+        dist_true = None
+        if criterion == "oracle":
+            dist_true = dijkstra_numpy(g, source).astype(np.float32)
+        r = run_phased(g, source, criterion, dist_true=dist_true)
+        phases.append(int(r.phases))
+        sumf.append(int(r.sum_fringe))
+    return float(np.mean(phases)), float(np.mean(sumf))
+
+
+def fit_power(ns, ys):
+    """Fit y = b * n^c (log-log least squares); returns (b, c)."""
+    ns, ys = np.asarray(ns, float), np.asarray(ys, float)
+    mask = (ns > 0) & (ys > 0)
+    A = np.stack([np.ones(mask.sum()), np.log(ns[mask])], axis=1)
+    coef, *_ = np.linalg.lstsq(A, np.log(ys[mask]), rcond=None)
+    return float(np.exp(coef[0])), float(coef[1])
+
+
+def fit_log(ns, ys):
+    """Fit y = b * log2(n); returns b."""
+    ns, ys = np.asarray(ns, float), np.asarray(ys, float)
+    return float(np.sum(ys * np.log2(ns)) / np.sum(np.log2(ns) ** 2))
+
+
+def timed(fn, *args, repeats=3, **kw):
+    """Median wall time (s) + last result."""
+    ts, out = [], None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+FAMILIES = {
+    "uniform": lambda n: (lambda seed: uniform_gnp(n, 10.0 / n, seed=seed)),
+    "kronecker": lambda k: (lambda seed: kronecker(k, seed=seed)),
+    "grid": lambda n: (lambda seed: grid_road(int(np.sqrt(n)), int(np.sqrt(n)), seed=seed)),
+    "web": lambda n: (lambda seed: webgraph(n, 8, seed=seed)),
+}

@@ -1,0 +1,155 @@
+"""Render the §Generated sections of EXPERIMENTS.md from results/*.json."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import analyze_record, load_records
+
+PAPER_PHASES = {
+    ("uniform", "outstatic"): "2.48·n^0.50",
+    ("uniform", "instatic"): "2.28·n^0.50",
+    ("uniform", "instatic|outstatic"): "3.97·n^0.34",
+    ("uniform", "outsimple"): "1.66·n^0.50",
+    ("uniform", "insimple"): "1.43·n^0.46",
+    ("uniform", "insimple|outsimple"): "3.75·n^0.29",
+    ("uniform", "out"): "1.62·n^0.48",
+    ("uniform", "in"): "1.47·n^0.43",
+    ("uniform", "in|out"): "4.60·n^0.26",
+    ("uniform", "oracle"): "1.69·log2(n)",
+    ("kronecker", "outstatic"): "1.79·n^0.51",
+    ("kronecker", "instatic"): "2.17·n^0.43",
+    ("kronecker", "instatic|outstatic"): "3.49·n^0.31",
+    ("kronecker", "outsimple"): "1.68·n^0.42",
+    ("kronecker", "insimple"): "3.01·n^0.32",
+    ("kronecker", "insimple|outsimple"): "4.03·n^0.24",
+    ("kronecker", "out"): "1.54·n^0.43",
+    ("kronecker", "in"): "2.83·n^0.3",
+    ("kronecker", "in|out"): "3.65·n^0.24",
+    ("kronecker", "oracle"): "1.17·log2(n)",
+}
+
+
+def _load(path):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def phases_section():
+    rows = _load("results/bench_phases.json")
+    if not rows:
+        return "(run benchmarks first)\n"
+    out = ["### Generated: phases (Table 1 / Fig 3)\n",
+           "| family | criterion | paper fit | our fit | phases@max-n |",
+           "|---|---|---|---|---|"]
+    for r in rows:
+        paper = PAPER_PHASES.get((r["family"], r["criterion"]), "—")
+        out.append(f"| {r['family']} | {r['criterion']} | {paper} | "
+                   f"{r['fit']} | {r['phases'][-1]:.1f} |")
+    return "\n".join(out) + "\n"
+
+
+def fringe_section():
+    rows = _load("results/bench_fringe.json")
+    if not rows:
+        return ""
+    out = ["\n### Generated: sum |F| (Table 2 / Fig 4)\n",
+           "| family | criterion | our fit | sum|F|@max-n |", "|---|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['family']} | {r['criterion']} | {r['fit']} | "
+                   f"{r['sum_fringe'][-1]:.0f} |")
+    return "\n".join(out) + "\n"
+
+
+def snap_section():
+    rows = _load("results/bench_snap.json")
+    if not rows:
+        return ""
+    out = ["\n### Generated: snap stand-ins (Table 3)\n",
+           "| graph | n | criterion | phases | sum F |", "|---|---|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['graph']} | {r['n']} | {r['criterion']} | "
+                   f"{r['phases']} | {r['sum_fringe']} |")
+    return "\n".join(out) + "\n"
+
+
+def speedup_section():
+    rows = _load("results/bench_speedup.json")
+    if not rows:
+        return ""
+    out = ["\n### Generated: engines vs Delta-stepping (Fig 7/8/10, single-core)\n",
+           "| graph | algorithm | time | vs Dijkstra | phases | correct |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['graph']} | {r['algo']} | {r['time_s']*1e3:.1f} ms | "
+                   f"x{r['speedup_vs_dijkstra']:.2f} | {r['phases']} | "
+                   f"{r['correct']} |")
+    return "\n".join(out) + "\n"
+
+
+def dryrun_sections():
+    recs = load_records("results/dryrun")
+    if not recs:
+        return ""
+    recs.sort(key=lambda r: (str(r.get("arch")), str(r.get("shape")),
+                             str(r.get("mesh"))))
+    out = ["\n### Generated: dryrun (lower+compile, both meshes)\n",
+           "| arch | shape | mesh | status | args GiB | temp GiB | compile s |",
+           "|---|---|---|---|---|---|---|"]
+    n_ok = n_skip = n_err = 0
+    for r in recs:
+        st = r.get("status")
+        if st == "ok":
+            n_ok += 1
+            m = r["memory"]
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{m['argument_bytes']/2**30:.2f} | {m['temp_bytes']/2**30:.2f} |"
+                f" {r.get('compile_s','')} |")
+        elif st == "skipped":
+            n_skip += 1
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"SKIP: {r['reason']} | | | |")
+        else:
+            n_err += 1
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"ERROR: {str(r.get('error'))[:80]} | | | |")
+    out.append(f"\nTotals: {n_ok} compiled ok, {n_skip} skipped by rule, "
+               f"{n_err} errors.\n")
+
+    out += ["\n### Generated: roofline\n",
+            "| arch | shape | mesh | t_comp s | t_mem s | t_coll s | dominant "
+            "| useful | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        row = analyze_record(r)
+        if row is None:
+            continue
+        ur = row.get("useful_ratio")
+        rf = row.get("roofline_fraction")
+        out.append(
+            f"| {row['arch']} | {row['shape']} | {row['mesh']} | "
+            f"{row['t_compute_s']:.4g} | {row['t_memory_s']:.4g} | "
+            f"{row['t_collective_s']:.4g} | {row['dominant']} | "
+            f"{'' if ur is None else f'{ur:.2f}'} | "
+            f"{'' if rf is None else f'{rf:.3f}'} |")
+    return "\n".join(out) + "\n"
+
+
+def main():
+    marker = "## §Generated sections"
+    with open("EXPERIMENTS.md") as f:
+        head = f.read().split(marker)[0]
+    body = (head + marker + "\n\nRegenerated by "
+            "`python -m benchmarks.render_experiments`.\n\n"
+            + phases_section() + fringe_section() + snap_section()
+            + speedup_section() + dryrun_sections())
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(body)
+    print("EXPERIMENTS.md §Generated sections updated")
+
+
+if __name__ == "__main__":
+    main()

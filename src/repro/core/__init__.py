@@ -1,0 +1,24 @@
+"""Core: the paper's contribution — phased Dijkstra SSSP with correctness
+criteria (Kainer & Traeff 2019 / Crauser et al. 1998), plus the Delta-stepping
+baseline and reference oracles."""
+from repro.core.criteria import REGISTRY as CRITERIA
+from repro.core.delta_stepping import DeltaResult, default_delta, run_delta_stepping
+from repro.core.graph import Graph, from_coo, to_ell_in, to_numpy_csr, transpose
+from repro.core.oracle import bellman_ford_jnp, dijkstra_numpy
+from repro.core.phased import PhasedResult, run_phased
+
+__all__ = [
+    "CRITERIA",
+    "Graph",
+    "from_coo",
+    "to_ell_in",
+    "to_numpy_csr",
+    "transpose",
+    "run_phased",
+    "PhasedResult",
+    "run_delta_stepping",
+    "DeltaResult",
+    "default_delta",
+    "dijkstra_numpy",
+    "bellman_ford_jnp",
+]

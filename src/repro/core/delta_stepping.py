@@ -1,0 +1,118 @@
+"""Dense, vectorised Delta-stepping (Meyer & Sanders), the paper's baseline.
+
+Semantics follow the classic formulation: buckets of width ``delta``; the
+lowest non-empty bucket is drained by repeated *light*-edge (w <= delta)
+relaxation rounds (vertices whose tentative distance drops back into the
+bucket are reprocessed — tracked here with a ``last_processed`` tentative
+value instead of explicit reinsertion), then *heavy* edges of everything
+removed from the bucket are relaxed once, and the bucket's vertices become
+settled. Each light round and the heavy round are global-synchronous phases —
+the same phase notion as the phased Dijkstra engine, so phase counts and
+speedups are directly comparable (paper Sec. 5/6).
+
+Like the phased engine, relaxation is one masked gather + segment-min over
+the full edge array per phase (dense work O(m)/phase — identical inner kernel,
+so the comparison between the algorithms isolates the *scheduling* policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph
+
+INF = jnp.inf
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["dist", "phases", "buckets_processed", "relax_edges"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class DeltaResult:
+    dist: jax.Array  # (n,) f32
+    phases: jax.Array  # scalar int32 (light rounds + heavy rounds)
+    buckets_processed: jax.Array  # scalar int32
+    relax_edges: jax.Array  # scalar int64 (out-edges scanned from processed sets)
+
+
+def default_delta(g: Graph) -> float:
+    """Meyer-Sanders heuristic Delta = Theta(1 / average degree)."""
+    m = float(jax.device_get(g.num_real_edges))
+    return max(float(g.n) / max(m, 1.0), 1e-3)
+
+
+@partial(jax.jit, static_argnames=("max_phases",))
+def _run(g: Graph, source, delta, max_phases: int):
+    n = g.n
+    light_e = jnp.isfinite(g.w) & (g.w <= delta)
+    heavy_e = jnp.isfinite(g.w) & (g.w > delta)
+    out_deg = jax.ops.segment_sum(
+        jnp.where(jnp.isfinite(g.w), 1, 0).astype(jnp.int32), g.src, num_segments=n
+    )
+
+    tent0 = jnp.full((n,), INF, jnp.float32).at[source].set(0.0)
+    settled0 = jnp.zeros((n,), bool)
+
+    def relax(tent, from_mask, edge_mask):
+        cand = jnp.where(from_mask[g.src] & edge_mask, tent[g.src] + g.w, INF)
+        upd = jax.ops.segment_min(cand, g.dst, num_segments=n)
+        return jnp.minimum(tent, upd)
+
+    def outer_cond(state):
+        tent, settled, phases, buckets, work = state
+        active = (~settled) & jnp.isfinite(tent)
+        return jnp.any(active) & (phases < max_phases)
+
+    def outer_body(state):
+        tent, settled, phases, buckets, work = state
+        active = (~settled) & jnp.isfinite(tent)
+        bidx = jnp.where(active, jnp.floor(tent / delta), INF)
+        b = jnp.min(bidx)  # lowest non-empty bucket
+        lo, hi = b * delta, (b + 1.0) * delta
+
+        # ---- drain bucket b with light-edge rounds
+        last_proc0 = jnp.full((n,), INF, jnp.float32)
+        removed0 = jnp.zeros((n,), bool)
+
+        def inner_cond(istate):
+            tent, last_proc, removed, phases, work = istate
+            cur = (~settled) & (tent >= lo) & (tent < hi) & (tent < last_proc)
+            return jnp.any(cur) & (phases < max_phases)
+
+        def inner_body(istate):
+            tent, last_proc, removed, phases, work = istate
+            cur = (~settled) & (tent >= lo) & (tent < hi) & (tent < last_proc)
+            last_proc = jnp.where(cur, tent, last_proc)
+            removed = removed | cur
+            tent = relax(tent, cur, light_e)
+            work = work + jnp.sum(jnp.where(cur, out_deg, 0), dtype=jnp.int32)
+            return tent, last_proc, removed, phases + 1, work
+
+        tent, _, removed, phases, work = jax.lax.while_loop(
+            inner_cond, inner_body, (tent, last_proc0, removed0, phases, work)
+        )
+        # ---- one heavy round for everything removed from the bucket
+        tent = relax(tent, removed, heavy_e)
+        work = work + jnp.sum(jnp.where(removed, out_deg, 0), dtype=jnp.int32)
+        settled = settled | removed
+        return tent, settled, phases + 1, buckets + 1, work
+
+    state0 = (tent0, settled0, jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    tent, settled, phases, buckets, work = jax.lax.while_loop(
+        outer_cond, outer_body, state0
+    )
+    return DeltaResult(tent, phases, buckets, work)
+
+
+def run_delta_stepping(
+    g: Graph, source: int = 0, delta: float | None = None, max_phases: int | None = None
+) -> DeltaResult:
+    if delta is None:
+        delta = default_delta(g)
+    cap = int(max_phases) if max_phases is not None else 4 * g.n + 16
+    return _run(g, jnp.int32(source), jnp.float32(delta), cap)

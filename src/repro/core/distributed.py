@@ -1,0 +1,202 @@
+"""Distributed phased SSSP: shard_map vertex partition over the device mesh.
+
+The TPU analogue of the paper's shared-memory parallelisation (Sec. 5):
+
+  paper (p threads)                      | here (P devices)
+  ---------------------------------------+--------------------------------
+  static vertex ownership v/p == i       | block vertex partition over mesh
+  per-thread priority queue -> local min | local masked min over d_loc
+  reduction over thread minima           | lax.pmin (scalar collective)
+  owner-buffered remote relaxations      | min-reduce-scatter of candidate
+                                         |   distance vectors (one collective
+                                         |   round per phase)
+  busy-wait barrier per phase            | SPMD lockstep (implicit)
+
+Two exchange schedules are implemented (the §Perf hillclimb compares them):
+  * ``allreduce``      — ``lax.pmin`` over the full (n,) candidate vector;
+                         every device then slices its block. Simple; moves
+                         ~2x the bytes (ring all-reduce) and materialises n
+                         floats per device.
+  * ``reduce_scatter`` — ``all_to_all`` of the (P, n_loc) candidate blocks +
+                         local min: each device receives only contributions
+                         for vertices it owns ((P-1)/P x n_loc floats in,
+                         the bandwidth-optimal schedule).
+
+The phase loop runs *inside* shard_map, so one phase = one fused XLA step
+with exactly one vector collective + three scalar pmins — this is the
+program whose HLO the multi-pod dry-run lowers for the 256/512-chip meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.graph import Graph
+
+INF = jnp.inf
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["src_local", "dst", "w", "d_init", "status_init", "in_min", "out_min"],
+    meta_fields=["n", "n_pad", "n_loc", "num_shards"],
+)
+@dataclasses.dataclass(frozen=True)
+class ShardedGraph:
+    """Vertex-blocked graph: shard s owns vertices [s*n_loc, (s+1)*n_loc)."""
+
+    n: int
+    n_pad: int
+    n_loc: int
+    num_shards: int
+    src_local: jax.Array  # (P, E_loc) int32, local (in-block) source index
+    dst: jax.Array  # (P, E_loc) int32, global destination
+    w: jax.Array  # (P, E_loc) f32, +inf padding
+    d_init: jax.Array  # (n_pad,) f32
+    status_init: jax.Array  # (n_pad,) int32
+    in_min: jax.Array  # (n_pad,) f32
+    out_min: jax.Array  # (n_pad,) f32
+
+
+def shard_graph(g: Graph, num_shards: int, source: int = 0,
+                pad_multiple: int = 8) -> ShardedGraph:
+    """Block-partition vertices and group out-edges by owning shard (numpy)."""
+    n = g.n
+    n_loc = -(-n // num_shards)
+    n_loc = -(-n_loc // pad_multiple) * pad_multiple
+    n_pad = n_loc * num_shards
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    real = np.isfinite(w)
+    src, dst, w = src[real], dst[real], w[real]
+    blk = src // n_loc
+    counts = np.bincount(blk, minlength=num_shards)
+    e_loc = max(int(counts.max()) if counts.size else 1, 1)
+    e_loc = -(-e_loc // pad_multiple) * pad_multiple
+    src_l = np.zeros((num_shards, e_loc), np.int32)
+    dst_l = np.zeros((num_shards, e_loc), np.int32)
+    w_l = np.full((num_shards, e_loc), np.inf, np.float32)
+    order = np.argsort(blk, kind="stable")
+    src, dst, w, blk = src[order], dst[order], w[order], blk[order]
+    slot = np.arange(len(src)) - np.searchsorted(blk, blk, side="left")
+    src_l[blk, slot] = src - blk * n_loc
+    dst_l[blk, slot] = dst
+    w_l[blk, slot] = w
+
+    d0 = np.full(n_pad, np.inf, np.float32)
+    d0[source] = 0.0
+    st0 = np.zeros(n_pad, np.int32)
+    st0[source] = 1
+    pad_inf = np.full(n_pad - n, np.inf, np.float32)
+    return ShardedGraph(
+        n=n, n_pad=n_pad, n_loc=n_loc, num_shards=num_shards,
+        src_local=jnp.asarray(src_l), dst=jnp.asarray(dst_l), w=jnp.asarray(w_l),
+        d_init=jnp.asarray(d0), status_init=jnp.asarray(st0),
+        in_min=jnp.asarray(np.concatenate([np.asarray(g.in_min_static), pad_inf])),
+        out_min=jnp.asarray(np.concatenate([np.asarray(g.out_min_static), pad_inf])),
+    )
+
+
+def _exchange_min(contrib, axes, n_loc, schedule):
+    """Combine per-device candidate vectors; return this device's block."""
+    if schedule == "allreduce":
+        full = jax.lax.pmin(contrib, axes)
+        idx = jax.lax.axis_index(axes)
+        return jax.lax.dynamic_slice(full, (idx * n_loc,), (n_loc,))
+    # reduce_scatter(min) built from all_to_all + local min
+    num = contrib.shape[0] // n_loc
+    blocks = contrib.reshape(num, n_loc)
+    # Row j of `blocks` is our contribution to shard j; after all_to_all row j
+    # holds shard j's contribution to OUR block.
+    recv = jax.lax.all_to_all(blocks, axes, split_axis=0, concat_axis=0, tiled=False)
+    return jnp.min(recv, axis=0)
+
+
+def make_distributed_sssp(mesh: Mesh, axes, *, schedule: str = "reduce_scatter",
+                          max_phases: int = 0):
+    """Build the jitted SPMD phased-SSSP program for `mesh`.
+
+    `axes` is the mesh-axis name (or tuple of names) the vertex dimension is
+    sharded over; the criterion is INSTATIC|OUTSTATIC (the paper's parallel
+    implementation). Returns fn(sharded_graph) -> (dist (n_pad,), phases).
+    """
+    if isinstance(axes, str):
+        axes = (axes,)
+    vspec = P(axes)
+    espec = P(axes, None)
+
+    def spmd(d, status, in_min, out_min, src_l, dst_g, w, cap):
+        # shapes inside shard_map: d/status/... (n_loc,), edges (1, E_loc)
+        src_l = src_l[0]
+        dst_g = dst_g[0]
+        w = w[0]
+        n_loc = d.shape[0]
+        n_pad = n_loc * int(np.prod([mesh.shape[a] for a in axes]))
+
+        def thresholds(d, status):
+            fringe = status == 1
+            min_fd = jax.lax.pmin(jnp.min(jnp.where(fringe, d, INF)), axes)
+            l_out = jax.lax.pmin(jnp.min(jnp.where(fringe, d + out_min, INF)), axes)
+            return min_fd, l_out, fringe
+
+        def any_fringe(status):
+            return jax.lax.psum(jnp.sum(status == 1), axes) > 0
+
+        def body(state):
+            d, status, phases, _ = state
+            min_fd, l_out, fringe = thresholds(d, status)
+            settle = fringe & (
+                (d - in_min <= min_fd) | (d <= l_out) | (d <= min_fd)
+            )
+            cand = jnp.where(settle[src_l], d[src_l] + w, INF)
+            contrib = jax.ops.segment_min(cand, dst_g, num_segments=n_pad)
+            upd = _exchange_min(contrib, axes, n_loc, schedule)
+            new_d = jnp.minimum(d, upd)
+            new_status = jnp.where(
+                settle, 2, jnp.where((status == 0) & (upd < INF), 1, status)
+            )
+            return new_d, new_status, phases + 1, any_fringe(new_status)
+
+        def cond(state):
+            *_, phases, go = state
+            return go & (phases < cap)
+
+        state0 = (d, status, jnp.int32(0), any_fringe(status))
+        d, status, phases, _ = jax.lax.while_loop(cond, body, state0)
+        return d, phases + jnp.zeros((1,), jnp.int32)
+
+    mapped = jax.shard_map(
+        spmd,
+        mesh=mesh,
+        in_specs=(vspec, vspec, vspec, vspec, espec, espec, espec, P()),
+        out_specs=(vspec, P(axes[0])),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def run(sg: ShardedGraph, cap):
+        d, phases = mapped(
+            sg.d_init, sg.status_init, sg.in_min, sg.out_min,
+            sg.src_local, sg.dst, sg.w, cap,
+        )
+        return d, phases[0]
+
+    return run
+
+
+def run_distributed(g: Graph, mesh: Mesh, axes, source: int = 0,
+                    schedule: str = "reduce_scatter"):
+    """Convenience wrapper: shard, run, return (dist (n,), phases)."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    num = int(np.prod([mesh.shape[a] for a in axes]))
+    sg = shard_graph(g, num, source=source)
+    fn = make_distributed_sssp(mesh, axes, schedule=schedule)
+    d, phases = fn(sg, jnp.int32(g.n + 1))
+    return d[: g.n], phases

@@ -1,0 +1,136 @@
+"""Graph representation for the phased-SSSP engine.
+
+Graphs are stored as fixed-shape COO edge arrays (``src``, ``dst``, ``w``)
+plus precomputed static per-vertex edge-weight minima, the quantities the
+Crauser-style criteria need:
+
+  ``in_min_static[v]  = min_{(w,v) in E} c(w,v)``   (M'[v] in the paper)
+  ``out_min_static[v] = min_{(v,w) in E} c(v,w)``   (M[v]  in the paper)
+
+Padding convention: edge arrays may be padded to a fixed length with
+``w = +inf`` and ``src = dst = 0``; +inf edge weights are neutral for every
+min-plus reduction in the engine, so no separate validity mask is required.
+
+An ELL (padded per-row) view of the *incoming* adjacency is available via
+:func:`to_ell_in`; it is the layout consumed by the Pallas pull-relaxation
+kernel (row-major ``(n, max_in_deg)`` tiles map directly onto VMEM blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = jnp.inf
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["src", "dst", "w", "in_min_static", "out_min_static"],
+    meta_fields=["n", "m"],
+)
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """A directed graph with non-negative edge costs, as device arrays."""
+
+    n: int
+    m: int  # padded edge-array length (>= true edge count)
+    src: jax.Array  # (m,) int32
+    dst: jax.Array  # (m,) int32
+    w: jax.Array  # (m,) float32, +inf on padding
+    in_min_static: jax.Array  # (n,) float32
+    out_min_static: jax.Array  # (n,) float32
+
+    @property
+    def num_real_edges(self) -> jax.Array:
+        return jnp.sum(jnp.isfinite(self.w))
+
+
+def from_coo(src, dst, w, n: int, pad_to: int | None = None) -> Graph:
+    """Build a :class:`Graph` from COO numpy/JAX arrays."""
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    w = np.asarray(w, dtype=np.float32)
+    assert src.shape == dst.shape == w.shape
+    if np.any(w < 0):
+        raise ValueError("edge costs must be non-negative")
+    m = src.shape[0]
+    if pad_to is not None and pad_to > m:
+        pad = pad_to - m
+        src = np.concatenate([src, np.zeros(pad, np.int32)])
+        dst = np.concatenate([dst, np.zeros(pad, np.int32)])
+        w = np.concatenate([w, np.full(pad, np.inf, np.float32)])
+        m = pad_to
+    in_min = np.full(n, np.inf, np.float32)
+    out_min = np.full(n, np.inf, np.float32)
+    np.minimum.at(in_min, dst, w)
+    np.minimum.at(out_min, src, w)
+    return Graph(
+        n=n,
+        m=m,
+        src=jnp.asarray(src),
+        dst=jnp.asarray(dst),
+        w=jnp.asarray(w),
+        in_min_static=jnp.asarray(in_min),
+        out_min_static=jnp.asarray(out_min),
+    )
+
+
+def to_numpy_csr(g: Graph):
+    """(indptr, indices, weights) CSR over outgoing edges; drops padding."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    real = np.isfinite(w)
+    src, dst, w = src[real], dst[real], w[real]
+    order = np.argsort(src, kind="stable")
+    src, dst, w = src[order], dst[order], w[order]
+    indptr = np.zeros(g.n + 1, np.int64)
+    np.add.at(indptr, src + 1, 1)
+    indptr = np.cumsum(indptr)
+    return indptr, dst, w
+
+
+def to_ell_in(g: Graph, pad_multiple: int = 8):
+    """ELL layout of *incoming* adjacency: (n, D) source-ids and weights.
+
+    Rows are destination vertices; columns hold (source, weight) pairs padded
+    with ``src = n`` (a sentinel row appended by consumers) and ``w = +inf``.
+    ``D`` is the max in-degree rounded up to ``pad_multiple`` (min 1 lane so
+    isolated-source graphs still produce a well-formed array).
+    """
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    real = np.isfinite(w)
+    src, dst, w = src[real], dst[real], w[real]
+    n = g.n
+    deg = np.zeros(n, np.int64)
+    np.add.at(deg, dst, 1)
+    max_deg = int(deg.max()) if deg.size and deg.max() > 0 else 1
+    d_pad = -(-max_deg // pad_multiple) * pad_multiple
+    cols = np.full((n, d_pad), n, np.int32)  # sentinel source id == n
+    ws = np.full((n, d_pad), np.inf, np.float32)
+    order = np.argsort(dst, kind="stable")
+    src, dst, w = src[order], dst[order], w[order]
+    # position of each edge within its destination row
+    slot = np.arange(len(dst)) - np.searchsorted(dst, dst, side="left")
+    cols[dst, slot] = src
+    ws[dst, slot] = w
+    return jnp.asarray(cols), jnp.asarray(ws)
+
+
+def transpose(g: Graph) -> Graph:
+    """The reverse graph (incoming edges become outgoing)."""
+    return Graph(
+        n=g.n,
+        m=g.m,
+        src=g.dst,
+        dst=g.src,
+        w=g.w,
+        in_min_static=g.out_min_static,
+        out_min_static=g.in_min_static,
+    )

@@ -1,0 +1,9 @@
+"""Graph generators (numpy-based; return ``repro.core.graph.Graph``)."""
+from repro.graphs.generators import (
+    grid_road,
+    kronecker,
+    uniform_gnp,
+    webgraph,
+)
+
+__all__ = ["uniform_gnp", "kronecker", "grid_road", "webgraph"]

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: pull-model min-plus edge relaxation over ELL adjacency.
+
+This is the per-phase hot spot of the phased SSSP engine (>= 90% of phase
+work): for every destination vertex ``v`` compute
+
+    upd[v] = min_{(w, v) in E} dmask[w] + c(w, v)
+
+where ``dmask[w] = d[w] if w was settled this phase else +inf`` (the masking
+is a cheap elementwise select done by the caller, so the kernel is a pure
+gather + add + row-min).
+
+TPU mapping (HBM -> VMEM -> VPU):
+  * incoming adjacency in ELL layout — ``cols``/``ws`` of shape ``(n, D)``
+    (max in-degree padded; sentinel source id ``n`` carries weight +inf), so
+    row tiles are contiguous VMEM blocks with hardware-aligned lanes;
+  * the distance vector (padded to a lane multiple, sentinel slot included)
+    is small relative to VMEM (4 B/vertex: 1M vertices = 4 MiB of the 16 MiB
+    more budget) and is mapped whole into VMEM for every row tile, making the
+    irregular gather a VMEM-local operation instead of an HBM scatter/gather —
+    this replaces the paper's per-thread relaxation buffers + atomic-min;
+  * each grid step reduces a ``(block_rows, D)`` tile with a row-min on the
+    VPU; no MXU use (min-plus has no matmul form on f32).
+
+Graphs whose distance vector exceeds VMEM must shard vertices over devices
+first (see ``repro.core.distributed``), which keeps the per-device slice VMEM-
+resident again — the kernel is the per-shard inner loop in that regime.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = jnp.inf
+
+
+def _relax_kernel(dmask_ref, cols_ref, ws_ref, out_ref):
+    idx = cols_ref[...]  # (Bn, D) int32 source ids (sentinel = len(dmask)-1 ok)
+    w = ws_ref[...]  # (Bn, D) f32, +inf padding
+    d = dmask_ref[...]  # (n_pad,) f32, masked distances
+    vals = jnp.take(d, idx, axis=0) + w  # VMEM-local gather + min-plus
+    out_ref[...] = jnp.min(vals, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ell_relax(
+    dmask: jax.Array,  # (n_pad,) f32; +inf at masked/padded/sentinel slots
+    cols: jax.Array,  # (n, D) int32
+    ws: jax.Array,  # (n, D) f32
+    *,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns upd (n,) f32 = row-min of dmask[cols] + ws."""
+    n, d_pad = cols.shape
+    rows_pad = -(-n // block_rows) * block_rows
+    if rows_pad != n:
+        cols = jnp.pad(cols, ((0, rows_pad - n), (0, 0)))
+        ws = jnp.pad(ws, ((0, rows_pad - n), (0, 0)), constant_values=INF)
+    grid = rows_pad // block_rows
+    out = pl.pallas_call(
+        _relax_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(dmask.shape, lambda i: (0,)),  # whole vector, VMEM-resident
+            pl.BlockSpec((block_rows, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d_pad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad,), jnp.float32),
+        interpret=interpret,
+    )(dmask, cols, ws)
+    return out[:n]

@@ -1,0 +1,55 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernel body then runs as plain
+XLA/CPU for bit-exact validation) and False on TPU (compiled Mosaic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ell_relax import ell_relax
+from repro.kernels.frontier_crit import frontier_crit
+
+INF = jnp.inf
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def relax_settled(
+    d: jax.Array,  # (n,) f32 tentative distances
+    settle_mask: jax.Array,  # (n,) bool — vertices settled this phase
+    ell_cols: jax.Array,  # (n, D) int32 incoming ELL (sentinel id = n)
+    ell_ws: jax.Array,  # (n, D) f32
+    *,
+    block_rows: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Candidate-update vector: upd[v] = min over in-edges from settled sources.
+
+    The sentinel slot (index n) and any alignment padding carry +inf, so
+    padded ELL entries are neutral.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n = d.shape[0]
+    lane_pad = -(-(n + 1) // 128) * 128
+    dmask = jnp.full((lane_pad,), INF, jnp.float32)
+    dmask = dmask.at[:n].set(jnp.where(settle_mask, d, INF))
+    return ell_relax(dmask, ell_cols, ell_ws, block_rows=block_rows, interpret=interpret)
+
+
+def static_thresholds(
+    d: jax.Array,
+    status: jax.Array,
+    out_min_static: jax.Array,
+    *,
+    block: int = 2048,
+    interpret: bool | None = None,
+):
+    """(min_F d, L_out, |F|) for the INSTATIC/OUTSTATIC criteria, fused."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return frontier_crit(d, status, out_min_static, block=block, interpret=interpret)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` computes the identical function with plain jax.numpy; tests
+sweep shapes/dtypes and assert allclose between kernel (interpret=True on
+CPU) and oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+def ell_relax_ref(dmask: jax.Array, cols: jax.Array, ws: jax.Array) -> jax.Array:
+    """upd[v] = min_j dmask[cols[v, j]] + ws[v, j]."""
+    return jnp.min(jnp.take(dmask, cols, axis=0) + ws, axis=1)
+
+
+def frontier_crit_ref(d: jax.Array, status: jax.Array, out_min: jax.Array):
+    fringe = status == 1
+    min_fd = jnp.min(jnp.where(fringe, d, INF))
+    l_out = jnp.min(jnp.where(fringe, d + out_min, INF))
+    n_f = jnp.sum(fringe.astype(jnp.float32))
+    return min_fd, l_out, n_f

@@ -1,0 +1,21 @@
+"""Production mesh construction (function, not module constant — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(tp: int = 1):
+    """Tiny mesh over whatever devices exist (CPU smoke tests / examples)."""
+    n = len(jax.devices())
+    tp = min(tp, n)
+    while n % tp:
+        tp -= 1
+    return jax.make_mesh((n // tp, tp), ("data", "model"))

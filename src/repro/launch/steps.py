@@ -1,0 +1,227 @@
+"""Entry-point builders for training/serving steps + abstract input specs.
+
+Everything here is shape-only-safe: ``abstract_*`` functions build
+ShapeDtypeStruct pytrees via ``jax.eval_shape`` (zero device allocation), so
+the multi-pod dry-run can lower/compile full-size 400B-parameter cells on a
+CPU host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+from repro.models import decode_step, init_cache, init_params, prefill, train_loss
+from repro.models.layers import ShardingCtx
+from repro.optim.adamw import OptConfig, apply_updates, init_opt_state, state_specs_for
+from repro.sharding.partition import (
+    add_fsdp,
+    batch_specs,
+    cache_specs,
+    param_specs,
+    to_shardings,
+)
+
+BF16 = jnp.bfloat16
+
+# params whose TP-sharded residency exceeds this use FSDP over the data axis
+FSDP_BYTES_PER_CHIP = 6 << 30
+
+
+def _param_bytes(params_shape) -> int:
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree.leaves(params_shape)
+    )
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def abstract_params(cfg: ModelConfig, dtype=BF16):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def abstract_opt_state(cfg: ModelConfig, opt_cfg: OptConfig, params_shape):
+    return jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), params_shape)
+
+
+def abstract_batch(cfg: ModelConfig, spec: ShapeSpec, with_labels: bool):
+    B, S = spec.global_batch, spec.seq_len
+    batch: dict[str, Any] = {}
+    if cfg.embeddings_in:
+        batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), BF16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.n_vision_tokens:
+        batch["vision"] = jax.ShapeDtypeStruct((B, cfg.n_vision_tokens, cfg.d_model), BF16)
+    if with_labels:
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return batch
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, prefix_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, prefix_len, BF16))
+
+
+@dataclasses.dataclass
+class Cell:
+    """A lowerable (arch x shape x mesh) dry-run cell."""
+
+    name: str
+    fn: Any  # jitted
+    args: tuple  # ShapeDtypeStructs (or arrays)
+
+    def lower(self):
+        return self.fn.lower(*self.args)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """Public helper: ShapeDtypeStruct stand-ins for every model input of the
+    given shape cell (the pattern the dry-run consumes)."""
+    spec = SHAPES[shape_name]
+    if spec.kind == "train":
+        return abstract_batch(cfg, spec, with_labels=True)
+    if spec.kind == "prefill":
+        return abstract_batch(cfg, spec, with_labels=False)
+    tokens = jax.ShapeDtypeStruct((spec.global_batch, 1), jnp.int32)
+    cache = abstract_cache(cfg, spec.global_batch, spec.seq_len)
+    return {"tokens": tokens, "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+ACT_BUDGET_BYTES = 6 << 30  # per-chip activation budget driving microbatching
+
+
+def auto_microbatches(cfg: ModelConfig, spec: ShapeSpec, dp_size: int,
+                      tp_size: int) -> int:
+    """Smallest power-of-two accumulation count whose per-microbatch residual
+    stack (+ transient factor 3x) fits the activation budget."""
+    b_loc = max(spec.global_batch // dp_size, 1)
+    act = cfg.n_layers * b_loc * spec.seq_len * cfg.d_model * 2 * 3 // tp_size
+    a = 1
+    while act // a > ACT_BUDGET_BYTES and a < max(spec.global_batch // dp_size, 1):
+        a *= 2
+    return a
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+               opt_cfg: OptConfig | None = None, remat: bool = True,
+               use_shd: bool = True, donate: bool = True,
+               fsdp: bool | str = "auto",
+               microbatches: int | str = "auto",
+               remat_policy: str = "full") -> Cell:
+    """Construct the jitted step + abstract args for one dry-run cell."""
+    spec = SHAPES[shape_name]
+    dp = data_axes(mesh)
+    shd = ShardingCtx(dp=dp, tp="model", mesh=mesh) if use_shd else None
+    pshape = abstract_params(cfg)
+    pspecs = param_specs(cfg, pshape)
+    tp_size = mesh.shape.get("model", 1)
+    if fsdp == "auto":
+        fsdp = _param_bytes(pshape) // tp_size > FSDP_BYTES_PER_CHIP
+    if fsdp:
+        pspecs = add_fsdp(pspecs, pshape, axis="data", size=mesh.shape["data"])
+    pshard = to_shardings(mesh, pspecs)
+
+    if spec.kind == "train":
+        opt_cfg = opt_cfg or OptConfig(
+            m_dtype="bfloat16", v_mode="factored", total_steps=10000
+        )
+        dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+        if microbatches == "auto":
+            microbatches = auto_microbatches(cfg, spec, dp_size, tp_size)
+        A = max(int(microbatches), 1)
+        oshape = abstract_opt_state(cfg, opt_cfg, pshape)
+        oshard = to_shardings(mesh, state_specs_for(oshape, pspecs))
+        bshape = abstract_batch(cfg, spec, with_labels=True)
+        bshard = to_shardings(mesh, batch_specs(cfg, bshape, dp, mesh))
+
+        def loss_fn(p, b):
+            return train_loss(cfg, p, b, shd, remat=remat,
+                              remat_policy=remat_policy)
+
+        def step(params, opt_state, batch):
+            if A == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            else:
+                # gradient accumulation over A microbatches (f32 accumulator)
+                mb = jax.tree.map(
+                    lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]),
+                    batch,
+                )
+
+                def constrain(tree):  # accumulator must shard like the params
+                    return jax.tree.map(
+                        lambda x, s: jax.lax.with_sharding_constraint(x, s),
+                        tree, pspecs,
+                        is_leaf=lambda x: not isinstance(x, (dict, P)),
+                    )
+
+                def micro(carry, b):
+                    lsum, gacc = carry
+                    l, g = jax.value_and_grad(loss_fn)(params, b)
+                    gacc = jax.tree.map(
+                        lambda a, x: a + x.astype(jnp.float32), gacc, g
+                    )
+                    return (lsum + l, constrain(gacc)), None
+
+                zeros = constrain(jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                ))
+                (loss, gsum), _ = jax.lax.scan(
+                    micro, (jnp.float32(0.0), zeros), mb
+                )
+                loss = loss / A
+                grads = jax.tree.map(lambda g, p: (g / A).astype(p.dtype),
+                                     gsum, params)
+            params, opt_state, stats = apply_updates(params, grads, opt_state, opt_cfg)
+            return params, opt_state, loss, stats["gnorm"]
+
+        fn = jax.jit(
+            step,
+            in_shardings=(pshard, oshard, bshard),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        return Cell(f"{cfg.name}/{shape_name}", fn, (pshape, oshape, bshape))
+
+    if spec.kind == "prefill":
+        bshape = abstract_batch(cfg, spec, with_labels=False)
+        bshard = to_shardings(mesh, batch_specs(cfg, bshape, dp, mesh))
+
+        if cfg.encoder_only:
+            # encoders have no KV cache: "prefill" = batched encode forward
+            from repro.models import forward_logits
+
+            def pre(params, batch):
+                return forward_logits(cfg, params, batch, shd)
+        else:
+            def pre(params, batch):
+                return prefill(cfg, params, batch, shd)
+
+        fn = jax.jit(pre, in_shardings=(pshard, bshard))
+        return Cell(f"{cfg.name}/{shape_name}", fn, (pshape, bshape))
+
+    # decode
+    tshape = jax.ShapeDtypeStruct((spec.global_batch, 1), jnp.int32)
+    cshape = abstract_cache(cfg, spec.global_batch, spec.seq_len)
+    cshard = to_shardings(mesh, cache_specs(cfg, cshape, dp, mesh))
+    tshard = to_shardings(mesh, batch_specs(cfg, {"tokens": tshape}, dp, mesh))["tokens"]
+
+    def serve_step(params, tokens, cache, pos):
+        return decode_step(cfg, params, tokens, cache, pos, shd)
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(pshard, tshard, cshard, None),
+        donate_argnums=(2,) if donate else (),
+    )
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return Cell(f"{cfg.name}/{shape_name}", fn, (pshape, tshape, cshape, pos))

@@ -1,0 +1,50 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b \
+        --steps 1000 --batch 256 --seq 4096 --ckpt-dir gs://.../ckpts
+
+On a real fleet this runs per-host under jax.distributed; here it drives the
+same code path on the local device set. The mesh defaults to the production
+(16, 16) layout when 256 devices are visible, else the largest host mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_smoke
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim.adamw import OptConfig
+from repro.runtime.train_loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    n = len(jax.devices())
+    mesh = make_production_mesh() if n >= 256 else make_host_mesh(tp=min(2, n))
+    res = train(
+        cfg, mesh, steps=args.steps,
+        dcfg=DataConfig(seed=0, batch=args.batch, seq_len=args.seq),
+        opt_cfg=OptConfig(lr=args.lr, total_steps=args.steps,
+                          m_dtype="bfloat16", v_mode="factored"),
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+    )
+    print(f"done: final loss {res.losses[-1]:.4f} "
+          f"(skipped {res.skipped_steps} poisoned steps)")
+
+
+if __name__ == "__main__":
+    main()

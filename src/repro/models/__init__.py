@@ -1,0 +1,16 @@
+"""LM-family model substrate (dense / MoE / SSM / hybrid / VLM / encoder)."""
+from repro.models.layers import ShardingCtx
+from repro.models.transformer import (
+    decode_step,
+    forward_logits,
+    init_cache,
+    init_params,
+    param_count,
+    prefill,
+    train_loss,
+)
+
+__all__ = [
+    "ShardingCtx", "init_params", "train_loss", "forward_logits",
+    "prefill", "decode_step", "init_cache", "param_count",
+]

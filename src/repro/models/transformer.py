@@ -1,0 +1,406 @@
+"""Unified model assembly: init / train-loss / prefill / decode for every
+assigned architecture family (dense, MoE, SSM, hybrid, VLM-backbone, encoder).
+
+The model is ``n_units`` repetitions of ``cfg.pattern`` applied with
+``jax.lax.scan`` over stacked unit parameters — HLO size and compile time are
+O(|pattern|), not O(n_layers) (a 100-layer model lowers as fast as a 1-layer
+one). Heterogeneous stacks (jamba's 7:1 mamba:attn with interleaved MoE,
+llama-vision's every-5th cross-attention) are expressed inside the unit.
+
+Memory discipline (what the dry-run memory_analysis validates):
+  * per-unit remat (``jax.checkpoint``) in train;
+  * layer-boundary activations sharding-constrained to (dp, tp, None) —
+    sequence-parallel storage of residuals;
+  * the LM head + cross-entropy are computed in sequence chunks under remat,
+    so full (B, S, V) logits are never materialised.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import ShardingCtx, cshard
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, key, mixer: str, ffn: str, dtype):
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+    if mixer in ("attn", "xattn"):
+        p[mixer] = L.init_attention(cfg, ks[0], dtype)
+    elif mixer == "mamba":
+        p[mixer] = L.init_mamba(cfg, ks[0], dtype)
+    else:
+        raise ValueError(mixer)
+    if ffn != "none":
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        if ffn == "mlp":
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        elif ffn == "moe":
+            p["moe"] = L.init_moe(cfg, ks[1], dtype)
+        elif ffn == "moe_dense":
+            p["moe"] = L.init_moe(cfg, ks[1], dtype)
+            p["dense"] = L.init_mlp(ks[2], cfg.d_model, cfg.dense_d_ff, dtype)
+        else:
+            raise ValueError(ffn)
+    return p
+
+
+def _init_unit(cfg: ModelConfig, key, dtype):
+    ks = jax.random.split(key, len(cfg.pattern))
+    return {
+        f"l{j}": _init_layer(cfg, ks[j], mixer, ffn, dtype)
+        for j, (mixer, ffn) in enumerate(cfg.pattern)
+    }
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    k_emb, k_units, k_head = jax.random.split(key, 3)
+    p: Params = {}
+    if not cfg.embeddings_in:
+        p["embed"] = (
+            jax.random.normal(k_emb, (cfg.vocab_pad, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dtype)
+    unit_keys = jax.random.split(k_units, cfg.n_units)
+    p["units"] = jax.vmap(lambda k: _init_unit(cfg, k, dtype))(unit_keys)
+    p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings or cfg.embeddings_in:
+        p["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab_pad), jnp.float32)
+            / np.sqrt(cfg.d_model)
+        ).astype(dtype)
+    return p
+
+
+def param_count(params: Params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------------------
+# unit application (full sequence)
+# --------------------------------------------------------------------------
+
+def _apply_layer(cfg: ModelConfig, mixer: str, ffn: str, lp: Params, x,
+                 positions, vision, shd: ShardingCtx | None,
+                 collect_cache: bool):
+    cache = None
+    h = L.rms_norm(x, lp["norm1"], cfg.rms_eps)
+    if mixer == "attn":
+        if collect_cache:
+            q = L._project_q(cfg, lp["attn"], h)
+            k, v = L._project_kv(cfg, lp["attn"], h)
+            cache = {"k": L.rope(k, positions, cfg.rope_theta), "v": v}
+            q = L.rope(q, positions, cfg.rope_theta)
+            o = L._sdpa(cfg, q, cache["k"], v, positions, positions, cfg.causal)
+            mx = jnp.einsum("bsh,hd->bsd", o, lp["attn"]["wo"])
+        else:
+            mx = L.apply_attention(cfg, lp["attn"], h, positions,
+                                   causal=cfg.causal)
+    elif mixer == "xattn":
+        if collect_cache:
+            xk, xv = L._project_kv(cfg, lp["xattn"], vision)
+            cache = {"xk": xk, "xv": xv}
+        mx = L.apply_attention(cfg, lp["xattn"], h, positions, kv_source=vision)
+    elif mixer == "mamba":
+        if collect_cache:
+            mx, cache = _mamba_with_state(cfg, lp["mamba"], h)
+        else:
+            mx = L.apply_mamba(cfg, lp["mamba"], h)
+    else:
+        raise ValueError(mixer)
+    x = x + mx
+    if ffn != "none":
+        h2 = L.rms_norm(x, lp["norm2"], cfg.rms_eps)
+        if ffn == "mlp":
+            f = L.apply_mlp(lp["mlp"], h2)
+        elif ffn == "moe":
+            f = L.apply_moe(cfg, lp["moe"], h2, shd)
+        else:  # moe_dense: arctic's dense residual in parallel with MoE
+            f = L.apply_moe(cfg, lp["moe"], h2, shd) + L.apply_mlp(lp["dense"], h2)
+        x = x + f
+    if shd is not None and x.shape[1] % 16 == 0:
+        # sequence-parallel residual storage at layer boundaries
+        x = shd.cs(x, shd.dp, shd.tp, None)
+    return x, cache
+
+
+def _apply_unit(cfg: ModelConfig, up: Params, x, positions, vision,
+                shd: ShardingCtx | None, collect_cache: bool):
+    caches = {}
+    nested_ckpt = len(cfg.pattern) > 1 and not collect_cache
+    for j, (mixer, ffn) in enumerate(cfg.pattern):
+        fn = partial(_apply_layer, cfg, mixer, ffn)
+        if nested_ckpt:
+            # multi-layer units (jamba, llama-vision): checkpoint each layer
+            # so the unit-level backward holds one layer's internals at a
+            # time instead of all |pattern| layers' simultaneously
+            fn = jax.checkpoint(fn, static_argnums=(4, 5))
+        x, cache = fn(up[f"l{j}"], x, positions, vision, shd, collect_cache)
+        if cache is not None:
+            caches[f"l{j}"] = cache
+    return x, caches
+
+
+def _mamba_with_state(cfg, p, h):
+    """Full-sequence mamba that also returns the decode-ready state."""
+    B, S, _ = h.shape
+    out = L.apply_mamba(cfg, p, h)
+    # state: rerun the cheap pieces to extract conv tails + final ssm state.
+    # (prefill-only path; no gradient flows here.)
+    _, x0, B0, C0, _ = L._mamba_project(cfg, p, h)
+    k = cfg.ssm_conv - 1
+    state = _mamba_final_state(cfg, p, h)
+    return out, {"convx": x0[:, S - k:, :], "convb": B0[:, S - k:, :],
+                 "convc": C0[:, S - k:, :], "ssm": state}
+
+
+def _mamba_final_state(cfg, p, h):
+    """Final SSM state after the full sequence (chunked, matches apply_mamba)."""
+    B, S, _ = h.shape
+    H, Pd, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    d_in = cfg.d_inner
+    _, x0, B0, C0, dt = L._mamba_project(cfg, p, h)
+    x0, B0, C0 = L._mamba_conv_all(cfg, p, x0, B0, C0)
+    x = x0.reshape(B, S, H, Pd)
+    Bm = B0.reshape(B, S, G, N)
+    Bh = jnp.repeat(Bm, H // G, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    la = dt * A[None, None, :]
+    Q = min(cfg.ssm_chunk, S)
+    if S % Q != 0:
+        Q = S
+    nc = S // Q
+    lc = la.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(lc, axis=2)
+    tot = cum[:, :, -1, :]
+    xq = (x * dt[..., None].astype(x.dtype)).reshape(B, nc, Q, H, Pd)
+    bq = Bh.reshape(B, nc, Q, H, N)
+    wj = jnp.exp(tot[:, :, None, :] - cum)
+    st = jnp.einsum("bcjhn,bcjhp->bchnp",
+                    bq.astype(jnp.float32) * wj[..., None], xq.astype(jnp.float32))
+
+    def combine(a, b):
+        d1, s1 = a
+        d2, s2 = b
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    _, sscan = jax.lax.associative_scan(combine, (jnp.exp(tot), st), axis=1)
+    return sscan[:, -1]  # (B,H,N,P)
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+def _embed_in(cfg, params, batch, shd):
+    if cfg.embeddings_in:
+        x = batch["embeds"]
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if shd is not None:
+        seq = shd.tp if x.shape[1] % 16 == 0 else None
+        x = shd.cs(x, shd.dp, seq, None)
+    return x
+
+
+def _lm_head(cfg, params):
+    if "lm_head" in params:
+        return params["lm_head"]
+    return params["embed"].T
+
+
+REMAT_POLICIES = {
+    # full: recompute everything in bwd (4/3 matmul passes) — min memory
+    "full": lambda: jax.checkpoint_policies.nothing_saveable,
+    # dots: save matmul outputs, recompute elementwise only (~1.05 passes) —
+    # the §Perf lever for cells with HBM headroom
+    "dots": lambda: jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def _stack_scan(cfg, params, x, positions, vision, shd, remat: bool,
+                remat_policy: str = "full"):
+    def unit_fn(carry, up):
+        if shd is not None and carry.shape[1] % 16 == 0:
+            # pin the while-loop carry (the remat-saved residual) to
+            # sequence-parallel storage: (dp, tp, None)
+            carry = shd.cs(carry, shd.dp, shd.tp, None)
+        y, _ = _apply_unit(cfg, up, carry, positions, vision, shd, False)
+        return y, None
+
+    body = jax.checkpoint(unit_fn, policy=REMAT_POLICIES[remat_policy]()) \
+        if remat else unit_fn
+    x, _ = jax.lax.scan(body, x, params["units"])
+    return x
+
+
+def chunked_ce_loss(cfg, h, lm_head, labels, shd, chunk: int | None = None):
+    """Mean next-token CE; logits computed per sequence-chunk under remat so
+    the (B, S, V) tensor never exists."""
+    B, S, D = h.shape
+    chunk = chunk or cfg.ce_chunk
+    if S % chunk != 0:
+        chunk = S
+    nc = S // chunk
+    hr = jnp.moveaxis(h.reshape(B, nc, chunk, D), 1, 0)
+    lr = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(tot, inp):
+        hc, lc = inp
+        logits = jnp.einsum("bcd,dv->bcv", hc, lm_head).astype(jnp.float32)
+        if shd is not None:
+            logits = shd.cs(logits, shd.dp, None, shd.tp)  # vocab-sharded
+        if logits.shape[-1] != cfg.vocab:  # mask vocab padding
+            logits = jnp.where(
+                jnp.arange(logits.shape[-1]) < cfg.vocab, logits, -1e30
+            )
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hr, lr))
+    return total / (B * S)
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch, shd: ShardingCtx | None = None,
+               remat: bool = True, remat_policy: str = "full"):
+    x = _embed_in(cfg, params, batch, shd)
+    positions = jnp.arange(x.shape[1])
+    vision = batch.get("vision")
+    x = _stack_scan(cfg, params, x, positions, vision, shd, remat, remat_policy)
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return chunked_ce_loss(cfg, x, _lm_head(cfg, params), batch["labels"], shd)
+
+
+def forward_logits(cfg: ModelConfig, params: Params, batch,
+                   shd: ShardingCtx | None = None):
+    """Full logits (B, S, V) — smoke tests/small evals only."""
+    x = _embed_in(cfg, params, batch, shd)
+    positions = jnp.arange(x.shape[1])
+    x = _stack_scan(cfg, params, x, positions, batch.get("vision"), shd, False)
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return jnp.einsum("bsd,dv->bsv", x, _lm_head(cfg, params))[..., : cfg.vocab]
+
+
+# --------------------------------------------------------------------------
+# prefill + decode (serving)
+# --------------------------------------------------------------------------
+
+def cache_pad(cfg: ModelConfig) -> int:
+    return 64  # decode slots appended after the prefilled prefix
+
+
+def prefill(cfg: ModelConfig, params: Params, batch, shd: ShardingCtx | None = None):
+    """Forward the prompt; returns (last-token logits (B, V), cache, pos).
+
+    Attention caches are padded with ``cache_pad`` decode slots.
+    """
+    if cfg.encoder_only:
+        raise ValueError("encoder-only model has no prefill/decode")
+    x = _embed_in(cfg, params, batch, shd)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    vision = batch.get("vision")
+
+    def unit_fn(carry, up):
+        y, cache = _apply_unit(cfg, up, carry, positions, vision, shd, True)
+        return y, cache
+
+    x, caches = jax.lax.scan(unit_fn, x, params["units"])
+    # pad attention caches with decode slots: k/v leaves are (U, B, S, K, dh)
+    pad = cache_pad(cfg)
+    caches = {
+        lname: {
+            k2: (jnp.pad(v2, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                 if k2 in ("k", "v") else v2)
+            for k2, v2 in entry.items()
+        }
+        for lname, entry in caches.items()
+    }
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1, :], _lm_head(cfg, params))
+    return logits[:, : cfg.vocab], caches, jnp.int32(S)
+
+
+def init_cache(cfg: ModelConfig, batch: int, prefix_len: int, dtype=jnp.bfloat16):
+    """Shape-only cache constructor (used by decode smoke tests + dry-run)."""
+    smax = prefix_len + cache_pad(cfg)
+    U = cfg.n_units
+    caches = {}
+    for j, (mixer, ffn) in enumerate(cfg.pattern):
+        if mixer == "attn":
+            caches[f"l{j}"] = {
+                "k": jnp.zeros((U, batch, smax, cfg.n_kv, cfg.d_head), dtype),
+                "v": jnp.zeros((U, batch, smax, cfg.n_kv, cfg.d_head), dtype),
+            }
+        elif mixer == "xattn":
+            caches[f"l{j}"] = {
+                "xk": jnp.zeros((U, batch, cfg.n_vision_tokens, cfg.n_kv, cfg.d_head), dtype),
+                "xv": jnp.zeros((U, batch, cfg.n_vision_tokens, cfg.n_kv, cfg.d_head), dtype),
+            }
+        elif mixer == "mamba":
+            k = cfg.ssm_conv - 1
+            gn = cfg.ssm_groups * cfg.ssm_state
+            caches[f"l{j}"] = {
+                "convx": jnp.zeros((U, batch, k, cfg.d_inner), dtype),
+                "convb": jnp.zeros((U, batch, k, gn), dtype),
+                "convc": jnp.zeros((U, batch, k, gn), dtype),
+                "ssm": jnp.zeros((U, batch, cfg.ssm_heads, cfg.ssm_state,
+                                  cfg.ssm_head_dim), jnp.float32),
+            }
+    return caches
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens, cache, pos,
+                shd: ShardingCtx | None = None):
+    """One autoregressive step. tokens (B, 1) int32; returns (logits (B, V),
+    new cache, pos+1)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def unit_fn(carry, xs):
+        up, uc = xs
+        y = carry
+        new_uc = {}
+        for j, (mixer, ffn) in enumerate(cfg.pattern):
+            lp = up[f"l{j}"]
+            h = L.rms_norm(y, lp["norm1"], cfg.rms_eps)
+            if mixer == "attn":
+                mx, new_c = L.apply_attention_decode(cfg, lp["attn"], h,
+                                                     uc[f"l{j}"], pos)
+                new_uc[f"l{j}"] = new_c
+            elif mixer == "xattn":
+                mx, new_c = L.apply_cross_attention_decode(cfg, lp["xattn"], h,
+                                                           uc[f"l{j}"])
+                new_uc[f"l{j}"] = new_c
+            else:  # mamba
+                mx, new_c = L.apply_mamba_decode(cfg, lp["mamba"], h, uc[f"l{j}"])
+                new_uc[f"l{j}"] = new_c
+            y = y + mx
+            if ffn != "none":
+                h2 = L.rms_norm(y, lp["norm2"], cfg.rms_eps)
+                if ffn == "mlp":
+                    f = L.apply_mlp(lp["mlp"], h2)
+                elif ffn == "moe":
+                    f = L.apply_moe(cfg, lp["moe"], h2, shd)
+                else:
+                    f = L.apply_moe(cfg, lp["moe"], h2, shd) + L.apply_mlp(lp["dense"], h2)
+                y = y + f
+        return y, new_uc
+
+    x, new_cache = jax.lax.scan(unit_fn, x, (params["units"], cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1, :], _lm_head(cfg, params))
+    return logits[:, : cfg.vocab], new_cache, pos + 1

@@ -1,0 +1,161 @@
+"""From-scratch AdamW with large-scale memory options.
+
+Distributed-optimization features (all exercised by the dry-run memory
+analysis):
+  * ``m_dtype="bfloat16"``   — momentum stored compressed (2 B/param); update
+    math still f32 (quantise-on-write). Halves optimizer bandwidth + memory.
+  * ``v_mode="factored"``    — Adafactor-style rank-1 factorisation of the
+    second moment over the last two axes (row/col EMAs); v memory drops from
+    O(params) to O(rows+cols). This is what makes the 400B-class MoE cells
+    fit 16 GiB/chip on the 256-chip mesh (see EXPERIMENTS.md §Perf).
+  * moments inherit the parameters' PartitionSpecs, so they are TP/EP-sharded
+    exactly like the weights (ZeRO-style: no replicated optimizer state).
+  * global-norm clipping + cosine schedule with linear warmup, both inside
+    the jitted step (no host round-trips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    m_dtype: str = "float32"  # or "bfloat16"
+    v_mode: str = "full"  # or "factored"
+
+
+def _factorable(x) -> bool:
+    return x.ndim >= 2 and x.shape[-1] >= 2 and x.shape[-2] >= 2
+
+
+def init_opt_state(params: Any, cfg: OptConfig) -> dict[str, Any]:
+    m_dt = jnp.bfloat16 if cfg.m_dtype == "bfloat16" else jnp.float32
+
+    def make_m(p):
+        return jnp.zeros(p.shape, m_dt)
+
+    def make_v(p):
+        if cfg.v_mode == "factored" and _factorable(p):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(make_m, params),
+        "v": jax.tree.map(make_v, params, is_leaf=lambda x: hasattr(x, "shape")),
+    }
+
+
+def schedule(cfg: OptConfig, step) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def _vhat_update(v_entry, g2, b2):
+    """Update second-moment entry; returns (new_entry, dense vhat)."""
+    if "v" in v_entry:
+        nv = b2 * v_entry["v"] + (1 - b2) * g2
+        return {"v": nv}, nv
+    vr = b2 * v_entry["vr"] + (1 - b2) * jnp.mean(g2, axis=-1)
+    vc = b2 * v_entry["vc"] + (1 - b2) * jnp.mean(g2, axis=-2)
+    denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+    vhat = vr[..., None] * (vc[..., None, :] / denom[..., None])
+    return {"vr": vr, "vc": vc}, vhat
+
+
+def apply_updates(params: Any, grads: Any, state: dict[str, Any], cfg: OptConfig):
+    """One AdamW step. Returns (new_params, new_state, stats)."""
+    step = state["step"]
+    gnorm = global_norm(grads)
+    finite = jnp.isfinite(gnorm)
+    scale = jnp.where(
+        finite & (gnorm > cfg.clip_norm), cfg.clip_norm / (gnorm + 1e-12), 1.0
+    )
+    lr = schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+
+    def leaf_update(p, g, m, ve):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        ve_new, vhat = _vhat_update(ve, jnp.square(g32), cfg.b2)
+        upd = (m32 / bc1) / (jnp.sqrt(vhat / bc2) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * upd
+        # NaN guard: a poisoned step becomes a no-op instead of killing the run
+        p_new = jnp.where(finite, p_new, p.astype(jnp.float32))
+        m32 = jnp.where(finite, m32, m.astype(jnp.float32))
+        return p_new.astype(p.dtype), m32.astype(m.dtype), ve_new
+
+    # (A lax.map-over-units variant was tried to shrink the f32 working
+    # copies of stacked leaves; XLA-CPU's while-loop double buffering made
+    # peak memory WORSE (30.4 -> 38.0 GiB on qwen3-32b) — refuted, reverted.
+    # See EXPERIMENTS.md §Perf.)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, ve in zip(flat_p, flat_g, flat_m, flat_v):
+        pn, mn, vn = leaf_update(p, g, m, ve)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+
+    new_state = {
+        "step": step + 1,
+        "m": jax.tree_util.tree_unflatten(treedef, new_m),
+        "v": jax.tree_util.tree_unflatten(treedef, new_v),
+    }
+    stats = {"gnorm": gnorm, "lr": lr, "finite": finite}
+    return jax.tree_util.tree_unflatten(treedef, new_p), new_state, stats
+
+
+def state_specs_for(state: dict[str, Any], param_specs_tree: Any):
+    """Exact specs for an actual opt-state pytree."""
+    from jax.sharding import PartitionSpec as P
+
+    def one(spec, entry):
+        spec_t = tuple(spec)
+        if "v" in entry:
+            return {"v": spec}
+        return {
+            "vr": P(*spec_t[:-1]),
+            "vc": P(*(spec_t[:-2] + spec_t[-1:])),
+        }
+
+    v_specs = jax.tree.map(
+        one, param_specs_tree, state["v"],
+        is_leaf=lambda x: isinstance(x, (jax.sharding.PartitionSpec,)),
+    )
+    return {"step": P(), "m": param_specs_tree, "v": v_specs}

@@ -1,0 +1,70 @@
+"""Elastic scaling: rebuild the mesh from the live device set and re-shard a
+checkpoint onto it.
+
+On a real fleet the control plane detects node loss (collective timeout /
+health probe), excludes the host, and relaunches; this module is the
+relaunch-side logic: pick the largest usable mesh from whatever devices
+remain, and restore the latest checkpoint *onto the new topology* (the
+checkpoint layer device_puts host arrays into any target sharding, so
+topology changes are transparent).
+
+Policy (greedy, model-axis-preserving): keep the model axis at the largest
+divisor of the device count <= the requested TP degree; give the rest to
+data. Shrinking DP changes global batch — the caller decides whether to
+rescale LR or microbatch (we surface both factors).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    dp_degree: int
+    tp_degree: int
+    dropped_devices: int
+
+
+def plan_mesh(n_devices: int, want_tp: int = 16,
+              global_batch: int | None = None) -> ElasticPlan:
+    """Largest (data, model) mesh from `n_devices` with tp | want_tp; if
+    `global_batch` is given, dp is reduced to a divisor of it (so the batch
+    still shards evenly after losing nodes)."""
+    tp = want_tp
+    while tp > 1 and n_devices % tp != 0:
+        tp //= 2
+    dp = n_devices // tp
+    if global_batch is not None:
+        while dp > 1 and global_batch % dp != 0:
+            dp -= 1
+    used = dp * tp
+    return ElasticPlan(
+        mesh_shape=(dp, tp),
+        axis_names=("data", "model"),
+        dp_degree=dp,
+        tp_degree=tp,
+        dropped_devices=n_devices - used,
+    )
+
+
+def remesh_after_failure_batched(n_live: int, want_tp: int, global_batch: int):
+    plan = plan_mesh(n_live, want_tp, global_batch)
+    return plan, build_mesh(plan)
+
+
+def build_mesh(plan: ElasticPlan, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    used = int(np.prod(plan.mesh_shape))
+    arr = np.asarray(devices[:used]).reshape(plan.mesh_shape)
+    return Mesh(arr, plan.axis_names)
+
+
+def remesh_after_failure(n_live: int, want_tp: int = 16) -> tuple[ElasticPlan, Mesh]:
+    plan = plan_mesh(n_live, want_tp)
+    return plan, build_mesh(plan)

@@ -1,0 +1,163 @@
+"""Logical sharding rules: param/activation/cache PartitionSpecs for the
+production mesh.
+
+Mesh axes: ``dp`` = data axes tuple (("data",) single-pod, ("pod", "data")
+multi-pod), ``tp`` = "model".
+
+Parallelism map (what the dry-run exercises):
+  * DP:  batch over dp axes (gradients all-reduced over dp by XLA).
+  * TP:  attention heads / FFN hidden / vocab over tp (Megatron-style
+         column->row pairs; row-parallel contractions psum automatically).
+  * EP:  MoE expert dim over tp (expert parallelism; dispatch buffers are
+         additionally sharded over dp on the capacity dim).
+  * SP:  layer-boundary residuals and KV caches sharded over tp on the
+         *sequence* dim (sequence parallelism for storage; XLA re-gathers
+         the small K/V heads per layer).
+  * ZeRO-ish memory: optimizer second moments can be factored (see
+    repro.optim) and first moments kept in bf16 — the moments inherit these
+    param specs, so they are TP-sharded like the weights.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+TP = "model"
+
+
+def _unit_rule(names: tuple[str, ...], leaf) -> P:
+    """Spec for a leaf under params['units'] — leading axis is the unit stack."""
+    nm = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    nd = leaf.ndim  # includes leading U dim
+    if nm in ("norm1", "norm2", "q_norm", "k_norm", "A_log", "D", "dt_bias"):
+        return P(*([None] * nd))
+    if parent == "moe":
+        if nm == "router":
+            return P(*([None] * nd))
+        return P(None, TP, *([None] * (nd - 2)))  # experts over tp
+    if nm in ("wq", "wk", "wv", "wi", "wg", "wz", "wx", "wb", "wc", "wdt"):
+        return P(*([None] * (nd - 1)), TP)  # column parallel
+    if nm in ("bq", "bk", "bv"):
+        return P(None, TP)
+    if nm in ("wo", "out_proj"):
+        return P(None, TP, None)  # row parallel (contracting dim sharded)
+    if nm in ("conv_wx", "conv_wb", "conv_wc"):
+        return P(None, None, TP)
+    if nm in ("conv_bx", "conv_bb", "conv_bc", "norm"):
+        return P(None, TP)
+    return P(*([None] * nd))
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any) -> Any:
+    """Pytree of PartitionSpec matching a params pytree (of arrays or
+    ShapeDtypeStructs)."""
+
+    def rule(path, leaf):
+        names = tuple(
+            p.key for p in path if isinstance(p, jax.tree_util.DictKey)
+        )
+        if not names:
+            return P()
+        if names[0] == "embed":
+            return P(TP, None)
+        if names[0] == "lm_head":
+            return P(None, TP)
+        if names[0] == "final_norm":
+            return P(None)
+        if names[0] == "units":
+            return _unit_rule(names, leaf)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def add_fsdp(specs: Any, shapes: Any, axis: str = "data", size: int = 16) -> Any:
+    """Upgrade param specs with FSDP-style sharding over `axis`.
+
+    For every >=2-D leaf, the largest still-unsharded dim divisible by `size`
+    additionally shards over the data axis (ZeRO-3: parameters, and via
+    spec inheritance the optimizer moments, are fully distributed; XLA
+    inserts per-layer all-gathers in fwd/bwd and a reduce-scatter of grads).
+    Leaves with no eligible dim keep their spec (norms, biases, scalars).
+    """
+
+    def up(spec, leaf):
+        if leaf.ndim < 2:
+            return spec
+        t = list(tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec))))
+        best, best_dim = -1, None
+        for i in range(leaf.ndim):
+            if t[i] is None and leaf.shape[i] % size == 0 and leaf.shape[i] > best:
+                best, best_dim = leaf.shape[i], i
+        if best_dim is None:
+            return spec
+        t[best_dim] = axis
+        return P(*t)
+
+    return jax.tree.map(
+        up, specs, shapes, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _axes_size(mesh: Mesh | None, axes) -> int:
+    if mesh is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    out = 1
+    for a in axes:
+        out *= int(mesh.shape[a])
+    return out
+
+
+def batch_specs(cfg: ModelConfig, batch_shape: Any, dp: tuple[str, ...],
+                mesh: Mesh | None = None) -> Any:
+    dp_n = _axes_size(mesh, dp)
+
+    def rule(path, leaf):
+        name = path[0].key
+        if name in ("tokens", "labels", "token", "embeds", "vision"):
+            if leaf.shape[0] % max(dp_n, 1) == 0:
+                return P(dp, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: Any, dp: tuple[str, ...],
+                mesh: Mesh | None = None) -> Any:
+    """KV caches: (U, B, S, K, dh) -> sequence dim over tp. Mamba states:
+    channel dims over tp. Dims that do not divide their axis stay unsharded
+    (e.g. batch=1 long-context decode)."""
+    dp_n = _axes_size(mesh, dp)
+    tp_n = _axes_size(mesh, TP)
+
+    def rule(path, leaf):
+        names = tuple(p.key for p in path if isinstance(p, jax.tree_util.DictKey))
+        nm = names[-1]
+        bdp = dp if leaf.shape[1] % max(dp_n, 1) == 0 else None
+        if nm in ("k", "v", "xk", "xv"):
+            seq = TP if leaf.shape[2] % max(tp_n, 1) == 0 else None
+            return P(None, bdp, seq, None, None)
+        if nm in ("convx", "convb", "convc"):
+            ch = TP if leaf.shape[3] % max(tp_n, 1) == 0 else None
+            return P(None, bdp, None, ch)
+        if nm == "ssm":
+            hd = TP if leaf.shape[2] % max(tp_n, 1) == 0 else None
+            return P(None, bdp, hd, None, None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def to_shardings(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

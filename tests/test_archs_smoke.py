@@ -1,0 +1,131 @@
+"""Deliverable (f): per-architecture smoke tests — reduced same-family config,
+one forward/train step on CPU, asserting output shapes + no NaNs; plus
+prefill/decode consistency for autoregressive archs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, get_smoke, runnable_shapes
+from repro.models import (
+    decode_step,
+    forward_logits,
+    init_params,
+    prefill,
+    train_loss,
+)
+
+B, S = 2, 32
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, seq=S, with_labels=True):
+    batch = {}
+    if cfg.embeddings_in:
+        batch["embeds"] = 0.1 * jax.random.normal(RNG, (B, seq, cfg.d_model))
+    else:
+        batch["tokens"] = jax.random.randint(RNG, (B, seq), 0, cfg.vocab)
+    if cfg.n_vision_tokens:
+        batch["vision"] = 0.02 * jax.random.normal(
+            RNG, (B, cfg.n_vision_tokens, cfg.d_model))
+    if with_labels:
+        batch["labels"] = jax.random.randint(RNG, (B, seq), 0, cfg.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_dims_match_assignment(arch):
+    cfg = get_config(arch)
+    assigned = {
+        "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+        "llama32_vision_90b": (100, 8192, 64, 8, 28672, 128256),
+        "internlm2_1_8b": (24, 2048, 16, 8, 8192, 92544),
+        "qwen25_14b": (48, 5120, 40, 8, 13824, 152064),
+        "phi3_medium_14b": (40, 5120, 40, 10, 17920, 100352),
+        "qwen3_32b": (64, 5120, 64, 8, 25600, 151936),
+        "jamba15_large_398b": (72, 8192, 64, 8, 24576, 65536),
+        "arctic_480b": (35, 7168, 56, 8, 4864, 32000),
+        "qwen3_moe_235b": (94, 4096, 64, 4, 1536, 151936),
+        "mamba2_1_3b": (48, 2048, None, None, 0, 50280),
+    }[arch]
+    L, D, H, K, F, V = assigned
+    assert cfg.n_layers == L and cfg.d_model == D and cfg.vocab == V
+    assert cfg.d_ff == F
+    if H is not None:
+        assert cfg.n_heads == H and cfg.n_kv == K
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, RNG)
+    batch = _batch(cfg)
+    logits = forward_logits(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    loss, grads = jax.value_and_grad(
+        lambda p: train_loss(cfg, p, batch)
+    )(params)
+    assert np.isfinite(float(loss)), arch
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if not get_smoke(a).encoder_only])
+def test_smoke_decode_matches_forward(arch):
+    cfg = dataclasses.replace(get_smoke(arch), capacity_factor=16.0)
+    params = init_params(cfg, RNG)
+    toks = jax.random.randint(RNG, (B, S + 1), 0, cfg.vocab)
+    batch = _batch(cfg, with_labels=False)
+    batch["tokens"] = toks[:, :S]
+    full = dict(batch)
+    full["tokens"] = toks
+    logits_full = np.asarray(forward_logits(cfg, params, full), np.float32)
+    lgt, cache, pos = prefill(cfg, params, batch)
+    np.testing.assert_allclose(
+        np.asarray(lgt, np.float32), logits_full[:, S - 1], rtol=1e-3, atol=2e-3)
+    lg2, cache, pos = decode_step(cfg, params, toks[:, S:S + 1], cache, pos)
+    np.testing.assert_allclose(
+        np.asarray(lg2, np.float32), logits_full[:, S], rtol=1e-3, atol=2e-3)
+    assert int(pos) == S + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_shape_skip_table(arch):
+    cfg = get_config(arch)
+    table = runnable_shapes(cfg)
+    assert set(table) == set(SHAPES)
+    if cfg.encoder_only:
+        assert table["decode_32k"] and table["long_500k"]
+    if cfg.family in ("ssm", "hybrid"):
+        assert table["long_500k"] == ""  # sub-quadratic archs run long ctx
+    if cfg.family in ("dense", "moe"):
+        assert table["long_500k"] != ""  # full attention skips long ctx
+
+
+def test_smoke_loss_decreases_with_training():
+    """A few SGD-ish steps on the smoke config reduce loss."""
+    from repro.data.pipeline import DataConfig, batch_for
+    from repro.optim.adamw import OptConfig, apply_updates, init_opt_state
+
+    cfg = get_smoke("internlm2_1_8b")
+    params = init_params(cfg, RNG)
+    ocfg = OptConfig(lr=5e-3, warmup_steps=2, total_steps=20)
+    opt = init_opt_state(params, ocfg)
+    dcfg = DataConfig(seed=3, batch=4, seq_len=64)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: train_loss(cfg, p, batch))(params)
+        params, opt, _ = apply_updates(params, grads, opt, ocfg)
+        return params, opt, loss
+
+    losses = []
+    for s in range(15):
+        params, opt, loss = step(params, opt, batch_for(cfg, dcfg, s))
+        losses.append(float(loss))
+    assert min(losses[-5:]) < losses[0], losses

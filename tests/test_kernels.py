@@ -1,0 +1,115 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp ref.py oracles,
+swept over shapes/dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import to_ell_in
+from repro.graphs import uniform_gnp
+from repro.kernels import relax_settled, static_thresholds
+from repro.kernels.ell_relax import ell_relax
+from repro.kernels.frontier_crit import frontier_crit
+from repro.kernels.ref import ell_relax_ref, frontier_crit_ref
+
+INF = np.inf
+
+
+def _mk_ell(rng, n, d, n_pad):
+    cols = rng.integers(0, n_pad, size=(n, d)).astype(np.int32)
+    ws = rng.uniform(0, 1, size=(n, d)).astype(np.float32)
+    pad = rng.random((n, d)) < 0.2
+    ws[pad] = INF
+    return jnp.asarray(cols), jnp.asarray(ws)
+
+
+@pytest.mark.parametrize("n,d,block", [
+    (8, 1, 8), (64, 8, 16), (100, 24, 32), (256, 16, 256), (300, 8, 128),
+    (1000, 40, 256),
+])
+def test_ell_relax_shapes(n, d, block):
+    rng = np.random.default_rng(n * 7 + d)
+    n_pad = -(-(n + 1) // 128) * 128
+    cols, ws = _mk_ell(rng, n, d, n_pad)
+    dmask = rng.uniform(0, 10, n_pad).astype(np.float32)
+    dmask[rng.random(n_pad) < 0.5] = INF
+    dmask = jnp.asarray(dmask)
+    out = ell_relax(dmask, cols, ws, block_rows=block, interpret=True)
+    ref = ell_relax_ref(dmask, cols, ws)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,block", [(16, 16), (100, 64), (2048, 2048),
+                                     (4100, 2048), (77, 32)])
+def test_frontier_crit_shapes(n, block):
+    rng = np.random.default_rng(n)
+    d = rng.uniform(0, 5, n).astype(np.float32)
+    status = rng.integers(0, 3, n).astype(np.int32)
+    om = rng.uniform(0, 1, n).astype(np.float32)
+    got = frontier_crit(jnp.asarray(d), jnp.asarray(status), jnp.asarray(om),
+                        block=block, interpret=True)
+    want = frontier_crit_ref(jnp.asarray(d), jnp.asarray(status), jnp.asarray(om))
+    for g, w in zip(got, want):
+        assert float(g) == pytest.approx(float(w), rel=1e-6)
+
+
+def test_frontier_crit_empty_fringe():
+    n = 64
+    d = jnp.zeros((n,), jnp.float32)
+    status = jnp.zeros((n,), jnp.int32)  # all unexplored
+    om = jnp.ones((n,), jnp.float32)
+    minf, lout, cnt = frontier_crit(d, status, om, interpret=True)
+    assert np.isinf(float(minf)) and np.isinf(float(lout)) and float(cnt) == 0
+
+
+def test_relax_settled_matches_push_formulation():
+    g = uniform_gnp(300, 8 / 300, seed=5)
+    cols, ws = to_ell_in(g)
+    rng = np.random.default_rng(0)
+    d = rng.uniform(0, 3, g.n).astype(np.float32)
+    settle = rng.random(g.n) < 0.4
+    upd = np.asarray(relax_settled(jnp.asarray(d), jnp.asarray(settle), cols, ws))
+    # push-style oracle over COO
+    src, dst, w = np.asarray(g.src), np.asarray(g.dst), np.asarray(g.w)
+    cand = np.where(settle[src] & np.isfinite(w), d[src] + w, INF)
+    push = np.full(g.n, INF, np.float32)
+    np.minimum.at(push, dst, cand)
+    finite = np.isfinite(push)
+    assert (np.isfinite(upd) == finite).all()
+    np.testing.assert_allclose(upd[finite], push[finite], rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 80),
+    d=st.integers(1, 9),
+    seed=st.integers(0, 2 ** 20),
+)
+def test_ell_relax_property(n, d, seed):
+    rng = np.random.default_rng(seed)
+    n_pad = -(-(n + 1) // 128) * 128
+    cols, ws = _mk_ell(rng, n, d, n_pad)
+    dmask = jnp.asarray(rng.uniform(0, 1, n_pad).astype(np.float32))
+    out = ell_relax(dmask, cols, ws, block_rows=32, interpret=True)
+    ref = ell_relax_ref(dmask, cols, ws)
+    fin = np.isfinite(np.asarray(ref))
+    assert (np.isfinite(np.asarray(out)) == fin).all()
+    np.testing.assert_allclose(np.asarray(out)[fin], np.asarray(ref)[fin],
+                               rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 300), seed=st.integers(0, 2 ** 20))
+def test_frontier_crit_property(n, seed):
+    rng = np.random.default_rng(seed)
+    d = jnp.asarray(rng.uniform(0, 9, n).astype(np.float32))
+    status = jnp.asarray(rng.integers(0, 3, n).astype(np.int32))
+    om = jnp.asarray(rng.uniform(0, 2, n).astype(np.float32))
+    got = frontier_crit(d, status, om, block=64, interpret=True)
+    want = frontier_crit_ref(d, status, om)
+    for g, w in zip(got, want):
+        if np.isinf(float(w)):
+            assert np.isinf(float(g))
+        else:
+            assert float(g) == pytest.approx(float(w), rel=1e-6)

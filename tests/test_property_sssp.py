@@ -1,0 +1,70 @@
+"""Hypothesis property tests for the system invariants of the phased engine.
+
+Invariants checked on random graphs:
+  * every criterion computes exact shortest-path distances (soundness +
+    completeness end-to-end);
+  * reachability sets match the oracle exactly;
+  * the label-setting property bounds relaxation work by m;
+  * Delta-stepping agrees for arbitrary bucket widths.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dijkstra_numpy, from_coo, run_delta_stepping, run_phased
+
+
+@st.composite
+def random_graph(draw):
+    n = draw(st.integers(2, 40))
+    m = draw(st.integers(1, 5 * n))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 30)))
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if len(src) == 0:
+        src, dst = np.array([0]), np.array([min(1, n - 1)])
+    w = rng.uniform(0, 1, len(src)).astype(np.float32)
+    # occasionally include zero-cost edges (allowed: non-negative)
+    if draw(st.booleans()):
+        w[: max(1, len(w) // 8)] = 0.0
+    return from_coo(src, dst, w, n)
+
+
+def _check(g, crit, source=0):
+    ref = dijkstra_numpy(g, source)
+    kw = {}
+    if crit == "oracle":
+        kw["dist_true"] = ref.astype(np.float32)
+    res = run_phased(g, source, crit, **kw)
+    d = np.asarray(res.dist)
+    assert (np.isfinite(ref) == np.isfinite(d)).all()
+    fin = np.isfinite(ref)
+    np.testing.assert_allclose(d[fin], ref[fin], rtol=1e-4, atol=1e-6)
+    assert int(res.relax_edges) <= int(np.isfinite(np.asarray(g.w)).sum())
+
+
+@settings(max_examples=30, deadline=None)
+@given(g=random_graph(),
+       crit=st.sampled_from(["dijk", "instatic|outstatic", "insimple|outsimple",
+                             "in|out", "outweak", "oracle"]))
+def test_phased_exact_on_random_graphs(g, crit):
+    _check(g, crit)
+
+
+@settings(max_examples=20, deadline=None)
+@given(g=random_graph(), delta=st.floats(0.01, 3.0))
+def test_delta_stepping_exact_on_random_graphs(g, delta):
+    ref = dijkstra_numpy(g, 0)
+    res = run_delta_stepping(g, 0, delta=float(delta))
+    d = np.asarray(res.dist)
+    assert (np.isfinite(ref) == np.isfinite(d)).all()
+    fin = np.isfinite(ref)
+    np.testing.assert_allclose(d[fin], ref[fin], rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=random_graph(), seed=st.integers(0, 100))
+def test_source_invariance(g, seed):
+    src = seed % g.n
+    _check(g, "instatic|outstatic", source=src)

@@ -1,0 +1,129 @@
+"""Core SSSP behaviour: criteria correctness, phase-count hierarchy,
+delta-stepping, static engine, work accounting."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    dijkstra_numpy,
+    bellman_ford_jnp,
+    run_delta_stepping,
+    run_phased,
+    to_ell_in,
+)
+from repro.core.static_engine import run_phased_static
+from repro.graphs import grid_road, kronecker, uniform_gnp, webgraph
+
+GRAPHS = {
+    "gnp": lambda: uniform_gnp(250, 10 / 250, seed=11),
+    "kron": lambda: kronecker(8, seed=12),
+    "grid": lambda: grid_road(13, 11, seed=13),
+    "web": lambda: webgraph(250, 5, seed=14),
+}
+CRITERIA = [
+    "dijk", "instatic", "outstatic", "insimple", "outsimple",
+    "in", "out", "outweak", "instatic|outstatic", "in|out",
+]
+
+
+def _dist_equal(a, b, rtol=1e-5):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    if not (np.isfinite(a) == np.isfinite(b)).all():
+        return False
+    mask = np.isfinite(a)
+    return np.allclose(a[mask], b[mask], rtol=rtol)
+
+
+@pytest.fixture(scope="module", params=list(GRAPHS))
+def graph(request):
+    g = GRAPHS[request.param]()
+    return request.param, g, dijkstra_numpy(g, 0)
+
+
+@pytest.mark.parametrize("crit", CRITERIA)
+def test_phased_criteria_correct(graph, crit):
+    name, g, ref = graph
+    res = run_phased(g, 0, crit)
+    assert _dist_equal(res.dist, ref), (name, crit)
+    assert int(res.phases) <= g.n + 1
+    # label-setting: every vertex's out-edges relaxed at most once
+    assert int(res.relax_edges) <= int(np.isfinite(np.asarray(g.w)).sum())
+
+
+def test_oracle_criterion(graph):
+    name, g, ref = graph
+    res = run_phased(g, 0, "oracle", dist_true=ref.astype(np.float32))
+    assert _dist_equal(res.dist, ref, rtol=1e-4)
+
+
+def test_phase_hierarchy(graph):
+    """Stronger criteria need at most as many phases (paper Sec. 3)."""
+    name, g, ref = graph
+    ph = {c: int(run_phased(g, 0, c).phases) for c in CRITERIA}
+    oracle = int(run_phased(g, 0, "oracle", dist_true=ref.astype(np.float32)).phases)
+    assert ph["in"] <= ph["insimple"] <= ph["instatic"] <= ph["dijk"]
+    assert ph["out"] <= ph["outweak"] <= ph["outsimple"] <= ph["outstatic"]
+    assert ph["instatic|outstatic"] <= min(ph["instatic"], ph["outstatic"])
+    assert ph["in|out"] <= min(ph["in"], ph["out"])
+    assert oracle <= ph["in|out"]
+
+
+def test_settled_trace(graph):
+    name, g, ref = graph
+    res = run_phased(g, 0, "instatic|outstatic", trace_len=g.n + 1)
+    trace = np.asarray(res.settled_per_phase)
+    reachable = int(np.isfinite(ref).sum())
+    assert trace.sum() == reachable
+    assert (trace[: int(res.phases)] > 0).all()  # every phase settles >= 1
+
+
+def test_sum_fringe_positive(graph):
+    name, g, _ = graph
+    r1 = run_phased(g, 0, "dijk")
+    r2 = run_phased(g, 0, "in|out")
+    # stronger criteria reduce total fringe work (paper Table 2)
+    assert int(r2.sum_fringe) <= int(r1.sum_fringe)
+
+
+@pytest.mark.parametrize("delta", [None, 0.05, 0.3, 1.5])
+def test_delta_stepping_correct(graph, delta):
+    name, g, ref = graph
+    res = run_delta_stepping(g, 0, delta=delta)
+    assert _dist_equal(res.dist, ref), (name, delta)
+
+
+def test_delta_extremes_match_bfs_and_dijkstra(graph):
+    """delta >= max weight = Bellman-Ford-ish; tiny delta = near-Dijkstra."""
+    name, g, ref = graph
+    assert _dist_equal(run_delta_stepping(g, 0, delta=10.0).dist, ref)
+
+
+def test_bellman_ford_oracle(graph):
+    name, g, ref = graph
+    assert _dist_equal(bellman_ford_jnp(g, 0), ref)
+
+
+def test_static_engine_matches_generic(graph):
+    name, g, ref = graph
+    gen = run_phased(g, 0, "instatic|outstatic")
+    for pallas in (False, True):
+        eng = run_phased_static(g, 0, use_pallas=pallas)
+        assert _dist_equal(eng.dist, ref)
+        assert int(eng.phases) == int(gen.phases), (name, pallas)
+
+
+def test_other_sources(graph):
+    name, g, _ = graph
+    src = g.n // 2
+    ref = dijkstra_numpy(g, src)
+    res = run_phased(g, src, "in|out")
+    assert _dist_equal(res.dist, ref)
+
+
+def test_unreachable_vertices_stay_inf():
+    import repro.core.graph as G
+    # two disconnected components
+    g = G.from_coo([0, 1], [1, 0], [0.5, 0.25], n=4)
+    res = run_phased(g, 0, "instatic|outstatic")
+    d = np.asarray(res.dist)
+    assert d[0] == 0 and d[1] == 0.5
+    assert np.isinf(d[2]) and np.isinf(d[3])

@@ -1,0 +1,180 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, sharding rules,
+elastic planning."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_smoke
+from repro.data.pipeline import DataConfig, batch_for
+from repro.optim.adamw import (
+    OptConfig,
+    apply_updates,
+    global_norm,
+    init_opt_state,
+    schedule,
+    state_specs_for,
+)
+from repro.runtime.elastic import plan_mesh
+from repro.sharding.partition import add_fsdp, param_specs
+from repro.launch.steps import abstract_params
+
+
+# ---------------- optimizer ----------------
+
+def _quad_params():
+    return {"w": jnp.array([3.0, -2.0, 1.5]), "b": jnp.array(5.0)}
+
+
+@pytest.mark.parametrize("m_dtype,v_mode", [
+    ("float32", "full"), ("bfloat16", "full"), ("float32", "factored"),
+    ("bfloat16", "factored"),
+])
+def test_adamw_converges_on_quadratic(m_dtype, v_mode):
+    params = {"w": jnp.ones((4, 6)), "b": jnp.zeros((6,))}
+    target = jnp.arange(24.0).reshape(4, 6) / 24.0
+    cfg = OptConfig(lr=5e-2, weight_decay=0.0, warmup_steps=1,
+                    total_steps=200, m_dtype=m_dtype, v_mode=v_mode)
+    state = init_opt_state(params, cfg)
+
+    @jax.jit
+    def step(params, state):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.mean((p["w"] - target) ** 2) + jnp.mean(p["b"] ** 2)
+        )(params)
+        params, state, _ = apply_updates(params, g, state, cfg)
+        return params, state, loss
+
+    for _ in range(150):
+        params, state, loss = step(params, state)
+    assert float(loss) < 1e-2, (m_dtype, v_mode, float(loss))
+
+
+def test_factored_v_memory_shapes():
+    params = {"w": jnp.zeros((8, 16)), "s": jnp.zeros((5,))}
+    st = init_opt_state(params, OptConfig(v_mode="factored"))
+    assert st["v"]["w"]["vr"].shape == (8,)
+    assert st["v"]["w"]["vc"].shape == (16,)
+    assert st["v"]["s"]["v"].shape == (5,)  # 1-D falls back to full
+
+
+def test_nan_guard_no_op():
+    params = {"w": jnp.ones((3,))}
+    cfg = OptConfig()
+    state = init_opt_state(params, cfg)
+    bad = {"w": jnp.array([jnp.nan, 1.0, 2.0])}
+    new_p, new_s, stats = apply_updates(params, bad, state, cfg)
+    assert not bool(stats["finite"])
+    np.testing.assert_array_equal(np.asarray(new_p["w"]), np.ones(3))
+    assert int(new_s["step"]) == 1  # step still advances
+
+
+def test_clip_and_schedule():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, clip_norm=1.0)
+    assert float(schedule(cfg, jnp.int32(0))) == pytest.approx(0.1)
+    assert float(schedule(cfg, jnp.int32(9))) == pytest.approx(1.0)
+    assert float(schedule(cfg, jnp.int32(99))) <= 1.0
+    g = {"w": jnp.full((4,), 100.0)}
+    assert float(global_norm(g)) == pytest.approx(200.0)
+
+
+# ---------------- data pipeline ----------------
+
+def test_pipeline_deterministic_and_restartable():
+    cfg = get_smoke("internlm2_1_8b")
+    dcfg = DataConfig(seed=7, batch=4, seq_len=32)
+    b1 = batch_for(cfg, dcfg, 123)
+    b2 = batch_for(cfg, dcfg, 123)  # "after restart"
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    b3 = batch_for(cfg, dcfg, 124)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+    assert b1["tokens"].shape == (4, 32)
+    assert (np.asarray(b1["labels"]) < cfg.vocab).all()
+
+
+def test_pipeline_labels_are_next_tokens():
+    cfg = get_smoke("internlm2_1_8b")
+    dcfg = DataConfig(seed=1, batch=2, seq_len=16)
+    b = batch_for(cfg, dcfg, 0)
+    toks, labels = np.asarray(b["tokens"]), np.asarray(b["labels"])
+    assert (toks[:, 1:] == labels[:, :-1]).all()
+
+
+# ---------------- checkpointing ----------------
+
+def test_checkpoint_roundtrip_bf16_and_retention():
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+        "nest": {"b": jnp.float32(3.5), "c": jnp.arange(4, dtype=jnp.int32)},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (10, 20, 30):
+            mgr.save(s, tree)
+        assert mgr.all_steps() == [20, 30]  # keep=2 retention
+        back = mgr.restore(30, tree)
+        np.testing.assert_array_equal(
+            np.asarray(back["a"], np.float32), np.asarray(tree["a"], np.float32))
+        assert back["a"].dtype == jnp.bfloat16
+        assert float(back["nest"]["b"]) == 3.5
+
+
+def test_checkpoint_incomplete_manifest_ignored():
+    tree = {"x": jnp.zeros((3,))}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(5, tree)
+        # a crash leaves a npz without valid manifest
+        open(os.path.join(d, "ckpt_00000009.json"), "w").write("{corrupt")
+        assert mgr.latest_step() == 5
+
+
+def test_checkpoint_async_then_wait():
+    tree = {"x": jnp.ones((128, 128))}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save_async(3, tree)
+        mgr.wait()
+        assert mgr.latest_step() == 3
+
+
+# ---------------- sharding rules ----------------
+
+@pytest.mark.parametrize("arch", ["qwen3_moe_235b", "jamba15_large_398b",
+                                  "mamba2_1_3b", "hubert_xlarge"])
+def test_param_specs_cover_tree(arch):
+    cfg = get_smoke(arch)
+    shapes = abstract_params(cfg)
+    specs = param_specs(cfg, shapes)
+    flat_shapes = jax.tree.leaves(shapes)
+    flat_specs = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert len(flat_shapes) == len(flat_specs)
+    for sh, sp in zip(flat_shapes, flat_specs):
+        assert len(tuple(sp)) <= sh.ndim
+
+
+def test_fsdp_upgrade_shards_largest_free_dim():
+    from jax.sharding import PartitionSpec as P
+
+    cfg = get_smoke("qwen25_14b")
+    shapes = abstract_params(cfg)
+    specs = add_fsdp(param_specs(cfg, shapes), shapes, axis="data", size=2)
+    # embedding (V, D) was P('model', None) -> D picks up 'data'
+    assert tuple(specs["embed"]) == ("model", "data")
+
+
+# ---------------- elastic ----------------
+
+def test_plan_mesh_divisibility():
+    p = plan_mesh(256, want_tp=16)
+    assert p.mesh_shape == (16, 16) and p.dropped_devices == 0
+    p = plan_mesh(255, want_tp=16)  # one chip lost
+    assert p.tp_degree == 1 and p.dp_degree == 255
+    p = plan_mesh(252, want_tp=4, global_batch=256)
+    assert 256 % p.dp_degree == 0
+    assert p.mesh_shape[0] * p.mesh_shape[1] <= 252
