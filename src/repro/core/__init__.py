@@ -6,6 +6,11 @@ from repro.core.delta_stepping import DeltaResult, default_delta, run_delta_step
 from repro.core.graph import Graph, from_coo, to_ell_in, to_numpy_csr, transpose
 from repro.core.oracle import bellman_ford_jnp, dijkstra_numpy
 from repro.core.phased import PhasedResult, run_phased
+from repro.core.static_engine import (
+    BatchedResult,
+    run_phased_static,
+    run_phased_static_batch,
+)
 
 __all__ = [
     "CRITERIA",
@@ -16,6 +21,9 @@ __all__ = [
     "transpose",
     "run_phased",
     "PhasedResult",
+    "run_phased_static",
+    "run_phased_static_batch",
+    "BatchedResult",
     "run_delta_stepping",
     "DeltaResult",
     "default_delta",

@@ -37,6 +37,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.graph import Graph
+from repro.sharding.compat import shard_map_compat
 
 INF = jnp.inf
 
@@ -171,12 +172,11 @@ def make_distributed_sssp(mesh: Mesh, axes, *, schedule: str = "reduce_scatter",
         d, status, phases, _ = jax.lax.while_loop(cond, body, state0)
         return d, phases + jnp.zeros((1,), jnp.int32)
 
-    mapped = jax.shard_map(
+    mapped = shard_map_compat(
         spmd,
         mesh=mesh,
         in_specs=(vspec, vspec, vspec, vspec, espec, espec, espec, P()),
         out_specs=(vspec, P(axes[0])),
-        check_vma=False,
     )
 
     @jax.jit

@@ -36,9 +36,9 @@ class PhasedResult:
     dist: jax.Array  # (n,) f32 final distances (inf = unreachable)
     status: jax.Array  # (n,) int8
     phases: jax.Array  # scalar int32: number of phases executed
-    sum_fringe: jax.Array  # scalar int64: sum over phases of |F| (paper Table 2)
+    sum_fringe: jax.Array  # scalar int32: sum over phases of |F| (paper Table 2)
     settled_per_phase: jax.Array  # (trace_len,) int32 (0 beyond `phases`)
-    relax_edges: jax.Array  # scalar int64: total out-edges relaxed (work)
+    relax_edges: jax.Array  # scalar int32: total out-edges relaxed (work)
 
 
 def _phase_step(g: Graph, names, dist_true, out_deg, state):

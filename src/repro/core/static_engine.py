@@ -12,13 +12,26 @@ with Delta-stepping). Per phase it does exactly two fused passes:
 This is the single-device building block that ``repro.core.distributed``
 shard_maps over the production mesh. ``use_pallas=False`` swaps in the ref.py
 oracles (bit-identical math) for differential testing.
+
+Batch serving (:func:`run_phased_static_batch`): B source queries against the
+*same* graph run as one jitted ``lax.while_loop`` over 2-D ``(B, n)`` state,
+sharing a single ELL adjacency load per phase across the whole batch (the
+adjacency is the dominant memory traffic, so throughput scales nearly
+linearly in B until the gather saturates — see DESIGN.md Sec. 3). Rows
+finish at different phase counts; a finished row simply has an empty fringe,
+so its settle mask is all-false and its state is a fixed point — it idles
+inside the fused phase at no extra memory cost while ``jnp.all``-style
+termination waits for the slowest row. Per-row phase/work counters advance
+only while the row is live.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graph import Graph, to_ell_in
 from repro.core.phased import PhasedResult
@@ -28,12 +41,31 @@ from repro.kernels import ref as kref
 INF = jnp.inf
 
 
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["dist", "status", "phases", "sum_fringe", "total_phases"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class BatchedResult:
+    """Result of one batched multi-source solve over a shared graph."""
+
+    dist: jax.Array  # (B, n) f32 final distances (inf = unreachable)
+    status: jax.Array  # (B, n) int8 (0=U, 1=F, 2=S)
+    phases: jax.Array  # (B,) int32: phases each row was live for
+    sum_fringe: jax.Array  # (B,) int32: per-row sum over phases of |F|
+    total_phases: jax.Array  # scalar int32: loop trips = max over rows
+
+
 @partial(jax.jit, static_argnames=("use_pallas", "max_phases"))
 def _run_static(g: Graph, ell_cols, ell_ws, source, use_pallas: bool, max_phases: int):
     n = g.n
     d0 = jnp.full((n,), INF, jnp.float32).at[source].set(0.0)
     status0 = jnp.zeros((n,), jnp.int32).at[source].set(1)
     lane_pad = -(-(n + 1) // 128) * 128
+    out_deg = jax.ops.segment_sum(
+        jnp.isfinite(g.w).astype(jnp.int32), g.src, num_segments=n
+    )
 
     def thresholds(d, status):
         if use_pallas:
@@ -64,15 +96,16 @@ def _run_static(g: Graph, ell_cols, ell_ws, source, use_pallas: bool, max_phases
         new_status = jnp.where(
             settle, 2, jnp.where((status == 0) & (upd < INF), 1, status)
         )
+        redges = redges + jnp.sum(jnp.where(settle, out_deg, 0), dtype=jnp.int32)
         return new_d, new_status, phases + 1, sum_f + n_f, redges
 
-    state0 = (d0, status0, jnp.int32(0), jnp.float32(0.0), jnp.int32(0))
+    state0 = (d0, status0, jnp.int32(0), jnp.int32(0), jnp.int32(0))
     d, status, phases, sum_f, redges = jax.lax.while_loop(cond, body, state0)
     return PhasedResult(
         dist=d,
         status=status.astype(jnp.int8),
         phases=phases,
-        sum_fringe=sum_f.astype(jnp.int32),
+        sum_fringe=sum_f,
         settled_per_phase=jnp.zeros((1,), jnp.int32),
         relax_edges=redges,
     )
@@ -91,3 +124,105 @@ def run_phased_static(
     cols, ws = ell
     cap = int(max_phases) if max_phases is not None else g.n + 1
     return _run_static(g, cols, ws, jnp.int32(source), bool(use_pallas), cap)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "max_phases"))
+def _run_static_batch(
+    g: Graph, ell_cols, ell_ws, sources, use_pallas: bool, max_phases: int
+):
+    n = g.n
+    b = sources.shape[0]
+    rows = jnp.arange(b)
+    d0 = jnp.full((b, n), INF, jnp.float32).at[rows, sources].set(0.0)
+    status0 = jnp.zeros((b, n), jnp.int32).at[rows, sources].set(1)
+    lane_pad = -(-(n + 1) // 128) * 128
+
+    def thresholds(d, status):
+        if use_pallas:
+            return kops.static_thresholds_batch(d, status, g.out_min_static)
+        return kref.frontier_crit_batch_ref(d, status, g.out_min_static)
+
+    def relax(d, settle):
+        if use_pallas:
+            return kops.relax_settled_batch(d, settle, ell_cols, ell_ws)
+        dmask = jnp.full((b, lane_pad), INF, jnp.float32).at[:, :n].set(
+            jnp.where(settle, d, INF)
+        )
+        return kref.ell_relax_batch_ref(dmask, ell_cols, ell_ws)
+
+    def cond(state):
+        _, status, trips, *_ = state
+        return jnp.any(status == 1) & (trips < max_phases)
+
+    def body(state):
+        d, status, trips, phases_b, sum_f = state
+        min_fd, l_out, n_f = thresholds(d, status)  # each (B,)
+        fringe = status == 1
+        settle = fringe & (
+            (d - g.in_min_static[None] <= min_fd[:, None])
+            | (d <= l_out[:, None])
+            | (d <= min_fd[:, None])
+        )
+        upd = relax(d, settle)
+        new_d = jnp.minimum(d, upd)
+        new_status = jnp.where(
+            settle, 2, jnp.where((status == 0) & (upd < INF), 1, status)
+        )
+        live = (n_f > 0).astype(jnp.int32)  # finished rows stop counting
+        return new_d, new_status, trips + 1, phases_b + live, sum_f + n_f
+
+    state0 = (
+        d0,
+        status0,
+        jnp.int32(0),
+        jnp.zeros((b,), jnp.int32),
+        jnp.zeros((b,), jnp.int32),
+    )
+    d, status, trips, phases_b, sum_f = jax.lax.while_loop(cond, body, state0)
+    return BatchedResult(
+        dist=d,
+        status=status.astype(jnp.int8),
+        phases=phases_b,
+        sum_fringe=sum_f,
+        total_phases=trips,
+    )
+
+
+def run_phased_static_batch(
+    g: Graph,
+    sources,
+    ell=None,
+    use_pallas: bool = True,
+    max_phases: int | None = None,
+) -> BatchedResult:
+    """Batched INSTATIC|OUTSTATIC SSSP: B sources, one graph, one phase loop.
+
+    Args:
+      g: the shared input graph.
+      sources: (B,) int source vertex ids (one SSSP query per row).
+      ell: optional precomputed ``to_ell_in(g)`` — pass it when answering
+        many batches against the same graph so the ELL build is paid once.
+      use_pallas: kernels (True) vs ref.py oracles (False); bit-identical.
+      max_phases: safety cap on loop trips (default n+1: every live row
+        settles >= 1 vertex per phase, so all rows end within n phases).
+
+    Row ``i`` of the result equals ``run_phased_static(g, sources[i])``
+    exactly (same float ops in the same phase structure, per-row).
+    """
+    if ell is None:
+        ell = to_ell_in(g)
+    cols, ws = ell
+    src_np = np.atleast_1d(np.asarray(sources))
+    if src_np.ndim != 1:
+        raise ValueError(f"sources must be a (B,) vector; got shape {src_np.shape}")
+    if src_np.size == 0:
+        raise ValueError("sources must be non-empty")
+    if src_np.dtype.kind not in "iu":
+        raise ValueError(f"sources must be integer vertex ids; got {src_np.dtype}")
+    src_np = src_np.astype(np.int32)
+    if src_np.min() < 0 or src_np.max() >= g.n:
+        # out-of-range ids would be silently dropped by the scatter (all-inf
+        # row, 0 phases) — fail loudly at the serving boundary instead
+        raise ValueError(f"sources must be in [0, {g.n}); got {src_np}")
+    cap = int(max_phases) if max_phases is not None else g.n + 1
+    return _run_static_batch(g, cols, ws, jnp.asarray(src_np), bool(use_pallas), cap)

@@ -1,5 +1,15 @@
 """Pallas TPU kernels for the phased-SSSP hot spots (validated in
 interpret mode on CPU; see ref.py for the pure-jnp oracles)."""
-from repro.kernels.ops import relax_settled, static_thresholds
+from repro.kernels.ops import (
+    relax_settled,
+    relax_settled_batch,
+    static_thresholds,
+    static_thresholds_batch,
+)
 
-__all__ = ["relax_settled", "static_thresholds"]
+__all__ = [
+    "relax_settled",
+    "relax_settled_batch",
+    "static_thresholds",
+    "static_thresholds_batch",
+]

@@ -24,6 +24,13 @@ TPU mapping (HBM -> VMEM -> VPU):
 Graphs whose distance vector exceeds VMEM must shard vertices over devices
 first (see ``repro.core.distributed``), which keeps the per-device slice VMEM-
 resident again — the kernel is the per-shard inner loop in that regime.
+
+The batched variant (:func:`ell_relax_batch`) serves B concurrent SSSP
+queries over the *same* graph: ``dmask`` becomes ``(B, n_pad)`` and each grid
+step still loads exactly one ``(block_rows, D)`` adjacency tile — the
+dominant HBM traffic (cols + ws, 8 B/edge-slot) is amortised over all B
+lanes, which is what makes batch serving nearly free until the gather itself
+saturates the VPU (see DESIGN.md Sec. 3).
 """
 from __future__ import annotations
 
@@ -73,3 +80,43 @@ def ell_relax(
         interpret=interpret,
     )(dmask, cols, ws)
     return out[:n]
+
+
+def _relax_kernel_batch(dmask_ref, cols_ref, ws_ref, out_ref):
+    idx = cols_ref[...]  # (Bn, D) int32 source ids, shared across the batch
+    w = ws_ref[...]  # (Bn, D) f32, +inf padding
+    d = dmask_ref[...]  # (B, n_pad) f32, per-row masked distances
+    vals = jnp.take(d, idx, axis=1) + w[None]  # (B, Bn, D) VMEM-local gather
+    out_ref[...] = jnp.min(vals, axis=2)  # (B, Bn)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ell_relax_batch(
+    dmask: jax.Array,  # (B, n_pad) f32; +inf at masked/padded/sentinel slots
+    cols: jax.Array,  # (n, D) int32, one adjacency shared by all rows
+    ws: jax.Array,  # (n, D) f32
+    *,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns upd (B, n) f32 = per-row row-min of dmask[b, cols] + ws."""
+    b = dmask.shape[0]
+    n, d_pad = cols.shape
+    rows_pad = -(-n // block_rows) * block_rows
+    if rows_pad != n:
+        cols = jnp.pad(cols, ((0, rows_pad - n), (0, 0)))
+        ws = jnp.pad(ws, ((0, rows_pad - n), (0, 0)), constant_values=INF)
+    grid = rows_pad // block_rows
+    out = pl.pallas_call(
+        _relax_kernel_batch,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(dmask.shape, lambda i: (0, 0)),  # whole batch, VMEM-resident
+            pl.BlockSpec((block_rows, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d_pad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, block_rows), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, rows_pad), jnp.float32),
+        interpret=interpret,
+    )(dmask, cols, ws)
+    return out[:, :n]

@@ -3,16 +3,25 @@
 One pass over the vertex state produces the three global scalars every phase
 of the ``INSTATIC | OUTSTATIC`` engine needs:
 
-    lane 0: min_F d            (threshold of DIJK / INSTATIC, Eq. 4)
-    lane 1: min_F (d + minout) (threshold L of OUTSTATIC, Eq. 5)
-    lane 2: |F|                (fringe size, the paper's work measure)
+    lane 0 (f32): min_F d            (threshold of DIJK / INSTATIC, Eq. 4)
+    lane 1 (f32): min_F (d + minout) (threshold L of OUTSTATIC, Eq. 5)
+    int acc (i32): |F|               (fringe size, the paper's work measure)
 
 Unfused this is three masked reductions = three passes over ``d``/``status``;
 the fusion makes the criteria *memory-roofline optimal* (each vertex word is
 read exactly once per phase). Grid-step accumulation: every tile min/sum-
-accumulates into the same (1, 128) VMEM output block, initialised at grid
-step 0 — the canonical Pallas reduction idiom (output block index map is
-constant, so the block persists across steps).
+accumulates into the same VMEM output blocks, initialised at grid step 0 —
+the canonical Pallas reduction idiom (output block index maps are constant,
+so the blocks persist across steps).
+
+The fringe count accumulates in a dedicated ``int32`` output block, never in
+a float lane: f32 sums silently lose counts past 2^24, which a batch of
+large-graph queries reaches (see DESIGN.md Sec. 4).
+
+The batched variant (:func:`frontier_crit_batch`) reduces per-batch-row
+thresholds ``(B, 3)`` in the same single pass: the vertex axis is tiled by
+the grid while every tile carries all ``B`` lanes, so one load of the shared
+``out_min`` vector serves the whole batch.
 """
 from __future__ import annotations
 
@@ -26,23 +35,24 @@ INF = jnp.inf
 _LANES = 128
 
 
-def _crit_kernel(d_ref, status_ref, outmin_ref, acc_ref):
+def _crit_kernel(d_ref, status_ref, outmin_ref, acc_ref, cnt_ref):
     step = pl.program_id(0)
 
     @pl.when(step == 0)
     def _init():
-        acc_ref[...] = jnp.full((1, _LANES), INF, jnp.float32).at[0, 2].set(0.0)
+        acc_ref[...] = jnp.full((1, _LANES), INF, jnp.float32)
+        cnt_ref[...] = jnp.zeros((1, _LANES), jnp.int32)
 
     d = d_ref[...]
     fringe = status_ref[...] == 1
     min_fd = jnp.min(jnp.where(fringe, d, INF))
     l_out = jnp.min(jnp.where(fringe, d + outmin_ref[...], INF))
-    n_f = jnp.sum(fringe.astype(jnp.float32))
+    n_f = jnp.sum(fringe, dtype=jnp.int32)
     acc = acc_ref[...]
     acc = acc.at[0, 0].set(jnp.minimum(acc[0, 0], min_fd))
     acc = acc.at[0, 1].set(jnp.minimum(acc[0, 1], l_out))
-    acc = acc.at[0, 2].set(acc[0, 2] + n_f)
     acc_ref[...] = acc
+    cnt_ref[...] = cnt_ref[...].at[0, 0].add(n_f)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -54,7 +64,7 @@ def frontier_crit(
     block: int = 2048,
     interpret: bool = True,
 ):
-    """Returns (min_fringe_d, l_out, fringe_count) as f32 scalars."""
+    """Returns (min_fringe_d f32, l_out f32, fringe_count i32) scalars."""
     n = d.shape[0]
     n_pad = -(-n // block) * block
     if n_pad != n:
@@ -62,7 +72,7 @@ def frontier_crit(
         status = jnp.pad(status, (0, n_pad - n))  # pad as U: never fringe
         out_min = jnp.pad(out_min, (0, n_pad - n), constant_values=INF)
     grid = n_pad // block
-    acc = pl.pallas_call(
+    acc, cnt = pl.pallas_call(
         _crit_kernel,
         grid=(grid,),
         in_specs=[
@@ -70,8 +80,73 @@ def frontier_crit(
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((block,), lambda i: (i,)),
         ],
-        out_specs=pl.BlockSpec((1, _LANES), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, _LANES), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((1, _LANES), lambda i: (0, 0)),
+            pl.BlockSpec((1, _LANES), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, _LANES), jnp.float32),
+            jax.ShapeDtypeStruct((1, _LANES), jnp.int32),
+        ],
         interpret=interpret,
     )(d, status.astype(jnp.int32), out_min)
-    return acc[0, 0], acc[0, 1], acc[0, 2]
+    return acc[0, 0], acc[0, 1], cnt[0, 0]
+
+
+def _crit_kernel_batch(d_ref, status_ref, outmin_ref, acc_ref, cnt_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[...] = jnp.full(acc_ref.shape, INF, jnp.float32)
+        cnt_ref[...] = jnp.zeros(cnt_ref.shape, jnp.int32)
+
+    d = d_ref[...]  # (B, block)
+    fringe = status_ref[...] == 1  # (B, block)
+    om = outmin_ref[...]  # (block,) shared across the batch
+    min_fd = jnp.min(jnp.where(fringe, d, INF), axis=1)  # (B,)
+    l_out = jnp.min(jnp.where(fringe, d + om[None, :], INF), axis=1)
+    n_f = jnp.sum(fringe, axis=1, dtype=jnp.int32)  # (B,)
+    acc = acc_ref[...]
+    acc = acc.at[:, 0].set(jnp.minimum(acc[:, 0], min_fd))
+    acc = acc.at[:, 1].set(jnp.minimum(acc[:, 1], l_out))
+    acc_ref[...] = acc
+    cnt_ref[...] = cnt_ref[...].at[:, 0].add(n_f)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def frontier_crit_batch(
+    d: jax.Array,  # (B, n) f32 tentative distances, one row per source
+    status: jax.Array,  # (B, n) int32 (0=U, 1=F, 2=S)
+    out_min: jax.Array,  # (n,) f32, shared by every batch row
+    *,
+    block: int = 2048,
+    interpret: bool = True,
+):
+    """Returns (min_fringe_d (B,) f32, l_out (B,) f32, fringe_count (B,) i32)."""
+    b, n = d.shape
+    n_pad = -(-n // block) * block
+    if n_pad != n:
+        d = jnp.pad(d, ((0, 0), (0, n_pad - n)), constant_values=INF)
+        status = jnp.pad(status, ((0, 0), (0, n_pad - n)))
+        out_min = jnp.pad(out_min, (0, n_pad - n), constant_values=INF)
+    grid = n_pad // block
+    acc, cnt = pl.pallas_call(
+        _crit_kernel_batch,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((b, block), lambda i: (0, i)),
+            pl.BlockSpec((b, block), lambda i: (0, i)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, _LANES), lambda i: (0, 0)),
+            pl.BlockSpec((b, _LANES), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, _LANES), jnp.float32),
+            jax.ShapeDtypeStruct((b, _LANES), jnp.int32),
+        ],
+        interpret=interpret,
+    )(d, status.astype(jnp.int32), out_min)
+    return acc[:, 0], acc[:, 1], cnt[:, 0]

@@ -8,8 +8,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ell_relax import ell_relax
-from repro.kernels.frontier_crit import frontier_crit
+from repro.kernels.ell_relax import ell_relax, ell_relax_batch
+from repro.kernels.frontier_crit import frontier_crit, frontier_crit_batch
 
 INF = jnp.inf
 
@@ -53,3 +53,40 @@ def static_thresholds(
     if interpret is None:
         interpret = _default_interpret()
     return frontier_crit(d, status, out_min_static, block=block, interpret=interpret)
+
+
+def relax_settled_batch(
+    d: jax.Array,  # (B, n) f32 tentative distances, one row per query
+    settle_mask: jax.Array,  # (B, n) bool — per-row vertices settled this phase
+    ell_cols: jax.Array,  # (n, D) int32 incoming ELL shared by the batch
+    ell_ws: jax.Array,  # (n, D) f32
+    *,
+    block_rows: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched candidate updates (B, n); one adjacency load serves all rows."""
+    if interpret is None:
+        interpret = _default_interpret()
+    b, n = d.shape
+    lane_pad = -(-(n + 1) // 128) * 128
+    dmask = jnp.full((b, lane_pad), INF, jnp.float32)
+    dmask = dmask.at[:, :n].set(jnp.where(settle_mask, d, INF))
+    return ell_relax_batch(
+        dmask, ell_cols, ell_ws, block_rows=block_rows, interpret=interpret
+    )
+
+
+def static_thresholds_batch(
+    d: jax.Array,  # (B, n)
+    status: jax.Array,  # (B, n)
+    out_min_static: jax.Array,  # (n,) shared
+    *,
+    block: int = 2048,
+    interpret: bool | None = None,
+):
+    """Per-row (min_F d, L_out, |F|) — each (B,) — in one fused pass."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return frontier_crit_batch(
+        d, status, out_min_static, block=block, interpret=interpret
+    )

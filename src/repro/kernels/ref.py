@@ -21,5 +21,19 @@ def frontier_crit_ref(d: jax.Array, status: jax.Array, out_min: jax.Array):
     fringe = status == 1
     min_fd = jnp.min(jnp.where(fringe, d, INF))
     l_out = jnp.min(jnp.where(fringe, d + out_min, INF))
-    n_f = jnp.sum(fringe.astype(jnp.float32))
+    n_f = jnp.sum(fringe, dtype=jnp.int32)
+    return min_fd, l_out, n_f
+
+
+def ell_relax_batch_ref(dmask: jax.Array, cols: jax.Array, ws: jax.Array) -> jax.Array:
+    """upd[b, v] = min_j dmask[b, cols[v, j]] + ws[v, j]."""
+    return jnp.min(jnp.take(dmask, cols, axis=1) + ws[None], axis=-1)
+
+
+def frontier_crit_batch_ref(d: jax.Array, status: jax.Array, out_min: jax.Array):
+    """Per-batch-row (min_F d, L_out, |F|) over (B, n) state; out_min shared."""
+    fringe = status == 1
+    min_fd = jnp.min(jnp.where(fringe, d, INF), axis=1)
+    l_out = jnp.min(jnp.where(fringe, d + out_min[None], INF), axis=1)
+    n_f = jnp.sum(fringe, axis=1, dtype=jnp.int32)
     return min_fd, l_out, n_f

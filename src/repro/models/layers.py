@@ -24,6 +24,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.sharding.compat import shard_map_compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -361,7 +362,7 @@ def _apply_moe_ep(cfg: ModelConfig, p, x, shd: ShardingCtx):
         y = _moe_dispatch_compute(cfg, router, xt, c_loc, expert_fn)
         return y.reshape(xb.shape)
 
-    mapped = jax.shard_map(
+    mapped = shard_map_compat(
         spmd,
         mesh=shd.mesh,
         in_specs=(
@@ -372,7 +373,6 @@ def _apply_moe_ep(cfg: ModelConfig, p, x, shd: ShardingCtx):
             P(shd.tp, None, None),
         ),
         out_specs=P(shd.dp, shd.tp, None),
-        check_vma=False,
     )
     return mapped(x, p["router"], p["wi"], p["wg"], p["wo"])
 

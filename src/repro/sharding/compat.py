@@ -1,0 +1,33 @@
+"""Version-portable wrappers over JAX SPMD APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+around 0.5, and its replication-check kwarg was renamed ``check_rep`` ->
+``check_vma`` in the process. Every call site in this repo goes through
+:func:`shard_map_compat` so the pinned 0.4.x container and current JAX both
+work from the same source.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """Resolve the available shard_map and disable replication checking.
+
+    Replication checking stays off in this codebase on purpose: the SPMD
+    bodies return per-shard blocks (and run collectives the checker cannot
+    always type), not replicated values.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    params = inspect.signature(fn).parameters
+    if "check_vma" in params:
+        kw = {"check_vma": False}
+    elif "check_rep" in params:
+        kw = {"check_rep": False}
+    else:
+        kw = {}
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -1,0 +1,13 @@
+"""Shared test fixtures (plain functions; imported by several test modules)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def mk_ell(rng, n, d, n_pad):
+    """Random ELL adjacency block: (n, d) int32 source ids into a padded
+    distance vector of length n_pad, weights f32 with ~20% +inf padding."""
+    cols = rng.integers(0, n_pad, size=(n, d)).astype(np.int32)
+    ws = rng.uniform(0, 1, size=(n, d)).astype(np.float32)
+    pad = rng.random((n, d)) < 0.2
+    ws[pad] = np.inf
+    return jnp.asarray(cols), jnp.asarray(ws)

@@ -5,12 +5,37 @@ Invariants checked on random graphs:
     completeness end-to-end);
   * reachability sets match the oracle exactly;
   * the label-setting property bounds relaxation work by m;
-  * Delta-stepping agrees for arbitrary bucket widths.
+  * Delta-stepping agrees for arbitrary bucket widths;
+  * the Pallas kernels agree with their ref.py oracles on arbitrary shapes;
+  * the batched static engine matches per-source runs on random batches.
+
+Requires ``hypothesis`` (see requirements-dev.txt); the whole module skips
+cleanly when it is absent so the tier-1 suite still collects.
 """
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)",
+)
+import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
-from repro.core import dijkstra_numpy, from_coo, run_delta_stepping, run_phased
+from repro.core import (
+    dijkstra_numpy,
+    from_coo,
+    run_delta_stepping,
+    run_phased,
+    run_phased_static_batch,
+)
+from repro.kernels.ell_relax import ell_relax
+from repro.kernels.frontier_crit import frontier_crit
+from repro.kernels.ref import ell_relax_ref, frontier_crit_ref
+
+from helpers import mk_ell as _mk_ell
+
+INF = np.inf
 
 
 @st.composite
@@ -68,3 +93,52 @@ def test_delta_stepping_exact_on_random_graphs(g, delta):
 def test_source_invariance(g, seed):
     src = seed % g.n
     _check(g, "instatic|outstatic", source=src)
+
+
+@settings(max_examples=10, deadline=None)
+@given(g=random_graph(), seed=st.integers(0, 2 ** 20),
+       b=st.integers(1, 8), pallas=st.booleans())
+def test_batched_static_matches_phased(g, seed, b, pallas):
+    rng = np.random.default_rng(seed)
+    srcs = rng.integers(0, g.n, b)
+    res = run_phased_static_batch(g, srcs, use_pallas=pallas)
+    for i, s in enumerate(srcs):
+        ref = run_phased(g, int(s), "instatic|outstatic")
+        np.testing.assert_array_equal(
+            np.asarray(res.dist[i]), np.asarray(ref.dist))
+        assert int(res.phases[i]) == int(ref.phases)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 80),
+    d=st.integers(1, 9),
+    seed=st.integers(0, 2 ** 20),
+)
+def test_ell_relax_property(n, d, seed):
+    rng = np.random.default_rng(seed)
+    n_pad = -(-(n + 1) // 128) * 128
+    cols, ws = _mk_ell(rng, n, d, n_pad)
+    dmask = jnp.asarray(rng.uniform(0, 1, n_pad).astype(np.float32))
+    out = ell_relax(dmask, cols, ws, block_rows=32, interpret=True)
+    ref = ell_relax_ref(dmask, cols, ws)
+    fin = np.isfinite(np.asarray(ref))
+    assert (np.isfinite(np.asarray(out)) == fin).all()
+    np.testing.assert_allclose(np.asarray(out)[fin], np.asarray(ref)[fin],
+                               rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 300), seed=st.integers(0, 2 ** 20))
+def test_frontier_crit_property(n, seed):
+    rng = np.random.default_rng(seed)
+    d = jnp.asarray(rng.uniform(0, 9, n).astype(np.float32))
+    status = jnp.asarray(rng.integers(0, 3, n).astype(np.int32))
+    om = jnp.asarray(rng.uniform(0, 2, n).astype(np.float32))
+    got = frontier_crit(d, status, om, block=64, interpret=True)
+    want = frontier_crit_ref(d, status, om)
+    for g, w in zip(got, want):
+        if np.isinf(float(w)):
+            assert np.isinf(float(g))
+        else:
+            assert float(g) == pytest.approx(float(w), rel=1e-6)

@@ -109,6 +109,9 @@ def test_static_engine_matches_generic(graph):
         eng = run_phased_static(g, 0, use_pallas=pallas)
         assert _dist_equal(eng.dist, ref)
         assert int(eng.phases) == int(gen.phases), (name, pallas)
+        # same settle sets per phase -> identical work accounting
+        assert int(eng.relax_edges) == int(gen.relax_edges), (name, pallas)
+        assert int(eng.sum_fringe) == int(gen.sum_fringe), (name, pallas)
 
 
 def test_other_sources(graph):
