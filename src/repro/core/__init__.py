@@ -7,9 +7,18 @@ from repro.core.graph import Graph, from_coo, to_ell_in, to_numpy_csr, transpose
 from repro.core.oracle import bellman_ford_jnp, dijkstra_numpy
 from repro.core.phased import PhasedResult, run_phased
 from repro.core.static_engine import (
+    EMPTY_LANE,
+    KEEP_LANE,
     BatchedResult,
+    BatchState,
+    harvest,
+    init_batch_state,
+    lanes_active,
+    reset_lane,
+    reset_lanes,
     run_phased_static,
     run_phased_static_batch,
+    step_batch,
 )
 
 __all__ = [
@@ -24,6 +33,15 @@ __all__ = [
     "run_phased_static",
     "run_phased_static_batch",
     "BatchedResult",
+    "BatchState",
+    "EMPTY_LANE",
+    "KEEP_LANE",
+    "init_batch_state",
+    "step_batch",
+    "reset_lane",
+    "reset_lanes",
+    "lanes_active",
+    "harvest",
     "run_delta_stepping",
     "DeltaResult",
     "default_delta",

@@ -101,7 +101,18 @@ def to_ell_in(g: Graph, pad_multiple: int = 8):
     with ``src = n`` (a sentinel row appended by consumers) and ``w = +inf``.
     ``D`` is the max in-degree rounded up to ``pad_multiple`` (min 1 lane so
     isolated-source graphs still produce a well-formed array).
+
+    Memoised per :class:`Graph` instance (keyed by ``pad_multiple``): the
+    serving path answers many queries against one long-lived graph, and the
+    CSR->ELL rebuild would otherwise dominate small-batch latency. The cache
+    lives in the instance ``__dict__`` (bypassing the frozen-dataclass
+    setattr guard) and is deliberately *not* a pytree field, so jit
+    flatten/unflatten round-trips simply drop it.
     """
+    cache = g.__dict__.setdefault("_ell_in_cache", {})
+    hit = cache.get(pad_multiple)
+    if hit is not None:
+        return hit
     src = np.asarray(g.src)
     dst = np.asarray(g.dst)
     w = np.asarray(g.w)
@@ -120,7 +131,9 @@ def to_ell_in(g: Graph, pad_multiple: int = 8):
     slot = np.arange(len(dst)) - np.searchsorted(dst, dst, side="left")
     cols[dst, slot] = src
     ws[dst, slot] = w
-    return jnp.asarray(cols), jnp.asarray(ws)
+    out = (jnp.asarray(cols), jnp.asarray(ws))
+    cache[pad_multiple] = out
+    return out
 
 
 def transpose(g: Graph) -> Graph:

@@ -13,16 +13,33 @@ This is the single-device building block that ``repro.core.distributed``
 shard_maps over the production mesh. ``use_pallas=False`` swaps in the ref.py
 oracles (bit-identical math) for differential testing.
 
-Batch serving (:func:`run_phased_static_batch`): B source queries against the
-*same* graph run as one jitted ``lax.while_loop`` over 2-D ``(B, n)`` state,
-sharing a single ELL adjacency load per phase across the whole batch (the
-adjacency is the dominant memory traffic, so throughput scales nearly
-linearly in B until the gather saturates — see DESIGN.md Sec. 3). Rows
-finish at different phase counts; a finished row simply has an empty fringe,
-so its settle mask is all-false and its state is a fixed point — it idles
-inside the fused phase at no extra memory cost while ``jnp.all``-style
-termination waits for the slowest row. Per-row phase/work counters advance
-only while the row is live.
+Stepper API (the resumable core every front-end shares):
+
+  * :func:`init_batch_state` scatters B sources into fresh ``(B, n)`` state
+    (``-1`` marks an empty lane: all-+inf distances, no fringe — a fixed
+    point that rides along at zero phase cost);
+  * :func:`step_batch` advances the jitted phase loop by *up to* ``k_phases``
+    more trips (stops early when every lane's fringe is empty), returning a
+    new :class:`BatchState` with identical shapes — so it can be called again;
+  * :func:`reset_lane` re-initialises one lane's ``(n,)`` slice in place
+    (new source or parked empty) without touching the other lanes — the
+    admission primitive of ``repro.serving``;
+  * :func:`harvest` freezes a state into a :class:`BatchedResult`.
+
+``run_phased_static`` (B=1) and ``run_phased_static_batch`` (one-shot batch)
+are thin wrappers over the same stepper, so all three front-ends execute the
+*identical* jitted phase body — bit-exactness between them is structural,
+not coincidental. Each phase the body performs the same float ops per row
+regardless of what the other rows are doing, which is what lets the serving
+layer admit/retire queries mid-flight while preserving per-query results
+bit-for-bit (DESIGN.md Sec. 6).
+
+Batch amortisation: one ELL adjacency load per phase serves the whole batch
+(the adjacency is the dominant memory traffic, so throughput scales nearly
+linearly in B until the gather saturates — see DESIGN.md Sec. 3). A finished
+or empty row has an empty fringe, so its settle mask is all-false and its
+state is a fixed point; per-row phase/work counters advance only while the
+row is live.
 """
 from __future__ import annotations
 
@@ -40,10 +57,50 @@ from repro.kernels import ref as kref
 
 INF = jnp.inf
 
+EMPTY_LANE = -1  # sentinel source id: lane holds no query
+KEEP_LANE = -2  # sentinel source id for reset_lanes: leave the lane untouched
+
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["dist", "status", "phases", "sum_fringe", "total_phases"],
+    data_fields=[
+        "dist", "status", "trips", "phases", "sum_fringe", "relax_edges", "out_deg",
+    ],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class BatchState:
+    """Resumable state of a batched phase loop (one row per lane).
+
+    A pure pytree of fixed-shape device arrays: ``step_batch`` maps it to a
+    new state of identical shapes, so the loop can be chunked, paused, and
+    individual lanes reset between chunks without recompilation.
+    """
+
+    dist: jax.Array  # (B, n) f32 tentative distances
+    status: jax.Array  # (B, n) int32 (0=U, 1=F, 2=S)
+    trips: jax.Array  # scalar int32: loop trips since init (wraps at 2^31 in
+    #   a very-long-lived server; consumers must accumulate wrap-safe deltas,
+    #   as ContinuousBatcher does — int64 needs jax_enable_x64, off in prod)
+    phases: jax.Array  # (B,) int32: phases each lane's current query was live
+    sum_fringe: jax.Array  # (B,) int32: per-lane sum over live phases of |F|
+    relax_edges: jax.Array  # (B,) int32: per-lane out-edges relaxed
+    out_deg: jax.Array  # (n,) int32: graph out-degrees (carried for counters)
+
+    @property
+    def num_lanes(self) -> int:
+        return self.dist.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.dist.shape[1]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "dist", "status", "phases", "sum_fringe", "relax_edges", "total_phases",
+    ],
     meta_fields=[],
 )
 @dataclasses.dataclass(frozen=True)
@@ -54,88 +111,80 @@ class BatchedResult:
     status: jax.Array  # (B, n) int8 (0=U, 1=F, 2=S)
     phases: jax.Array  # (B,) int32: phases each row was live for
     sum_fringe: jax.Array  # (B,) int32: per-row sum over phases of |F|
-    total_phases: jax.Array  # scalar int32: loop trips = max over rows
+    relax_edges: jax.Array  # (B,) int32: per-row out-edges relaxed
+    total_phases: jax.Array  # scalar int32: loop trips since state init —
+    #   equals max over rows for a one-shot batch; cumulative (spans every
+    #   query the lanes ever served) when harvested from a resumed state
 
 
-@partial(jax.jit, static_argnames=("use_pallas", "max_phases"))
-def _run_static(g: Graph, ell_cols, ell_ws, source, use_pallas: bool, max_phases: int):
+def _fresh_rows(sources, n: int):
+    """(B, n) dist/status rows for fresh queries: the single source of truth
+    for lane initialisation — init and both reset paths share it, which is
+    what makes 'a reset lane is bitwise a fresh solve' hold by construction.
+    Source -1 (or below) yields an empty all-+inf, fringe-free row."""
+    b = sources.shape[0]
+    rows = jnp.arange(b)
+    valid = sources >= 0
+    col = jnp.clip(sources, 0, n - 1)
+    d = jnp.full((b, n), INF, jnp.float32).at[rows, col].set(
+        jnp.where(valid, 0.0, INF)
+    )
+    status = jnp.zeros((b, n), jnp.int32).at[rows, col].set(
+        jnp.where(valid, 1, 0)
+    )
+    return d, status
+
+
+@jax.jit
+def _init_state(g: Graph, sources: jax.Array) -> BatchState:
     n = g.n
-    d0 = jnp.full((n,), INF, jnp.float32).at[source].set(0.0)
-    status0 = jnp.zeros((n,), jnp.int32).at[source].set(1)
-    lane_pad = -(-(n + 1) // 128) * 128
+    b = sources.shape[0]
+    d0, status0 = _fresh_rows(sources, n)
     out_deg = jax.ops.segment_sum(
         jnp.isfinite(g.w).astype(jnp.int32), g.src, num_segments=n
     )
-
-    def thresholds(d, status):
-        if use_pallas:
-            return kops.static_thresholds(d, status, g.out_min_static)
-        return kref.frontier_crit_ref(d, status, g.out_min_static)
-
-    def relax(d, settle):
-        if use_pallas:
-            return kops.relax_settled(d, settle, ell_cols, ell_ws)
-        dmask = jnp.full((lane_pad,), INF, jnp.float32).at[:n].set(
-            jnp.where(settle, d, INF)
-        )
-        return kref.ell_relax_ref(dmask, ell_cols, ell_ws)
-
-    def cond(state):
-        _, status, phases, *_ = state
-        return jnp.any(status == 1) & (phases < max_phases)
-
-    def body(state):
-        d, status, phases, sum_f, redges = state
-        min_fd, l_out, n_f = thresholds(d, status)
-        fringe = status == 1
-        settle = fringe & (
-            (d - g.in_min_static <= min_fd) | (d <= l_out) | (d <= min_fd)
-        )
-        upd = relax(d, settle)
-        new_d = jnp.minimum(d, upd)
-        new_status = jnp.where(
-            settle, 2, jnp.where((status == 0) & (upd < INF), 1, status)
-        )
-        redges = redges + jnp.sum(jnp.where(settle, out_deg, 0), dtype=jnp.int32)
-        return new_d, new_status, phases + 1, sum_f + n_f, redges
-
-    state0 = (d0, status0, jnp.int32(0), jnp.int32(0), jnp.int32(0))
-    d, status, phases, sum_f, redges = jax.lax.while_loop(cond, body, state0)
-    return PhasedResult(
-        dist=d,
-        status=status.astype(jnp.int8),
-        phases=phases,
-        sum_fringe=sum_f,
-        settled_per_phase=jnp.zeros((1,), jnp.int32),
-        relax_edges=redges,
+    zeros_b = jnp.zeros((b,), jnp.int32)
+    return BatchState(
+        dist=d0,
+        status=status0,
+        trips=jnp.int32(0),
+        phases=zeros_b,
+        sum_fringe=zeros_b,
+        relax_edges=zeros_b,
+        out_deg=out_deg,
     )
 
 
-def run_phased_static(
-    g: Graph,
-    source: int = 0,
-    ell=None,
-    use_pallas: bool = True,
-    max_phases: int | None = None,
-) -> PhasedResult:
-    """INSTATIC|OUTSTATIC phased SSSP via the Pallas kernels."""
-    if ell is None:
-        ell = to_ell_in(g)
-    cols, ws = ell
-    cap = int(max_phases) if max_phases is not None else g.n + 1
-    return _run_static(g, cols, ws, jnp.int32(source), bool(use_pallas), cap)
+def init_batch_state(g: Graph, sources) -> BatchState:
+    """Fresh ``(B, n)`` stepper state for B lanes over one shared graph.
+
+    ``sources[i] == -1`` (:data:`EMPTY_LANE`) leaves lane ``i`` empty — an
+    all-+inf fixed point with no fringe that costs nothing per phase and can
+    later be populated with :func:`reset_lane`.
+    """
+    src_np = np.atleast_1d(np.asarray(sources))
+    if src_np.ndim != 1 or src_np.size == 0:
+        raise ValueError(f"sources must be a non-empty (B,) vector; got shape {src_np.shape}")
+    if src_np.dtype.kind not in "iu":
+        raise ValueError(f"sources must be integer vertex ids; got {src_np.dtype}")
+    # range-check in the original dtype: casting first would let ids beyond
+    # int32 wrap into the valid range and silently answer the wrong query
+    if int(src_np.min()) < EMPTY_LANE or int(src_np.max()) >= g.n:
+        raise ValueError(
+            f"sources must be in [0, {g.n}) or -1 for an empty lane; got {src_np}"
+        )
+    return _init_state(g, jnp.asarray(src_np.astype(np.int32)))
 
 
-@partial(jax.jit, static_argnames=("use_pallas", "max_phases"))
-def _run_static_batch(
-    g: Graph, ell_cols, ell_ws, sources, use_pallas: bool, max_phases: int
-):
+def _step_batch_impl(
+    g: Graph, ell_cols, ell_ws, state: BatchState, k_phases, use_pallas: bool,
+    stop_on_lane_finish: bool = False,
+) -> BatchState:
     n = g.n
-    b = sources.shape[0]
-    rows = jnp.arange(b)
-    d0 = jnp.full((b, n), INF, jnp.float32).at[rows, sources].set(0.0)
-    status0 = jnp.zeros((b, n), jnp.int32).at[rows, sources].set(1)
+    b = state.dist.shape[0]
     lane_pad = -(-(n + 1) // 128) * 128
+    start = state.trips
+    live0 = jnp.any(state.status == 1, axis=1)  # (B,) lanes live at entry
 
     def thresholds(d, status):
         if use_pallas:
@@ -150,12 +199,17 @@ def _run_static_batch(
         )
         return kref.ell_relax_batch_ref(dmask, ell_cols, ell_ws)
 
-    def cond(state):
-        _, status, trips, *_ = state
-        return jnp.any(status == 1) & (trips < max_phases)
+    def cond(s):
+        live = jnp.any(s.status == 1, axis=1)  # lanes never revive, live <= live0
+        go = jnp.any(live) & (s.trips - start < k_phases)
+        if stop_on_lane_finish:
+            # end the chunk as soon as any entry-live lane terminates, so the
+            # scheduler can refill it instead of letting it idle out the chunk
+            go &= jnp.all(live == live0)
+        return go
 
-    def body(state):
-        d, status, trips, phases_b, sum_f = state
+    def body(s):
+        d, status = s.dist, s.status
         min_fd, l_out, n_f = thresholds(d, status)  # each (B,)
         fringe = status == 1
         settle = fringe & (
@@ -168,23 +222,183 @@ def _run_static_batch(
         new_status = jnp.where(
             settle, 2, jnp.where((status == 0) & (upd < INF), 1, status)
         )
-        live = (n_f > 0).astype(jnp.int32)  # finished rows stop counting
-        return new_d, new_status, trips + 1, phases_b + live, sum_f + n_f
+        live = (n_f > 0).astype(jnp.int32)  # finished/empty lanes stop counting
+        return BatchState(
+            dist=new_d,
+            status=new_status,
+            trips=s.trips + 1,
+            phases=s.phases + live,
+            sum_fringe=s.sum_fringe + n_f,
+            relax_edges=s.relax_edges
+            + jnp.sum(jnp.where(settle, s.out_deg[None], 0), axis=1, dtype=jnp.int32),
+            out_deg=s.out_deg,
+        )
 
-    state0 = (
-        d0,
-        status0,
-        jnp.int32(0),
-        jnp.zeros((b,), jnp.int32),
-        jnp.zeros((b,), jnp.int32),
+    return jax.lax.while_loop(cond, body, state)
+
+
+_STEP_STATICS = ("use_pallas", "stop_on_lane_finish")
+_step_batch = jax.jit(_step_batch_impl, static_argnames=_STEP_STATICS)
+# donating variant: XLA may update the (B, n) state in place instead of
+# copying it per call (no-op on CPU, which ignores donation)
+_step_batch_donate = jax.jit(
+    _step_batch_impl, static_argnames=_STEP_STATICS, donate_argnums=(3,)
+)
+
+
+def step_batch(
+    g: Graph,
+    state: BatchState,
+    k_phases: int,
+    ell=None,
+    use_pallas: bool = True,
+    stop_on_lane_finish: bool = False,
+    donate: bool = False,
+) -> BatchState:
+    """Advance the phase loop by up to ``k_phases`` more trips.
+
+    Returns after ``k_phases`` trips, or earlier when every lane's fringe is
+    empty (possibly immediately), or — with ``stop_on_lane_finish`` — as soon
+    as any lane that was live on entry terminates (the continuous batcher
+    uses this to refill finished lanes with zero idle trips). ``k_phases`` is
+    a traced operand, so varying it does not trigger recompilation; shapes
+    are fixed by ``(B, n)``.
+
+    ``donate=True`` donates the input state's buffers so accelerator
+    backends update them in place rather than copying ~8·B·n bytes per
+    chunk. Only pass it when nothing else references those buffers — in
+    particular, results of an earlier :func:`harvest` alias them.
+    """
+    if ell is None:
+        ell = to_ell_in(g)
+    cols, ws = ell
+    fn = _step_batch_donate if donate else _step_batch
+    return fn(
+        g, cols, ws, state, jnp.int32(k_phases), bool(use_pallas),
+        bool(stop_on_lane_finish),
     )
-    d, status, trips, phases_b, sum_f = jax.lax.while_loop(cond, body, state0)
+
+
+def _reset_lanes_impl(state: BatchState, sources) -> BatchState:
+    b, n = state.dist.shape
+    touch = sources >= EMPTY_LANE  # KEEP_LANE rows pass through unchanged
+    fresh_d, fresh_s = _fresh_rows(sources, n)
+
+    def ctr(old):
+        return jnp.where(touch, 0, old)
+
+    return BatchState(
+        dist=jnp.where(touch[:, None], fresh_d, state.dist),
+        status=jnp.where(touch[:, None], fresh_s, state.status),
+        trips=state.trips,
+        phases=ctr(state.phases),
+        sum_fringe=ctr(state.sum_fringe),
+        relax_edges=ctr(state.relax_edges),
+        out_deg=state.out_deg,
+    )
+
+
+def _reset_lane_impl(state: BatchState, lane, source) -> BatchState:
+    b = state.dist.shape[0]
+    vec = jnp.full((b,), KEEP_LANE, jnp.int32).at[lane].set(source)
+    return _reset_lanes_impl(state, vec)
+
+
+_reset_lane = jax.jit(_reset_lane_impl)
+_reset_lane_donate = jax.jit(_reset_lane_impl, donate_argnums=(0,))
+
+
+_reset_lanes = jax.jit(_reset_lanes_impl)
+_reset_lanes_donate = jax.jit(_reset_lanes_impl, donate_argnums=(0,))
+
+
+def reset_lanes(state: BatchState, sources, donate: bool = False) -> BatchState:
+    """Re-initialise several lanes in one device call.
+
+    ``sources`` is a ``(B,)`` int vector aligned with the lanes: entry
+    ``-2`` (:data:`KEEP_LANE`) leaves that lane's bits untouched, ``-1``
+    (:data:`EMPTY_LANE`) parks it empty, and a vertex id starts a fresh
+    query there. Semantically identical to a sequence of :func:`reset_lane`
+    calls, but an admission burst costs one dispatch regardless of how many
+    lanes it refills (the continuous batcher's admission path).
+    """
+    src_np = np.asarray(sources)
+    if src_np.shape != (state.num_lanes,):
+        raise ValueError(
+            f"sources must have shape ({state.num_lanes},); got {src_np.shape}"
+        )
+    if src_np.dtype.kind not in "iu":
+        raise ValueError(f"sources must be integer vertex ids; got {src_np.dtype}")
+    if int(src_np.min()) < KEEP_LANE or int(src_np.max()) >= state.n:
+        raise ValueError(
+            f"sources must be in [0, {state.n}), -1 (park) or -2 (keep); got {src_np}"
+        )
+    fn = _reset_lanes_donate if donate else _reset_lanes
+    return fn(state, jnp.asarray(src_np.astype(np.int32)))
+
+
+def reset_lane(
+    state: BatchState, lane: int, source: int = EMPTY_LANE, donate: bool = False
+) -> BatchState:
+    """Re-initialise one lane's ``(n,)`` slice for a new query (or park it).
+
+    Only row ``lane`` of every per-lane array changes; the other lanes'
+    bits are untouched, so queries in flight are unaffected. This is the
+    admission primitive of the continuous batcher: a freshly reset lane is
+    bitwise identical to row ``lane`` of a fresh :func:`init_batch_state`,
+    so the query it carries runs exactly as if it had been solved alone.
+
+    ``donate=True`` lets accelerator backends scatter the row into the
+    existing buffers instead of copying the full ``(B, n)`` state (same
+    aliasing caveat as :func:`step_batch`; CPU ignores donation).
+    """
+    if not 0 <= lane < state.num_lanes:
+        raise ValueError(f"lane must be in [0, {state.num_lanes}); got {lane}")
+    if not EMPTY_LANE <= source < state.n:
+        raise ValueError(f"source must be in [0, {state.n}) or -1; got {source}")
+    fn = _reset_lane_donate if donate else _reset_lane
+    return fn(state, jnp.int32(lane), jnp.int32(source))
+
+
+def lanes_active(state: BatchState) -> np.ndarray:
+    """(B,) bool host array: which lanes still have a non-empty fringe."""
+    return np.asarray(jnp.any(state.status == 1, axis=1))
+
+
+def harvest(state: BatchState) -> BatchedResult:
+    """Freeze a stepper state into a :class:`BatchedResult`."""
     return BatchedResult(
-        dist=d,
-        status=status.astype(jnp.int8),
-        phases=phases_b,
-        sum_fringe=sum_f,
-        total_phases=trips,
+        dist=state.dist,
+        status=state.status.astype(jnp.int8),
+        phases=state.phases,
+        sum_fringe=state.sum_fringe,
+        relax_edges=state.relax_edges,
+        total_phases=state.trips,
+    )
+
+
+def run_phased_static(
+    g: Graph,
+    source: int = 0,
+    ell=None,
+    use_pallas: bool = True,
+    max_phases: int | None = None,
+) -> PhasedResult:
+    """INSTATIC|OUTSTATIC phased SSSP via the Pallas kernels (B=1 stepper)."""
+    if ell is None:
+        ell = to_ell_in(g)
+    cap = int(max_phases) if max_phases is not None else g.n + 1
+    if not 0 <= int(source) < g.n:
+        raise ValueError(f"source must be in [0, {g.n}); got {source}")
+    state = init_batch_state(g, [int(source)])
+    state = step_batch(g, state, cap, ell=ell, use_pallas=use_pallas)
+    return PhasedResult(
+        dist=state.dist[0],
+        status=state.status[0].astype(jnp.int8),
+        phases=state.phases[0],
+        sum_fringe=state.sum_fringe[0],
+        settled_per_phase=jnp.zeros((1,), jnp.int32),
+        relax_edges=state.relax_edges[0],
     )
 
 
@@ -201,7 +415,8 @@ def run_phased_static_batch(
       g: the shared input graph.
       sources: (B,) int source vertex ids (one SSSP query per row).
       ell: optional precomputed ``to_ell_in(g)`` — pass it when answering
-        many batches against the same graph so the ELL build is paid once.
+        many batches against the same graph so the ELL build is paid once
+        (``to_ell_in`` also memoises per Graph instance).
       use_pallas: kernels (True) vs ref.py oracles (False); bit-identical.
       max_phases: safety cap on loop trips (default n+1: every live row
         settles >= 1 vertex per phase, so all rows end within n phases).
@@ -211,7 +426,6 @@ def run_phased_static_batch(
     """
     if ell is None:
         ell = to_ell_in(g)
-    cols, ws = ell
     src_np = np.atleast_1d(np.asarray(sources))
     if src_np.ndim != 1:
         raise ValueError(f"sources must be a (B,) vector; got shape {src_np.shape}")
@@ -219,10 +433,13 @@ def run_phased_static_batch(
         raise ValueError("sources must be non-empty")
     if src_np.dtype.kind not in "iu":
         raise ValueError(f"sources must be integer vertex ids; got {src_np.dtype}")
-    src_np = src_np.astype(np.int32)
-    if src_np.min() < 0 or src_np.max() >= g.n:
-        # out-of-range ids would be silently dropped by the scatter (all-inf
-        # row, 0 phases) — fail loudly at the serving boundary instead
+    # range-check before the int32 cast (wider ids must not wrap into range),
+    # and fail loudly: out-of-range ids would otherwise be silently dropped
+    # by the scatter (all-inf row, 0 phases)
+    if int(src_np.min()) < 0 or int(src_np.max()) >= g.n:
         raise ValueError(f"sources must be in [0, {g.n}); got {src_np}")
+    src_np = src_np.astype(np.int32)
     cap = int(max_phases) if max_phases is not None else g.n + 1
-    return _run_static_batch(g, cols, ws, jnp.asarray(src_np), bool(use_pallas), cap)
+    state = init_batch_state(g, src_np)
+    state = step_batch(g, state, cap, ell=ell, use_pallas=use_pallas)
+    return harvest(state)

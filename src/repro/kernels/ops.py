@@ -2,6 +2,12 @@
 
 ``interpret`` defaults to True off-TPU (the kernel body then runs as plain
 XLA/CPU for bit-exact validation) and False on TPU (compiled Mosaic).
+
+The production engines (``repro.core.static_engine`` stepper and everything
+built on it) consume only the batched 2-D entry points; the 1-D
+``relax_settled``/``static_thresholds`` wrappers are retained as reference
+surfaces — ``tests/test_kernels.py`` pins the 2-D kernels row-for-row
+against them (DESIGN.md Sec. 5), so they must stay bit-consistent.
 """
 from __future__ import annotations
 

@@ -1,0 +1,24 @@
+"""Continuous-batching SSSP serving subsystem (DESIGN.md Sec. 6).
+
+Turns the resumable phase-stepper engine (``repro.core.static_engine``) into
+an online server: queries arrive asynchronously, a :class:`ContinuousBatcher`
+keeps B engine lanes saturated by refilling finished rows from an
+:class:`ArrivalQueue`, duplicate queries short-circuit through a
+:class:`DistCache`, and :class:`ServingMetrics` emits the throughput/latency
+report. Every admitted query's distances are bit-exact vs a standalone
+``run_phased_static`` solve.
+"""
+from repro.serving.cache import DistCache, graph_key
+from repro.serving.metrics import ServingMetrics
+from repro.serving.queue import ArrivalQueue, Request
+from repro.serving.scheduler import ContinuousBatcher, DrainStalled
+
+__all__ = [
+    "ContinuousBatcher",
+    "DrainStalled",
+    "ArrivalQueue",
+    "Request",
+    "DistCache",
+    "graph_key",
+    "ServingMetrics",
+]

@@ -1,0 +1,107 @@
+"""Serving metrics: throughput, latency percentiles, lane occupancy.
+
+One :class:`ServingMetrics` instance rides along with a
+:class:`~repro.serving.scheduler.ContinuousBatcher`. Two event streams feed
+it: per-request completions (latency, queue wait, phases, cache hits) and
+per-step occupancy samples (how many of the B lanes held a query while the
+engine advanced). ``report()`` distils both into a flat JSON-serialisable
+dict — the artifact the benchmarks persist and dashboards would scrape.
+
+Counters that are *counts* stay ints and latencies stay floats end to end;
+percentiles come from numpy over the retained per-request records.
+"""
+from __future__ import annotations
+
+import json
+from collections import deque
+
+import numpy as np
+
+from repro.serving.queue import Request
+
+
+def _pct(xs, q) -> float:
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.fromiter(xs, dtype=np.float64), q))
+
+
+class ServingMetrics:
+    """Aggregates completion and occupancy events into a serving report."""
+
+    def __init__(self, lanes: int, window: int = 65536):
+        self.lanes = int(lanes)
+        self.completed = 0
+        self.cache_hits = 0
+        self.coalesced = 0
+        self.total_phases = 0  # engine phases attributed to completed queries
+        self.steps = 0
+        self.engine_trips = 0  # loop trips actually executed across steps
+        self._busy_lane_trips = 0
+        self._lane_trips = 0
+        # percentile windows are bounded so a long-lived server cannot grow
+        # host memory per request; aggregates above stay exact forever
+        self._latencies: deque[float] = deque(maxlen=window)
+        self._queue_waits: deque[float] = deque(maxlen=window)
+        self._phases: deque[int] = deque(maxlen=window)  # engine-served only
+        self._t_first_arrival: float | None = None
+        self._t_last_completion: float | None = None
+
+    def record_completion(self, req: Request) -> None:
+        self.completed += 1
+        if req.cache_hit:
+            self.cache_hits += 1
+        elif req.coalesced:
+            self.coalesced += 1
+        else:
+            self._phases.append(int(req.phases or 0))
+            self.total_phases += int(req.phases or 0)
+        self._latencies.append(req.latency)
+        self._queue_waits.append(req.queue_wait)
+        if self._t_first_arrival is None or req.t_arrival < self._t_first_arrival:
+            self._t_first_arrival = req.t_arrival
+        if self._t_last_completion is None or req.t_completed > self._t_last_completion:
+            self._t_last_completion = req.t_completed
+
+    def record_step(self, busy_lanes: int, trips_advanced: int) -> None:
+        # occupancy is trip-weighted: a 1-trip chunk (early lane finish) must
+        # not count as much utilisation evidence as a 100-trip ride
+        self.steps += 1
+        self.engine_trips += int(trips_advanced)
+        self._busy_lane_trips += int(busy_lanes) * int(trips_advanced)
+        self._lane_trips += self.lanes * int(trips_advanced)
+
+    @property
+    def wall_span(self) -> float:
+        """First arrival to last completion, in clock units."""
+        if self._t_first_arrival is None or self._t_last_completion is None:
+            return 0.0
+        return self._t_last_completion - self._t_first_arrival
+
+    def report(self) -> dict:
+        """Flat JSON-serialisable summary of the serving run so far."""
+        span = self.wall_span
+        occ = self._busy_lane_trips / self._lane_trips if self._lane_trips else 0.0
+        return {
+            "lanes": self.lanes,
+            "queries_completed": self.completed,
+            "cache_hits": self.cache_hits,
+            "coalesced": self.coalesced,
+            "cache_hit_rate": self.cache_hits / self.completed if self.completed else 0.0,
+            "throughput_qps": self.completed / span if span > 0 else 0.0,
+            "latency_p50_s": _pct(self._latencies, 50),
+            "latency_p99_s": _pct(self._latencies, 99),
+            "latency_mean_s": float(np.mean(self._latencies)) if self._latencies else 0.0,
+            "latency_max_s": float(max(self._latencies)) if self._latencies else 0.0,
+            "queue_wait_p50_s": _pct(self._queue_waits, 50),
+            "queue_wait_p99_s": _pct(self._queue_waits, 99),
+            "phases_per_query_mean": float(np.mean(self._phases)) if self._phases else 0.0,
+            "phases_per_query_max": int(max(self._phases)) if self._phases else 0,
+            "lane_occupancy": occ,
+            "steps": self.steps,
+            "engine_trips": self.engine_trips,
+            "wall_span_s": span,
+        }
+
+    def to_json(self, **dump_kw) -> str:
+        return json.dumps(self.report(), **dump_kw)

@@ -1,0 +1,81 @@
+"""Arrival queue and per-request lifecycle bookkeeping for the SSSP server.
+
+A :class:`Request` is the unit of work the serving subsystem tracks: one
+source vertex against the server's graph, stamped at every lifecycle edge
+(arrival -> admission into a lane -> completion). Timestamps come from the
+batcher's injectable clock, so the same code serves wall-clock production
+loops and simulated-time benchmarks/tests.
+
+:class:`ArrivalQueue` is a plain FIFO — admission order is arrival order.
+Fancier policies (priorities, deadline-aware reordering, per-tenant
+fairness) belong here behind the same ``push``/``pop`` surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+
+@dataclasses.dataclass(eq=False)
+class Request:
+    """One SSSP query and its lifecycle timestamps (all in clock units).
+
+    Identity semantics (``eq=False``): requests are tracked by object, and a
+    generated ``__eq__`` would compare the (n,) ``dist`` arrays elementwise
+    — ambiguous-truth errors instead of booleans.
+    """
+
+    req_id: int
+    source: int
+    t_arrival: float
+    t_admitted: float | None = None
+    t_completed: float | None = None
+    lane: int | None = None  # None for cache hits (never occupied a lane)
+    phases: int | None = None  # engine phases spent on this query (0 = cache hit)
+    cache_hit: bool = False
+    coalesced: bool = False  # deduplicated onto an in-flight identical query
+    dist: np.ndarray | None = dataclasses.field(default=None, repr=False)
+
+    @property
+    def latency(self) -> float | None:
+        """Arrival-to-completion time; None while in flight."""
+        if self.t_completed is None:
+            return None
+        return self.t_completed - self.t_arrival
+
+    @property
+    def queue_wait(self) -> float | None:
+        """Arrival-to-admission time; None while queued."""
+        if self.t_admitted is None:
+            return None
+        return self.t_admitted - self.t_arrival
+
+
+class ArrivalQueue:
+    """FIFO of pending requests with monotonically increasing ids."""
+
+    def __init__(self):
+        self._q: deque[Request] = deque()
+        self._next_id = 0
+        self.total_enqueued = 0
+
+    def push(self, source: int, t_arrival: float) -> Request:
+        req = Request(req_id=self._next_id, source=int(source), t_arrival=float(t_arrival))
+        self._next_id += 1
+        self.total_enqueued += 1
+        self._q.append(req)
+        return req
+
+    def pop(self) -> Request:
+        return self._q.popleft()
+
+    def peek(self) -> Request | None:
+        return self._q[0] if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)

@@ -1,0 +1,338 @@
+"""Continuous batching over the resumable phase-stepper engine.
+
+:class:`ContinuousBatcher` holds B fixed lanes of ``(n,)`` SSSP state (one
+:class:`~repro.core.static_engine.BatchState`) and interleaves three moves
+per ``step()``:
+
+  1. **admit** — pop queued requests into free lanes (one
+     :func:`reset_lanes` call rewrites every admitted lane's state slice;
+     in-flight lanes pass through bitwise). Requests whose answer is
+     already in the :class:`DistCache` complete immediately without
+     occupying a lane.
+  2. **advance** — one ``step_batch`` call runs up to ``phases_per_step``
+     fused phases over all B lanes (one adjacency load per phase for the
+     whole batch, finished/empty lanes ride along as fixed points). The
+     chunk ends early the moment any live lane terminates
+     (``stop_on_lane_finish``), so finished work never idles in a lane.
+  3. **harvest** — lanes whose fringe emptied are read out, their requests
+     completed (and inserted into the cache), and the lanes freed for the
+     next admission round.
+
+Compared to the static batch front-end (``run_phased_static_batch``), which
+holds every lane until the *slowest* row of the batch terminates, a finished
+lane here is refilled with zero idle trips — that tail-idling is the
+throughput gap ``benchmarks/bench_serving.py`` measures. Correctness is
+per-lane structural: each phase applies identical
+float ops to each row regardless of the other rows, and a reset lane is
+bitwise a fresh B=1 solve, so every admitted query's distances are bit-exact
+vs ``run_phased_static`` no matter how arrivals and lane assignments
+interleave (pinned by ``tests/test_serving.py``).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, to_ell_in
+from repro.core.static_engine import (
+    EMPTY_LANE,
+    KEEP_LANE,
+    init_batch_state,
+    reset_lanes,
+    step_batch,
+)
+from repro.serving.cache import DistCache, graph_key
+from repro.serving.metrics import ServingMetrics
+from repro.serving.queue import ArrivalQueue, Request
+
+
+class DrainStalled(RuntimeError):
+    """drain() exceeded its step bound; ``.completed`` holds the finished
+    requests so a tripped safety bound does not destroy delivered work."""
+
+    def __init__(self, message: str, completed: list[Request]):
+        super().__init__(message)
+        self.completed = completed
+
+
+@jax.jit
+def _peek(state):
+    """One fused device read per step: (trips, per-lane live flag, phases)."""
+    return state.trips, jnp.any(state.status == 1, axis=1), state.phases
+
+
+@jax.jit
+def _take_row(dist, lane):
+    # traced lane index -> one compile total (a python-int index or a
+    # variable-length fancy-index would recompile per lane / per count)
+    return jax.lax.dynamic_index_in_dim(dist, lane, keepdims=False)
+
+
+class ContinuousBatcher:
+    """B-lane continuous-batching SSSP server over one shared graph.
+
+    Args:
+      g: the graph every query runs against (ELL built once, memoised).
+      lanes: number of concurrent query slots B. VMEM cost of the engine
+        state is ~8·B·n bytes (dist + status); see DESIGN.md Sec. 6.
+      phases_per_step: phase-chunk length k between admission/harvest
+        points. Chunks already end early on any lane finish, so k only
+        bounds how long a *newly arrived* query can wait while all lanes
+        are still live; large k amortises the per-step host sync. k is a
+        traced operand, so changing it does not recompile.
+      ell: optional precomputed ``to_ell_in(g)``.
+      use_pallas: kernels (True) vs ref oracles (False); bit-identical.
+      cache: optional :class:`DistCache`; duplicate sources short-circuit
+        (completed ones from the cache, in-flight ones by coalescing onto
+        the lane already solving that source).
+      clock: timestamp source (injectable for simulated-time replay).
+      retain_completed: how many completed requests ``self.completed`` keeps
+        for inspection; older ones are dropped. Each retained request holds
+        its full (n,) f32 dist row, so host memory spends 4·n bytes per
+        slot — size it to the graph (or pass 0) on large-n servers. The
+        authoritative delivery path is the return value of ``step()`` /
+        ``drain()``. ``None`` retains everything.
+    """
+
+    def __init__(
+        self,
+        g: Graph,
+        lanes: int = 8,
+        phases_per_step: int = 32,
+        ell=None,
+        use_pallas: bool = True,
+        cache: DistCache | None = None,
+        clock=time.perf_counter,
+        retain_completed: int | None = 1024,
+    ):
+        if lanes < 1:
+            raise ValueError(f"lanes must be >= 1; got {lanes}")
+        if phases_per_step < 1:
+            raise ValueError(f"phases_per_step must be >= 1; got {phases_per_step}")
+        self.g = g
+        self.lanes = int(lanes)
+        self.phases_per_step = int(phases_per_step)
+        self.ell = to_ell_in(g) if ell is None else ell
+        self.use_pallas = bool(use_pallas)
+        self.cache = cache
+        self._gkey = graph_key(g) if cache is not None else None
+        self.clock = clock
+        self.queue = ArrivalQueue()
+        self.metrics = ServingMetrics(lanes)
+        self.state = init_batch_state(g, np.full(lanes, EMPTY_LANE, np.int32))
+        # the scheduler is the sole owner of the engine state (harvested rows
+        # are copied to host before the next engine call), so donation is
+        # safe: accelerator backends then mutate the (B, n) buffers in place
+        # instead of copying them on every reset/chunk. CPU ignores donation.
+        self._donate = jax.default_backend() != "cpu"
+        # host trip counter: a python int accumulated from wrap-safe int32
+        # diffs of state.trips (the device counter may wrap after 2^31 trips
+        # of a long-lived server; chunk deltas survive the wrap)
+        self._trips = 0
+        self._trips_dev = 0  # last observed raw int32 value of state.trips
+        self._lane_req: list[Request | None] = [None] * self.lanes
+        self._inflight: dict[int, int] = {}  # source -> lane solving it
+        self._followers: dict[int, list[Request]] = {}  # lane -> coalesced reqs
+        # engine-bound backlog: arrivals are classified exactly once (cache /
+        # coalesce / engine) and engine-bound ones queue here FIFO, indexed
+        # by source so later events touch only the affected requests instead
+        # of rescanning the backlog (admission coalesces queued duplicates;
+        # dead entries are skipped lazily on pop)
+        self._ready: deque[Request] = deque()
+        self._ready_live = 0
+        self._by_source: dict[int, list[Request]] = {}
+        self.completed: deque[Request] = deque(maxlen=retain_completed)
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, source: int, t_arrival: float | None = None) -> Request:
+        """Enqueue one query; returns its tracking :class:`Request`."""
+        source = int(source)
+        if not 0 <= source < self.g.n:
+            raise ValueError(f"source must be in [0, {self.g.n}); got {source}")
+        t = self.clock() if t_arrival is None else float(t_arrival)
+        return self.queue.push(source, t)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def busy_lanes(self) -> int:
+        return sum(r is not None for r in self._lane_req)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + self._ready_live
+
+    @property
+    def idle(self) -> bool:
+        return self.pending == 0 and self.busy_lanes == 0
+
+    # -- the serving loop ---------------------------------------------------
+
+    def _admit(self) -> list[Request]:
+        """Classify new arrivals, then fill free lanes from the backlog.
+
+        Lane-free requests — cache hits and duplicates coalescible onto an
+        in-flight lane — are served at classification no matter how many
+        lanes are busy: they consume no contended resource, so overtaking an
+        engine-bound request costs it nothing. Each arrival is classified
+        exactly once; engine-bound requests stay strictly FIFO among
+        themselves. With the cache enabled, an engine-bound queued source is
+        by construction neither cached nor in flight (admission coalesces
+        the queued duplicates of the source it admits), so no event ever
+        requires rescanning the backlog.
+        """
+        served: list[Request] = []
+        now = self.clock()
+        admit_vec: np.ndarray | None = None  # lane -> new source, KEEP elsewhere
+        while self.queue:
+            req = self.queue.pop()
+            # each arrival is classified exactly once, so this is the one
+            # cache lookup of its lifetime — get() owns all hit/miss stats
+            hit = (
+                self.cache.get(self._gkey, req.source)
+                if self.cache is not None
+                else None
+            )
+            if hit is not None:
+                req.cache_hit = True
+                req.t_admitted = now
+                req.t_completed = now
+                req.phases = 0
+                req.dist = hit
+                self.completed.append(req)
+                self.metrics.record_completion(req)
+                served.append(req)
+                continue
+            if self.cache is not None and req.source in self._inflight:
+                # a lane is already solving this source: ride along instead
+                # of burning a second lane on a bit-identical solve
+                req.coalesced = True
+                req.t_admitted = now
+                self._followers.setdefault(self._inflight[req.source], []).append(req)
+                continue
+            self._ready.append(req)
+            self._by_source.setdefault(req.source, []).append(req)
+            self._ready_live += 1
+        for lane in range(self.lanes):
+            if self._lane_req[lane] is not None or not self._ready_live:
+                continue
+            while self._ready:
+                req = self._ready.popleft()
+                if req.coalesced:
+                    continue  # served out-of-band after classification
+                self._ready_live -= 1
+                peers = self._by_source[req.source]
+                peers.remove(req)
+                req.t_admitted = now
+                req.lane = lane
+                self._lane_req[lane] = req
+                if self.cache is not None:
+                    # _inflight backs coalescing, which needs the cache's
+                    # source-per-lane uniqueness invariant — without a cache
+                    # duplicate sources may legally occupy several lanes and
+                    # the map would be wrong, so don't maintain it at all
+                    self._inflight[req.source] = lane
+                    # queued duplicates of this source ride along on the lane
+                    for dup in peers:
+                        dup.coalesced = True
+                        dup.t_admitted = now
+                        self._ready_live -= 1
+                        self._followers.setdefault(lane, []).append(dup)
+                    peers.clear()
+                if not peers:
+                    del self._by_source[req.source]
+                if admit_vec is None:
+                    admit_vec = np.full(self.lanes, KEEP_LANE, np.int32)
+                admit_vec[lane] = req.source
+                break
+        if admit_vec is not None:
+            # one device call resets every admitted lane's (n,) slice,
+            # however large the burst; untouched lanes pass through bitwise
+            self.state = reset_lanes(self.state, admit_vec, donate=self._donate)
+        if not self._ready_live and self._ready:
+            # only lazily-skipped dead entries (already-coalesced requests)
+            # remain — drop them so they don't outlive the retention bound
+            self._ready.clear()
+        return served
+
+    def step(self) -> list[Request]:
+        """One scheduling round: admit, advance <= k phases, harvest.
+
+        Returns the requests completed during this round (cache hits and
+        finished lanes), each carrying its ``dist`` row.
+        """
+        done = self._admit()
+        busy = self.busy_lanes
+        if not busy:
+            # cache-hit-only round (or empty server): no live lanes means
+            # the engine would execute zero trips — skip the dispatch and
+            # the blocking device sync entirely
+            self.metrics.record_step(0, 0)
+            return done
+        trips_before = self._trips
+        self.state = step_batch(
+            self.g, self.state, self.phases_per_step, ell=self.ell,
+            use_pallas=self.use_pallas, stop_on_lane_finish=True,
+            donate=self._donate,
+        )
+        trips, active, phases = _peek(self.state)  # single host sync per chunk
+        self._trips += (int(trips) - self._trips_dev) % (1 << 32)  # wrap-safe
+        self._trips_dev = int(trips)
+        active = np.asarray(active)
+        phases = np.asarray(phases)
+        finished = [
+            lane for lane in range(self.lanes)
+            if self._lane_req[lane] is not None and not active[lane]
+        ]
+        if finished:
+            now = self.clock()
+            for lane in finished:
+                req = self._lane_req[lane]
+                req.t_completed = now
+                req.phases = int(phases[lane])
+                row = np.asarray(_take_row(self.state.dist, jnp.int32(lane)))
+                if row.flags.writeable:  # shared with followers/retention:
+                    row.flags.writeable = False  # mutation must fail loudly
+                req.dist = row
+                if self.cache is not None:
+                    self.cache.put(self._gkey, req.source, req.dist)
+                    self._inflight.pop(req.source, None)
+                self._lane_req[lane] = None
+                self.completed.append(req)
+                self.metrics.record_completion(req)
+                done.append(req)
+                for f in self._followers.pop(lane, ()):
+                    f.t_completed = now
+                    f.phases = 0
+                    f.dist = req.dist
+                    self.completed.append(f)
+                    self.metrics.record_completion(f)
+                    done.append(f)
+        self.metrics.record_step(busy, self._trips - trips_before)
+        return done
+
+    def drain(self, max_steps: int | None = None) -> list[Request]:
+        """Step until queue and lanes are empty; returns the completions.
+
+        ``max_steps`` bounds the loop (label-setting guarantees each live
+        lane terminates within n phases, so the bound only trips on misuse);
+        a tripped bound raises :class:`DrainStalled` carrying the
+        completions gathered so far.
+        """
+        out: list[Request] = []
+        steps = 0
+        while not self.idle:
+            out.extend(self.step())
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                raise DrainStalled(
+                    f"drain() exceeded max_steps={max_steps} with "
+                    f"{self.pending} queued / {self.busy_lanes} busy lanes",
+                    out,
+                )
+        return out
