@@ -23,8 +23,31 @@ Two exchange schedules are implemented (the §Perf hillclimb compares them):
                          the bandwidth-optimal schedule).
 
 The phase loop runs *inside* shard_map, so one phase = one fused XLA step
-with exactly one vector collective + three scalar pmins — this is the
-program whose HLO the multi-pod dry-run lowers for the 256/512-chip meshes.
+with exactly one vector collective + a few small ``(B,)`` reductions — this
+is the program whose HLO the multi-pod dry-run lowers for the 256/512-chip
+meshes.
+
+Two generations of the engine live here:
+
+  * the **legacy single-query program** (:func:`shard_graph` +
+    :func:`make_distributed_sssp`): one source baked into the sharded
+    state, one monolithic while_loop per call. Kept as the bit-exactness
+    reference for the stepper and as the dry-run lowering target.
+  * the **resumable sharded batch stepper** (:class:`ShardedBatchState` +
+    :func:`shard_graph_batch` / :func:`init_sharded_batch_state` /
+    :func:`step_sharded_batch` / :func:`reset_sharded_lanes` /
+    :func:`harvest_sharded`): the distributed twin of the static engine's
+    stepper API (``repro.core.static_engine``, DESIGN.md Sec. 7). B query
+    lanes share one mesh-sharded graph; every per-phase collective is a
+    ``(B,)``- or ``(B, n_loc)``-shaped vector amortised across all lanes,
+    and the loop can be chunked / early-exited / lane-reset between chunks
+    exactly like the single-device stepper — which is what lets
+    ``repro.serving.ContinuousBatcher`` serve continuous traffic over a
+    sharded graph through the same adapter surface.
+
+:func:`run_distributed` is a thin B=1 wrapper over the stepper (bit-exact
+against the legacy program on both exchange schedules, pinned by
+``tests/test_distributed_batch.py``).
 """
 from __future__ import annotations
 
@@ -37,6 +60,13 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.graph import Graph
+from repro.core.static_engine import (
+    EMPTY_LANE,
+    KEEP_LANE,
+    BatchedResult,
+    _fresh_rows,
+    validate_sources,
+)
 from repro.sharding.compat import shard_map_compat
 
 INF = jnp.inf
@@ -64,9 +94,14 @@ class ShardedGraph:
     out_min: jax.Array  # (n_pad,) f32
 
 
-def shard_graph(g: Graph, num_shards: int, source: int = 0,
-                pad_multiple: int = 8) -> ShardedGraph:
-    """Block-partition vertices and group out-edges by owning shard (numpy)."""
+def _partition_edges(g: Graph, num_shards: int, pad_multiple: int):
+    """Block-partition vertices; group out-edges by owning shard (numpy).
+
+    Returns ``(n_loc, n_pad, src_l, dst_l, w_l, out_deg)`` where the edge
+    arrays are ``(num_shards, e_loc)`` with local (in-block) source ids,
+    global destinations, and +inf-padded weights, and ``out_deg`` is the
+    ``(n_pad,)`` int32 real-out-degree vector (0 on padding vertices).
+    """
     n = g.n
     n_loc = -(-n // num_shards)
     n_loc = -(-n_loc // pad_multiple) * pad_multiple
@@ -76,6 +111,7 @@ def shard_graph(g: Graph, num_shards: int, source: int = 0,
     w = np.asarray(g.w)
     real = np.isfinite(w)
     src, dst, w = src[real], dst[real], w[real]
+    out_deg = np.bincount(src, minlength=n_pad).astype(np.int32)
     blk = src // n_loc
     counts = np.bincount(blk, minlength=num_shards)
     e_loc = max(int(counts.max()) if counts.size else 1, 1)
@@ -89,18 +125,40 @@ def shard_graph(g: Graph, num_shards: int, source: int = 0,
     src_l[blk, slot] = src - blk * n_loc
     dst_l[blk, slot] = dst
     w_l[blk, slot] = w
+    return n_loc, n_pad, src_l, dst_l, w_l, out_deg
 
+
+def _pad_min_vec(vec, n_pad: int) -> jnp.ndarray:
+    v = np.asarray(vec)
+    return jnp.asarray(
+        np.concatenate([v, np.full(n_pad - v.shape[0], np.inf, np.float32)])
+    )
+
+
+def shard_graph(g: Graph, num_shards: int, source: int = 0,
+                pad_multiple: int = 8) -> ShardedGraph:
+    """Shard the graph and bake in single-query init state (legacy program).
+
+    ``source`` must be a real vertex id in ``[0, n)``: numpy wrap-around
+    indexing would otherwise seed a *different* vertex for a negative id
+    (silently solving the wrong query), and a source in the padding range
+    ``[n, n_pad)`` would seed an unreachable padding vertex (silently
+    all-inf distances).
+    """
+    if not 0 <= int(source) < g.n:
+        raise ValueError(f"source must be in [0, {g.n}); got {source}")
+    n = g.n
+    n_loc, n_pad, src_l, dst_l, w_l, _ = _partition_edges(g, num_shards, pad_multiple)
     d0 = np.full(n_pad, np.inf, np.float32)
     d0[source] = 0.0
     st0 = np.zeros(n_pad, np.int32)
     st0[source] = 1
-    pad_inf = np.full(n_pad - n, np.inf, np.float32)
     return ShardedGraph(
         n=n, n_pad=n_pad, n_loc=n_loc, num_shards=num_shards,
         src_local=jnp.asarray(src_l), dst=jnp.asarray(dst_l), w=jnp.asarray(w_l),
         d_init=jnp.asarray(d0), status_init=jnp.asarray(st0),
-        in_min=jnp.asarray(np.concatenate([np.asarray(g.in_min_static), pad_inf])),
-        out_min=jnp.asarray(np.concatenate([np.asarray(g.out_min_static), pad_inf])),
+        in_min=_pad_min_vec(g.in_min_static, n_pad),
+        out_min=_pad_min_vec(g.out_min_static, n_pad),
     )
 
 
@@ -190,13 +248,366 @@ def make_distributed_sssp(mesh: Mesh, axes, *, schedule: str = "reduce_scatter",
     return run
 
 
-def run_distributed(g: Graph, mesh: Mesh, axes, source: int = 0,
-                    schedule: str = "reduce_scatter"):
-    """Convenience wrapper: shard, run, return (dist (n,), phases)."""
+# ---------------------------------------------------------------------------
+# Resumable sharded batch stepper (DESIGN.md Sec. 7)
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["src_local", "dst", "w", "in_min", "out_min", "out_deg"],
+    meta_fields=["n", "n_pad", "n_loc", "num_shards"],
+)
+@dataclasses.dataclass(frozen=True)
+class ShardedBatchGraph:
+    """Query-independent sharded graph for the batch stepper.
+
+    Unlike the legacy :class:`ShardedGraph` it bakes in *no* source state —
+    queries live in :class:`ShardedBatchState` lanes, so one sharded graph
+    serves arbitrarily many batches/resets (the serving workload).
+    """
+
+    n: int
+    n_pad: int
+    n_loc: int
+    num_shards: int
+    src_local: jax.Array  # (P, E_loc) int32, local (in-block) source index
+    dst: jax.Array  # (P, E_loc) int32, global destination
+    w: jax.Array  # (P, E_loc) f32, +inf padding
+    in_min: jax.Array  # (n_pad,) f32, +inf on padding vertices
+    out_min: jax.Array  # (n_pad,) f32, +inf on padding vertices
+    out_deg: jax.Array  # (n_pad,) int32 real out-degrees (0 on padding)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["dist", "status", "trips", "phases", "sum_fringe", "relax_edges"],
+    meta_fields=["n"],
+)
+@dataclasses.dataclass(frozen=True)
+class ShardedBatchState:
+    """Resumable state of a sharded batched phase loop (one row per lane).
+
+    The mesh twin of :class:`~repro.core.static_engine.BatchState`: a pure
+    fixed-shape pytree whose ``(B, n_pad)`` vertex arrays are block-sharded
+    over the mesh's vertex axis inside ``step_sharded_batch`` (each device
+    holds ``(B, n_loc)``). Same counter semantics as the static stepper, so
+    :func:`harvest_sharded` yields a drop-in ``BatchedResult``.
+    """
+
+    n: int  # true vertex count; columns in [n, n_pad) are padding
+    dist: jax.Array  # (B, n_pad) f32 tentative distances
+    status: jax.Array  # (B, n_pad) int32 (0=U, 1=F, 2=S)
+    trips: jax.Array  # scalar int32 loop trips since init (wrap-safe deltas)
+    phases: jax.Array  # (B,) int32 phases each lane's current query was live
+    sum_fringe: jax.Array  # (B,) int32 per-lane sum over live phases of |F|
+    relax_edges: jax.Array  # (B,) int32 per-lane out-edges relaxed
+
+    @property
+    def num_lanes(self) -> int:
+        return self.dist.shape[0]
+
+    @property
+    def n_pad(self) -> int:
+        return self.dist.shape[1]
+
+
+def shard_graph_batch(g: Graph, num_shards: int,
+                      pad_multiple: int = 8) -> ShardedBatchGraph:
+    """Block-partition vertices for the batch stepper (no baked-in source)."""
+    n_loc, n_pad, src_l, dst_l, w_l, out_deg = _partition_edges(
+        g, num_shards, pad_multiple
+    )
+    return ShardedBatchGraph(
+        n=g.n, n_pad=n_pad, n_loc=n_loc, num_shards=num_shards,
+        src_local=jnp.asarray(src_l), dst=jnp.asarray(dst_l), w=jnp.asarray(w_l),
+        in_min=_pad_min_vec(g.in_min_static, n_pad),
+        out_min=_pad_min_vec(g.out_min_static, n_pad),
+        out_deg=jnp.asarray(out_deg),
+    )
+
+
+def init_sharded_batch_state(sg: ShardedBatchGraph, sources) -> ShardedBatchState:
+    """Fresh ``(B, n_pad)`` stepper state for B lanes over one sharded graph.
+
+    ``sources[i] == -1`` (:data:`~repro.core.static_engine.EMPTY_LANE`)
+    leaves lane ``i`` empty. Sources are validated against the *true* vertex
+    count ``sg.n``, never ``n_pad``: an id in the padding range would seed a
+    fringe on a vertex with no edges and silently answer all-inf.
+    """
+    src_np = validate_sources(
+        sources, sg.n, EMPTY_LANE, f"in [0, {sg.n}) or -1 for an empty lane"
+    )
+    d0, st0 = _fresh_rows(jnp.asarray(src_np), sg.n_pad)
+    b = src_np.shape[0]
+    # one distinct buffer per counter: a shared zeros array would make the
+    # state pytree alias itself, and donating it then fails ("donate the
+    # same buffer twice") on the first donated step/reset
+    return ShardedBatchState(
+        n=sg.n, dist=d0, status=st0, trips=jnp.int32(0),
+        phases=jnp.zeros((b,), jnp.int32),
+        sum_fringe=jnp.zeros((b,), jnp.int32),
+        relax_edges=jnp.zeros((b,), jnp.int32),
+    )
+
+
+def _exchange_min_batch(contrib, axes, n_loc, schedule):
+    """Batched :func:`_exchange_min`: combine (B, n_pad) candidate vectors
+    across devices, return this device's (B, n_loc) block. One vector
+    collective per phase serves all B lanes."""
+    if schedule == "allreduce":
+        full = jax.lax.pmin(contrib, axes)
+        idx = jax.lax.axis_index(axes)
+        return jax.lax.dynamic_slice_in_dim(full, idx * n_loc, n_loc, axis=1)
+    num = contrib.shape[1] // n_loc
+    blocks = contrib.reshape(contrib.shape[0], num, n_loc)
+    # Slice j of axis 1 is our contribution to shard j; after all_to_all it
+    # holds shard j's contribution to OUR block (exactly the legacy schedule,
+    # with the lane axis riding along in one message).
+    recv = jax.lax.all_to_all(blocks, axes, split_axis=1, concat_axis=1,
+                              tiled=False)
+    return jnp.min(recv, axis=1)
+
+
+_SHARDED_STEP_CACHE: dict = {}
+
+
+def _get_sharded_step(mesh: Mesh, axes, schedule: str,
+                      stop_on_lane_finish: bool, donate: bool):
+    """Build (and memoise) the jitted SPMD chunked-step program.
+
+    One compiled program per (mesh, axes, schedule, early-exit flag,
+    donation) — ``k_phases`` and the graph/state arrays are traced operands,
+    so chunk sizes and repeated calls never recompile.
+    """
+    key = (mesh, tuple(axes), schedule, bool(stop_on_lane_finish), bool(donate))
+    hit = _SHARDED_STEP_CACHE.get(key)
+    if hit is not None:
+        return hit
+    if schedule not in ("allreduce", "reduce_scatter"):
+        raise ValueError(f"unknown exchange schedule: {schedule!r}")
+    axes = tuple(axes)
+    bspec = P(None, axes)  # (B, n_pad) lane-replicated, vertex-sharded
+    vspec = P(axes)
+    espec = P(axes, None)
+    rspec = P()
+    num_shards = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def spmd(d, status, phases, sum_f, redges, trips,
+             in_min, out_min, out_deg, src_l, dst_g, w, k):
+        # shapes inside shard_map: d/status (B, n_loc); in_min/out_min/
+        # out_deg (n_loc,); edges (1, E_loc); counters replicated
+        src_l, dst_g, w = src_l[0], dst_g[0], w[0]
+        n_loc = d.shape[1]
+        n_pad = n_loc * num_shards
+        start = trips
+
+        def live_vec(status):
+            return jax.lax.psum(
+                jnp.sum(status == 1, axis=1, dtype=jnp.int32), axes
+            ) > 0
+
+        live0 = live_vec(status)  # (B,) lanes live at chunk entry
+
+        def body(carry):
+            d, status, phases, sum_f, redges, trips, _ = carry
+            fringe = status == 1
+            # one fused (2, B) pmin: per-lane min fringe distance and L_out
+            mins = jax.lax.pmin(
+                jnp.stack([
+                    jnp.min(jnp.where(fringe, d, INF), axis=1),
+                    jnp.min(jnp.where(fringe, d + out_min[None], INF), axis=1),
+                ]),
+                axes,
+            )
+            min_fd, l_out = mins[0], mins[1]
+            settle = fringe & (
+                (d - in_min[None] <= min_fd[:, None])
+                | (d <= l_out[:, None])
+                | (d <= min_fd[:, None])
+            )
+            cand = jnp.where(settle[:, src_l], d[:, src_l] + w[None], INF)
+            contrib = jax.vmap(
+                lambda c: jax.ops.segment_min(c, dst_g, num_segments=n_pad)
+            )(cand)
+            upd = _exchange_min_batch(contrib, axes, n_loc, schedule)
+            new_d = jnp.minimum(d, upd)
+            new_status = jnp.where(
+                settle, 2, jnp.where((status == 0) & (upd < INF), 1, status)
+            )
+            # one fused (3, B) psum: |F| this phase, relaxed out-edges, and
+            # the post-update live-lane counts the loop condition needs
+            counts = jax.lax.psum(
+                jnp.stack([
+                    jnp.sum(fringe, axis=1, dtype=jnp.int32),
+                    jnp.sum(jnp.where(settle, out_deg[None], 0),
+                            axis=1, dtype=jnp.int32),
+                    jnp.sum(new_status == 1, axis=1, dtype=jnp.int32),
+                ]),
+                axes,
+            )
+            n_f, d_redges, live_cnt = counts[0], counts[1], counts[2]
+            new_live = live_cnt > 0
+            go = jnp.any(new_live) & (trips + 1 - start < k)
+            if stop_on_lane_finish:
+                # end the chunk as soon as any entry-live lane terminates,
+                # so the scheduler can refill it instead of idling it out
+                go &= jnp.all(new_live == live0)
+            alive = (n_f > 0).astype(jnp.int32)  # finished lanes stop counting
+            return (new_d, new_status, phases + alive, sum_f + n_f,
+                    redges + d_redges, trips + 1, go)
+
+        def cond(carry):
+            return carry[-1]
+
+        go0 = jnp.any(live0) & (k > 0)
+        carry = (d, status, phases, sum_f, redges, trips, go0)
+        d, status, phases, sum_f, redges, trips, _ = jax.lax.while_loop(
+            cond, body, carry
+        )
+        return d, status, phases, sum_f, redges, trips
+
+    mapped = shard_map_compat(
+        spmd,
+        mesh=mesh,
+        in_specs=(bspec, bspec, rspec, rspec, rspec, rspec,
+                  vspec, vspec, vspec, espec, espec, espec, rspec),
+        out_specs=(bspec, bspec, rspec, rspec, rspec, rspec),
+    )
+
+    def step(state: ShardedBatchState, src_l, dst_g, w, in_min, out_min,
+             out_deg, k):
+        d, status, phases, sum_f, redges, trips = mapped(
+            state.dist, state.status, state.phases, state.sum_fringe,
+            state.relax_edges, state.trips,
+            in_min, out_min, out_deg, src_l, dst_g, w, k,
+        )
+        return dataclasses.replace(
+            state, dist=d, status=status, phases=phases, sum_fringe=sum_f,
+            relax_edges=redges, trips=trips,
+        )
+
+    fn = jax.jit(step, donate_argnums=(0,) if donate else ())
+    _SHARDED_STEP_CACHE[key] = fn
+    return fn
+
+
+def step_sharded_batch(
+    sg: ShardedBatchGraph,
+    state: ShardedBatchState,
+    mesh: Mesh,
+    axes,
+    k_phases: int,
+    schedule: str = "reduce_scatter",
+    stop_on_lane_finish: bool = False,
+    donate: bool = False,
+) -> ShardedBatchState:
+    """Advance the sharded phase loop by up to ``k_phases`` more trips.
+
+    Same contract as :func:`~repro.core.static_engine.step_batch`: returns
+    after ``k_phases`` trips, earlier when every lane's fringe is empty, or
+    — with ``stop_on_lane_finish`` — as soon as any lane that was live on
+    entry terminates. ``k_phases`` is a traced operand (no recompiles across
+    chunk sizes); one compiled program is cached per
+    (mesh, axes, schedule, flags).
+
+    ``donate=True`` donates the state's buffers for in-place update on
+    accelerator backends — same aliasing caveat as the static stepper:
+    results of an earlier :func:`harvest_sharded` alias them, so copy before
+    donating.
+    """
     if isinstance(axes, str):
         axes = (axes,)
     num = int(np.prod([mesh.shape[a] for a in axes]))
-    sg = shard_graph(g, num, source=source)
-    fn = make_distributed_sssp(mesh, axes, schedule=schedule)
-    d, phases = fn(sg, jnp.int32(g.n + 1))
-    return d[: g.n], phases
+    if num != sg.num_shards:
+        raise ValueError(
+            f"graph was sharded for {sg.num_shards} devices but mesh axes "
+            f"{axes} span {num}"
+        )
+    fn = _get_sharded_step(mesh, axes, schedule, stop_on_lane_finish, donate)
+    return fn(state, sg.src_local, sg.dst, sg.w, sg.in_min, sg.out_min,
+              sg.out_deg, jnp.int32(k_phases))
+
+
+def _reset_sharded_impl(state: ShardedBatchState, sources) -> ShardedBatchState:
+    touch = sources >= EMPTY_LANE  # KEEP_LANE rows pass through unchanged
+    fresh_d, fresh_s = _fresh_rows(sources, state.dist.shape[1])
+
+    def ctr(old):
+        return jnp.where(touch, 0, old)
+
+    return dataclasses.replace(
+        state,
+        dist=jnp.where(touch[:, None], fresh_d, state.dist),
+        status=jnp.where(touch[:, None], fresh_s, state.status),
+        phases=ctr(state.phases),
+        sum_fringe=ctr(state.sum_fringe),
+        relax_edges=ctr(state.relax_edges),
+    )
+
+
+_reset_sharded = jax.jit(_reset_sharded_impl)
+_reset_sharded_donate = jax.jit(_reset_sharded_impl, donate_argnums=(0,))
+
+
+def reset_sharded_lanes(state: ShardedBatchState, sources,
+                        donate: bool = False) -> ShardedBatchState:
+    """Re-initialise several lanes in one device call (sharded twin of
+    :func:`~repro.core.static_engine.reset_lanes`).
+
+    ``sources`` is ``(B,)``: ``-2`` keeps a lane's bits untouched, ``-1``
+    parks it empty, a vertex id in ``[0, n)`` starts a fresh query there.
+    Ids are validated against the true ``n`` — the padding range is invalid.
+    """
+    src_np = validate_sources(
+        sources, state.n, KEEP_LANE,
+        f"in [0, {state.n}), -1 (park) or -2 (keep)",
+        expect_lanes=state.num_lanes,
+    )
+    fn = _reset_sharded_donate if donate else _reset_sharded
+    return fn(state, jnp.asarray(src_np))
+
+
+def sharded_lanes_active(state: ShardedBatchState) -> np.ndarray:
+    """(B,) bool host array: which lanes still have a non-empty fringe."""
+    return np.asarray(jnp.any(state.status == 1, axis=1))
+
+
+def harvest_sharded(state: ShardedBatchState) -> BatchedResult:
+    """Freeze a sharded stepper state into a (padding-free) BatchedResult."""
+    return BatchedResult(
+        dist=state.dist[:, : state.n],
+        status=state.status[:, : state.n].astype(jnp.int8),
+        phases=state.phases,
+        sum_fringe=state.sum_fringe,
+        relax_edges=state.relax_edges,
+        total_phases=state.trips,
+    )
+
+
+def run_sharded_batch(g: Graph, mesh: Mesh, axes, sources,
+                      schedule: str = "reduce_scatter",
+                      max_phases: int | None = None) -> BatchedResult:
+    """One-shot batched distributed solve: shard, init, drain, harvest."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    num = int(np.prod([mesh.shape[a] for a in axes]))
+    sg = shard_graph_batch(g, num)
+    state = init_sharded_batch_state(sg, sources)
+    cap = int(max_phases) if max_phases is not None else g.n + 1
+    state = step_sharded_batch(sg, state, mesh, axes, cap, schedule=schedule)
+    return harvest_sharded(state)
+
+
+def run_distributed(g: Graph, mesh: Mesh, axes, source: int = 0,
+                    schedule: str = "reduce_scatter"):
+    """Convenience wrapper: shard, run, return (dist (n,), phases).
+
+    Since the stepper refactor this is a thin B=1 front-end over
+    :func:`step_sharded_batch`; results are bit-exact against the legacy
+    single-query program (``tests/test_distributed_batch.py`` pins it).
+    """
+    if not 0 <= int(source) < g.n:
+        raise ValueError(f"source must be in [0, {g.n}); got {source}")
+    res = run_sharded_batch(g, mesh, axes, [int(source)], schedule=schedule)
+    return res.dist[0], res.phases[0]

@@ -57,6 +57,14 @@ def from_coo(src, dst, w, n: int, pad_to: int | None = None) -> Graph:
     assert src.shape == dst.shape == w.shape
     if np.any(w < 0):
         raise ValueError("edge costs must be non-negative")
+    # `w < 0` is False for NaN, so check non-finiteness explicitly: a NaN
+    # weight would otherwise poison every min-plus reduction downstream
+    # (NaN propagates through minimum) and silently corrupt all distances.
+    # +inf alone is allowed — it is the padding sentinel, neutral under min.
+    if np.any(~np.isfinite(w) & ~(w == np.inf)):
+        raise ValueError(
+            "edge costs must be finite (or +inf for padding); got NaN/-inf"
+        )
     m = src.shape[0]
     if pad_to is not None and pad_to > m:
         pad = pad_to - m

@@ -37,7 +37,10 @@ class PhasedResult:
     status: jax.Array  # (n,) int8
     phases: jax.Array  # scalar int32: number of phases executed
     sum_fringe: jax.Array  # scalar int32: sum over phases of |F| (paper Table 2)
-    settled_per_phase: jax.Array  # (trace_len,) int32 (0 beyond `phases`)
+    settled_per_phase: jax.Array | None  # (trace_len,) int32 (0 beyond
+    #   `phases`), or None when the producing engine does not trace per-phase
+    #   settles (run_phased_static: the stepper's state is fixed-shape across
+    #   chunking, so it carries no trace buffer)
     relax_edges: jax.Array  # scalar int32: total out-edges relaxed (work)
 
 

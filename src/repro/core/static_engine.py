@@ -117,6 +117,32 @@ class BatchedResult:
     #   query the lanes ever served) when harvested from a resumed state
 
 
+def validate_sources(sources, n: int, lo: int, range_desc: str,
+                     expect_lanes: int | None = None) -> np.ndarray:
+    """Validate a host-side source vector and return it as int32 numpy.
+
+    The one gatekeeper every lane-initialisation front-end funnels through
+    (static and sharded engines alike): rejects non-integer dtypes, empty or
+    non-1-D shapes, and any id outside ``[lo, n)`` — in the *original* dtype,
+    because casting first would let ids beyond int32 wrap into the valid
+    range and silently answer the wrong query.
+    """
+    src_np = np.atleast_1d(np.asarray(sources))
+    if expect_lanes is not None and src_np.shape != (expect_lanes,):
+        raise ValueError(
+            f"sources must have shape ({expect_lanes},); got {src_np.shape}"
+        )
+    if src_np.ndim != 1 or src_np.size == 0:
+        raise ValueError(
+            f"sources must be a non-empty (B,) vector; got shape {src_np.shape}"
+        )
+    if src_np.dtype.kind not in "iu":
+        raise ValueError(f"sources must be integer vertex ids; got {src_np.dtype}")
+    if int(src_np.min()) < lo or int(src_np.max()) >= n:
+        raise ValueError(f"sources must be {range_desc}; got {src_np}")
+    return src_np.astype(np.int32)
+
+
 def _fresh_rows(sources, n: int):
     """(B, n) dist/status rows for fresh queries: the single source of truth
     for lane initialisation — init and both reset paths share it, which is
@@ -162,18 +188,10 @@ def init_batch_state(g: Graph, sources) -> BatchState:
     all-+inf fixed point with no fringe that costs nothing per phase and can
     later be populated with :func:`reset_lane`.
     """
-    src_np = np.atleast_1d(np.asarray(sources))
-    if src_np.ndim != 1 or src_np.size == 0:
-        raise ValueError(f"sources must be a non-empty (B,) vector; got shape {src_np.shape}")
-    if src_np.dtype.kind not in "iu":
-        raise ValueError(f"sources must be integer vertex ids; got {src_np.dtype}")
-    # range-check in the original dtype: casting first would let ids beyond
-    # int32 wrap into the valid range and silently answer the wrong query
-    if int(src_np.min()) < EMPTY_LANE or int(src_np.max()) >= g.n:
-        raise ValueError(
-            f"sources must be in [0, {g.n}) or -1 for an empty lane; got {src_np}"
-        )
-    return _init_state(g, jnp.asarray(src_np.astype(np.int32)))
+    src_np = validate_sources(
+        sources, g.n, EMPTY_LANE, f"in [0, {g.n}) or -1 for an empty lane"
+    )
+    return _init_state(g, jnp.asarray(src_np))
 
 
 def _step_batch_impl(
@@ -322,19 +340,13 @@ def reset_lanes(state: BatchState, sources, donate: bool = False) -> BatchState:
     calls, but an admission burst costs one dispatch regardless of how many
     lanes it refills (the continuous batcher's admission path).
     """
-    src_np = np.asarray(sources)
-    if src_np.shape != (state.num_lanes,):
-        raise ValueError(
-            f"sources must have shape ({state.num_lanes},); got {src_np.shape}"
-        )
-    if src_np.dtype.kind not in "iu":
-        raise ValueError(f"sources must be integer vertex ids; got {src_np.dtype}")
-    if int(src_np.min()) < KEEP_LANE or int(src_np.max()) >= state.n:
-        raise ValueError(
-            f"sources must be in [0, {state.n}), -1 (park) or -2 (keep); got {src_np}"
-        )
+    src_np = validate_sources(
+        sources, state.n, KEEP_LANE,
+        f"in [0, {state.n}), -1 (park) or -2 (keep)",
+        expect_lanes=state.num_lanes,
+    )
     fn = _reset_lanes_donate if donate else _reset_lanes
-    return fn(state, jnp.asarray(src_np.astype(np.int32)))
+    return fn(state, jnp.asarray(src_np))
 
 
 def reset_lane(
@@ -397,7 +409,11 @@ def run_phased_static(
         status=state.status[0].astype(jnp.int8),
         phases=state.phases[0],
         sum_fringe=state.sum_fringe[0],
-        settled_per_phase=jnp.zeros((1,), jnp.int32),
+        # the stepper does not record a per-phase settled trace (its state is
+        # fixed-shape across arbitrary chunking); None means "not traced" —
+        # never a fabricated all-zeros vector a consumer could mistake for a
+        # real profile. Use run_phased(..., trace_len=n+1) for the trace.
+        settled_per_phase=None,
         relax_edges=state.relax_edges[0],
     )
 
@@ -426,19 +442,9 @@ def run_phased_static_batch(
     """
     if ell is None:
         ell = to_ell_in(g)
-    src_np = np.atleast_1d(np.asarray(sources))
-    if src_np.ndim != 1:
-        raise ValueError(f"sources must be a (B,) vector; got shape {src_np.shape}")
-    if src_np.size == 0:
-        raise ValueError("sources must be non-empty")
-    if src_np.dtype.kind not in "iu":
-        raise ValueError(f"sources must be integer vertex ids; got {src_np.dtype}")
-    # range-check before the int32 cast (wider ids must not wrap into range),
-    # and fail loudly: out-of-range ids would otherwise be silently dropped
-    # by the scatter (all-inf row, 0 phases)
-    if int(src_np.min()) < 0 or int(src_np.max()) >= g.n:
-        raise ValueError(f"sources must be in [0, {g.n}); got {src_np}")
-    src_np = src_np.astype(np.int32)
+    # fail loudly on any invalid id: out-of-range sources would otherwise be
+    # silently dropped by the scatter (all-inf row, 0 phases)
+    src_np = validate_sources(sources, g.n, 0, f"in [0, {g.n})")
     cap = int(max_phases) if max_phases is not None else g.n + 1
     state = init_batch_state(g, src_np)
     state = step_batch(g, state, cap, ell=ell, use_pallas=use_pallas)

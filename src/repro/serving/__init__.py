@@ -1,13 +1,17 @@
-"""Continuous-batching SSSP serving subsystem (DESIGN.md Sec. 6).
+"""Continuous-batching SSSP serving subsystem (DESIGN.md Sec. 6–7).
 
-Turns the resumable phase-stepper engine (``repro.core.static_engine``) into
-an online server: queries arrive asynchronously, a :class:`ContinuousBatcher`
-keeps B engine lanes saturated by refilling finished rows from an
-:class:`ArrivalQueue`, duplicate queries short-circuit through a
-:class:`DistCache`, and :class:`ServingMetrics` emits the throughput/latency
-report. Every admitted query's distances are bit-exact vs a standalone
+Turns a resumable phase-stepper engine into an online server: queries
+arrive asynchronously, a :class:`ContinuousBatcher` keeps B engine lanes
+saturated by refilling finished rows from an :class:`ArrivalQueue`,
+duplicate queries short-circuit through a :class:`DistCache`, and
+:class:`ServingMetrics` emits the throughput/latency report. The engine is
+pluggable behind the :class:`EngineBackend` adapter — the single-device
+static stepper (:class:`StaticBackend`, default) or the mesh-sharded
+stepper (:class:`ShardedBackend`) — with identical scheduling semantics.
+Every admitted query's distances are bit-exact vs a standalone
 ``run_phased_static`` solve.
 """
+from repro.serving.backends import EngineBackend, ShardedBackend, StaticBackend
 from repro.serving.cache import DistCache, graph_key
 from repro.serving.metrics import ServingMetrics
 from repro.serving.queue import ArrivalQueue, Request
@@ -16,6 +20,9 @@ from repro.serving.scheduler import ContinuousBatcher, DrainStalled
 __all__ = [
     "ContinuousBatcher",
     "DrainStalled",
+    "EngineBackend",
+    "StaticBackend",
+    "ShardedBackend",
     "ArrivalQueue",
     "Request",
     "DistCache",

@@ -1,0 +1,176 @@
+"""Engine backend adapters: the seam between scheduler and solver.
+
+:class:`ContinuousBatcher` never touches an engine directly — it drives an
+:class:`EngineBackend`, a five-method adapter (``init`` / ``step`` /
+``reset_lanes`` / ``peek`` / ``take_row``) over any resumable B-lane phase
+stepper. Two implementations exist:
+
+  * :class:`StaticBackend` — the single-device Pallas stepper
+    (``repro.core.static_engine``): ``(B, n)`` state, ELL pull kernels.
+  * :class:`ShardedBackend` — the mesh stepper
+    (``repro.core.distributed``): ``(B, n_pad)`` state block-sharded over
+    the mesh's vertex axis, COO push + one vector collective per phase.
+
+Both expose identical semantics — a lane is a fixed point when empty or
+finished, a reset lane is bitwise a fresh solve, ``stop_on_lane_finish``
+ends a chunk on the first lane termination — so the scheduler's
+admission/coalescing/cache/metrics machinery is backend-agnostic and every
+completed request's distances are bit-exact against a standalone
+``run_phased_static`` solve regardless of which engine served it
+(pinned by the shared parametrised test in ``tests/test_serving.py``).
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, to_ell_in
+from repro.core.static_engine import (
+    EMPTY_LANE,
+    BatchState,
+    init_batch_state,
+    reset_lanes,
+    step_batch,
+)
+
+
+@jax.jit
+def _peek(state):
+    """One fused device read per step: (trips, per-lane live flag, phases)."""
+    return state.trips, jnp.any(state.status == 1, axis=1), state.phases
+
+
+@jax.jit
+def _take_row(dist, lane):
+    # traced lane index -> one compile total (a python-int index or a
+    # variable-length fancy-index would recompile per lane / per count)
+    return jax.lax.dynamic_index_in_dim(dist, lane, keepdims=False)
+
+
+@runtime_checkable
+class EngineBackend(Protocol):
+    """What the scheduler needs from a resumable B-lane engine."""
+
+    g: Graph
+
+    @property
+    def n(self) -> int:
+        """Vertex count queries are validated against."""
+        ...
+
+    def init(self, lanes: int):
+        """Fresh all-empty state with ``lanes`` lanes."""
+        ...
+
+    def step(self, state, k_phases: int, *, stop_on_lane_finish: bool = True,
+             donate: bool = False):
+        """Advance up to ``k_phases`` trips (early exit on lane finish)."""
+        ...
+
+    def reset_lanes(self, state, sources: np.ndarray, *, donate: bool = False):
+        """Re-init the lanes ``sources`` selects (KEEP_LANE passes through)."""
+        ...
+
+    def peek(self, state) -> tuple[int, np.ndarray, np.ndarray]:
+        """(trips, (B,) bool live flags, (B,) int phases) — one device sync."""
+        ...
+
+    def take_row(self, state, lane: int) -> np.ndarray:
+        """Lane ``lane``'s (n,) f32 distance row as a fresh host-owned array
+        (never aliasing the state buffers — the scheduler donates those to
+        the next engine call)."""
+        ...
+
+
+class StaticBackend:
+    """Adapter over the single-device static-engine stepper."""
+
+    def __init__(self, g: Graph, ell=None, use_pallas: bool = True):
+        self.g = g
+        self.ell = to_ell_in(g) if ell is None else ell
+        self.use_pallas = bool(use_pallas)
+
+    @property
+    def n(self) -> int:
+        return self.g.n
+
+    def init(self, lanes: int) -> BatchState:
+        return init_batch_state(self.g, np.full(lanes, EMPTY_LANE, np.int32))
+
+    def step(self, state, k_phases, *, stop_on_lane_finish=True, donate=False):
+        return step_batch(
+            self.g, state, k_phases, ell=self.ell, use_pallas=self.use_pallas,
+            stop_on_lane_finish=stop_on_lane_finish, donate=donate,
+        )
+
+    def reset_lanes(self, state, sources, *, donate=False):
+        return reset_lanes(state, sources, donate=donate)
+
+    def peek(self, state):
+        trips, active, phases = _peek(state)
+        return int(trips), np.asarray(active), np.asarray(phases)
+
+    def take_row(self, state, lane):
+        return np.asarray(_take_row(state.dist, jnp.int32(lane)))
+
+
+class ShardedBackend:
+    """Adapter over the mesh-sharded batch stepper.
+
+    The same scheduler then serves continuous traffic against a graph whose
+    vertex state lives block-partitioned across the device mesh — lanes are
+    rows of the ``(B, n_pad)`` sharded state, and each scheduling round's
+    ``step`` runs the fused shard_map phase loop (DESIGN.md Sec. 7).
+    """
+
+    def __init__(self, g: Graph, mesh, axes, schedule: str = "reduce_scatter",
+                 pad_multiple: int = 8):
+        # imported lazily-ish at construction: the distributed module pulls
+        # in shard_map machinery the static serving path never needs
+        from repro.core.distributed import shard_graph_batch
+
+        if isinstance(axes, str):
+            axes = (axes,)
+        self.g = g
+        self.mesh = mesh
+        self.axes = tuple(axes)
+        self.schedule = schedule
+        num = int(np.prod([mesh.shape[a] for a in self.axes]))
+        self.sg = shard_graph_batch(g, num, pad_multiple=pad_multiple)
+
+    @property
+    def n(self) -> int:
+        return self.g.n
+
+    def init(self, lanes: int):
+        from repro.core.distributed import init_sharded_batch_state
+
+        return init_sharded_batch_state(
+            self.sg, np.full(lanes, EMPTY_LANE, np.int32)
+        )
+
+    def step(self, state, k_phases, *, stop_on_lane_finish=True, donate=False):
+        from repro.core.distributed import step_sharded_batch
+
+        return step_sharded_batch(
+            self.sg, state, self.mesh, self.axes, k_phases,
+            schedule=self.schedule, stop_on_lane_finish=stop_on_lane_finish,
+            donate=donate,
+        )
+
+    def reset_lanes(self, state, sources, *, donate=False):
+        from repro.core.distributed import reset_sharded_lanes
+
+        return reset_sharded_lanes(state, sources, donate=donate)
+
+    def peek(self, state):
+        trips, active, phases = _peek(state)
+        return int(trips), np.asarray(active), np.asarray(phases)
+
+    def take_row(self, state, lane):
+        # slice off the padding columns so consumers (cache, parity checks)
+        # see the same (n,) row shape as the static backend
+        return np.asarray(_take_row(state.dist, jnp.int32(lane)))[: state.n]

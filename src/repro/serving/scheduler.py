@@ -1,7 +1,9 @@
-"""Continuous batching over the resumable phase-stepper engine.
+"""Continuous batching over a resumable phase-stepper engine.
 
-:class:`ContinuousBatcher` holds B fixed lanes of ``(n,)`` SSSP state (one
-:class:`~repro.core.static_engine.BatchState`) and interleaves three moves
+:class:`ContinuousBatcher` holds B fixed lanes of SSSP state behind an
+:class:`~repro.serving.backends.EngineBackend` adapter (the single-device
+static stepper by default, or the mesh-sharded stepper via
+:class:`~repro.serving.backends.ShardedBackend`) and interleaves three moves
 per ``step()``:
 
   1. **admit** — pop queued requests into free lanes (one
@@ -34,17 +36,11 @@ import time
 from collections import deque
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import Graph, to_ell_in
-from repro.core.static_engine import (
-    EMPTY_LANE,
-    KEEP_LANE,
-    init_batch_state,
-    reset_lanes,
-    step_batch,
-)
+from repro.core.graph import Graph
+from repro.core.static_engine import KEEP_LANE
+from repro.serving.backends import EngineBackend, StaticBackend
 from repro.serving.cache import DistCache, graph_key
 from repro.serving.metrics import ServingMetrics
 from repro.serving.queue import ArrivalQueue, Request
@@ -59,19 +55,6 @@ class DrainStalled(RuntimeError):
         self.completed = completed
 
 
-@jax.jit
-def _peek(state):
-    """One fused device read per step: (trips, per-lane live flag, phases)."""
-    return state.trips, jnp.any(state.status == 1, axis=1), state.phases
-
-
-@jax.jit
-def _take_row(dist, lane):
-    # traced lane index -> one compile total (a python-int index or a
-    # variable-length fancy-index would recompile per lane / per count)
-    return jax.lax.dynamic_index_in_dim(dist, lane, keepdims=False)
-
-
 class ContinuousBatcher:
     """B-lane continuous-batching SSSP server over one shared graph.
 
@@ -84,8 +67,9 @@ class ContinuousBatcher:
         bounds how long a *newly arrived* query can wait while all lanes
         are still live; large k amortises the per-step host sync. k is a
         traced operand, so changing it does not recompile.
-      ell: optional precomputed ``to_ell_in(g)``.
+      ell: optional precomputed ``to_ell_in(g)`` (static backend only).
       use_pallas: kernels (True) vs ref oracles (False); bit-identical.
+        (Static backend only.)
       cache: optional :class:`DistCache`; duplicate sources short-circuit
         (completed ones from the cache, in-flight ones by coalescing onto
         the lane already solving that source).
@@ -96,6 +80,14 @@ class ContinuousBatcher:
         slot — size it to the graph (or pass 0) on large-n servers. The
         authoritative delivery path is the return value of ``step()`` /
         ``drain()``. ``None`` retains everything.
+      backend: the :class:`~repro.serving.backends.EngineBackend` that
+        solves the queries — default a :class:`StaticBackend` over ``g``;
+        pass a :class:`~repro.serving.backends.ShardedBackend` to serve the
+        same traffic against a mesh-sharded graph. All scheduling semantics
+        (admission, coalescing, cache, metrics) are backend-independent.
+      donate: buffer-donation override. Default (None) donates on
+        accelerator backends only (CPU ignores donation); tests force True
+        to pin the copy-before-donate discipline.
     """
 
     def __init__(
@@ -108,27 +100,36 @@ class ContinuousBatcher:
         cache: DistCache | None = None,
         clock=time.perf_counter,
         retain_completed: int | None = 1024,
+        backend: EngineBackend | None = None,
+        donate: bool | None = None,
     ):
         if lanes < 1:
             raise ValueError(f"lanes must be >= 1; got {lanes}")
         if phases_per_step < 1:
             raise ValueError(f"phases_per_step must be >= 1; got {phases_per_step}")
+        if backend is None:
+            backend = StaticBackend(g, ell=ell, use_pallas=use_pallas)
+        elif backend.g is not g:
+            raise ValueError(
+                "backend was built over a different Graph instance than `g`"
+            )
         self.g = g
+        self.backend = backend
         self.lanes = int(lanes)
         self.phases_per_step = int(phases_per_step)
-        self.ell = to_ell_in(g) if ell is None else ell
-        self.use_pallas = bool(use_pallas)
         self.cache = cache
         self._gkey = graph_key(g) if cache is not None else None
         self.clock = clock
         self.queue = ArrivalQueue()
         self.metrics = ServingMetrics(lanes)
-        self.state = init_batch_state(g, np.full(lanes, EMPTY_LANE, np.int32))
+        self.state = backend.init(self.lanes)
         # the scheduler is the sole owner of the engine state (harvested rows
         # are copied to host before the next engine call), so donation is
         # safe: accelerator backends then mutate the (B, n) buffers in place
         # instead of copying them on every reset/chunk. CPU ignores donation.
-        self._donate = jax.default_backend() != "cpu"
+        self._donate = (
+            jax.default_backend() != "cpu" if donate is None else bool(donate)
+        )
         # host trip counter: a python int accumulated from wrap-safe int32
         # diffs of state.trips (the device counter may wrap after 2^31 trips
         # of a long-lived server; chunk deltas survive the wrap)
@@ -152,8 +153,10 @@ class ContinuousBatcher:
     def submit(self, source: int, t_arrival: float | None = None) -> Request:
         """Enqueue one query; returns its tracking :class:`Request`."""
         source = int(source)
-        if not 0 <= source < self.g.n:
-            raise ValueError(f"source must be in [0, {self.g.n}); got {source}")
+        if not 0 <= source < self.backend.n:
+            raise ValueError(
+                f"source must be in [0, {self.backend.n}); got {source}"
+            )
         t = self.clock() if t_arrival is None else float(t_arrival)
         return self.queue.push(source, t)
 
@@ -253,7 +256,9 @@ class ContinuousBatcher:
         if admit_vec is not None:
             # one device call resets every admitted lane's (n,) slice,
             # however large the burst; untouched lanes pass through bitwise
-            self.state = reset_lanes(self.state, admit_vec, donate=self._donate)
+            self.state = self.backend.reset_lanes(
+                self.state, admit_vec, donate=self._donate
+            )
         if not self._ready_live and self._ready:
             # only lazily-skipped dead entries (already-coalesced requests)
             # remain — drop them so they don't outlive the retention bound
@@ -275,16 +280,13 @@ class ContinuousBatcher:
             self.metrics.record_step(0, 0)
             return done
         trips_before = self._trips
-        self.state = step_batch(
-            self.g, self.state, self.phases_per_step, ell=self.ell,
-            use_pallas=self.use_pallas, stop_on_lane_finish=True,
+        self.state = self.backend.step(
+            self.state, self.phases_per_step, stop_on_lane_finish=True,
             donate=self._donate,
         )
-        trips, active, phases = _peek(self.state)  # single host sync per chunk
-        self._trips += (int(trips) - self._trips_dev) % (1 << 32)  # wrap-safe
-        self._trips_dev = int(trips)
-        active = np.asarray(active)
-        phases = np.asarray(phases)
+        trips, active, phases = self.backend.peek(self.state)  # one host sync
+        self._trips += (trips - self._trips_dev) % (1 << 32)  # wrap-safe
+        self._trips_dev = trips
         finished = [
             lane for lane in range(self.lanes)
             if self._lane_req[lane] is not None and not active[lane]
@@ -295,7 +297,7 @@ class ContinuousBatcher:
                 req = self._lane_req[lane]
                 req.t_completed = now
                 req.phases = int(phases[lane])
-                row = np.asarray(_take_row(self.state.dist, jnp.int32(lane)))
+                row = self.backend.take_row(self.state, lane)
                 if row.flags.writeable:  # shared with followers/retention:
                     row.flags.writeable = False  # mutation must fail loudly
                 req.dist = row

@@ -20,6 +20,24 @@ from repro.models import (
 B, S = 2, 32
 RNG = jax.random.PRNGKey(0)
 
+# the widest/deepest smoke configs dominate fast-lane wall time (jamba alone
+# is ~25s); they run in CI's full lane, the fast lane keeps one light config
+# per family (budget: fast lane < 90s)
+HEAVY = {
+    "jamba15_large_398b",
+    "llama32_vision_90b",
+    "hubert_xlarge",
+    "arctic_480b",
+    "qwen3_moe_235b",
+}
+
+
+def _smoke_params(archs):
+    return [
+        pytest.param(a, marks=pytest.mark.slow) if a in HEAVY else a
+        for a in archs
+    ]
+
 
 def _batch(cfg, seq=S, with_labels=True):
     batch = {}
@@ -57,7 +75,7 @@ def test_full_config_dims_match_assignment(arch):
         assert cfg.n_heads == H and cfg.n_kv == K
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _smoke_params(ARCHS))
 def test_smoke_forward_and_train_step(arch):
     cfg = get_smoke(arch)
     params = init_params(cfg, RNG)
@@ -73,8 +91,8 @@ def test_smoke_forward_and_train_step(arch):
     assert np.isfinite(gnorm) and gnorm > 0, arch
 
 
-@pytest.mark.parametrize("arch", [a for a in ARCHS
-                                  if not get_smoke(a).encoder_only])
+@pytest.mark.parametrize("arch", _smoke_params(
+    [a for a in ARCHS if not get_smoke(a).encoder_only]))
 def test_smoke_decode_matches_forward(arch):
     cfg = dataclasses.replace(get_smoke(arch), capacity_factor=16.0)
     params = init_params(cfg, RNG)

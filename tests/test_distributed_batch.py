@@ -1,0 +1,108 @@
+"""Parity tests for the sharded batch stepper on the forced-8-device mesh.
+
+Runs in a subprocess (8 fake host devices require ``XLA_FLAGS`` before jax
+import) and — unlike the heavyweight ``test_distributed.py`` suite — is NOT
+marked slow: this is the tentpole's acceptance gate and runs on every push.
+Pins, on a (4, 2) mesh:
+
+  1. B=1 ``step_sharded_batch`` bit-exact vs the pre-refactor single-query
+     program (``make_distributed_sssp``) on both exchange schedules;
+  2. per-lane results of a B>1 sharded batch bit-exact (distances and
+     phases/sum_fringe/relax_edges counters) vs per-source
+     ``run_phased_static`` on both schedules;
+  3. chunked stepping + ``stop_on_lane_finish`` + ``reset_sharded_lanes``
+     invisible to results (same invariants as the static stepper);
+  4. ``ContinuousBatcher`` over a ``ShardedBackend`` delivering the same
+     completions as the static backend for the same trace.
+"""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.static_engine import run_phased_static
+from repro.core.distributed import (
+    harvest_sharded, init_sharded_batch_state, make_distributed_sssp,
+    reset_sharded_lanes, run_distributed, run_sharded_batch, shard_graph,
+    shard_graph_batch, sharded_lanes_active, step_sharded_batch)
+from repro.graphs import uniform_gnp
+from repro.serving import ContinuousBatcher, DistCache, ShardedBackend
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+AXES = ("data", "model")
+g = uniform_gnp(180, 8 / 180, seed=5)
+srcs = np.asarray([3, 0, 91, 179], np.int32)
+solo = {int(s): run_phased_static(g, int(s)) for s in srcs}
+
+for sched in ("allreduce", "reduce_scatter"):
+    # --- 1. B=1 stepper vs the legacy pre-refactor program, bit-exact
+    legacy = make_distributed_sssp(mesh, AXES, schedule=sched)
+    d_leg, ph_leg = legacy(shard_graph(g, 8, source=3), jnp.int32(g.n + 1))
+    d_new, ph_new = run_distributed(g, mesh, AXES, 3, schedule=sched)
+    np.testing.assert_array_equal(np.asarray(d_new), np.asarray(d_leg)[: g.n],
+                                  err_msg=sched)
+    assert int(ph_new) == int(ph_leg), (sched, int(ph_new), int(ph_leg))
+
+    # --- 2. B=4 sharded batch vs per-source static engine, bit-exact
+    res = run_sharded_batch(g, mesh, AXES, srcs, schedule=sched)
+    for i, s in enumerate(srcs):
+        ref = solo[int(s)]
+        np.testing.assert_array_equal(np.asarray(res.dist[i]),
+                                      np.asarray(ref.dist), err_msg=f"{sched}:{s}")
+        assert int(res.phases[i]) == int(ref.phases), (sched, int(s))
+        assert int(res.sum_fringe[i]) == int(ref.sum_fringe), (sched, int(s))
+        assert int(res.relax_edges[i]) == int(ref.relax_edges), (sched, int(s))
+
+# --- 3. chunked + early-exit + lane reset are invisible to results
+sg = shard_graph_batch(g, 8)
+state = init_sharded_batch_state(sg, srcs)
+while sharded_lanes_active(state).any():
+    state = step_sharded_batch(sg, state, mesh, AXES, 3,
+                               stop_on_lane_finish=True)
+chunked = harvest_sharded(state)
+np.testing.assert_array_equal(np.asarray(chunked.dist), np.asarray(res.dist))
+np.testing.assert_array_equal(np.asarray(chunked.phases), np.asarray(res.phases))
+state = reset_sharded_lanes(state, np.asarray([42, -2, -1, 5], np.int32))
+while sharded_lanes_active(state).any():
+    state = step_sharded_batch(sg, state, mesh, AXES, 7)
+after = harvest_sharded(state)
+np.testing.assert_array_equal(np.asarray(after.dist[1]), np.asarray(chunked.dist[1]))
+assert int(after.phases[1]) == int(chunked.phases[1])  # kept lane untouched
+assert np.isinf(np.asarray(after.dist[2])).all()  # parked lane empty
+for lane, s in ((0, 42), (3, 5)):
+    np.testing.assert_array_equal(np.asarray(after.dist[lane]),
+                                  np.asarray(run_phased_static(g, s).dist))
+
+# --- 4. continuous serving across the 8-device mesh == static backend
+trace = [3, 91, 3, 0, 179, 91, 7]
+results = {}
+for name, backend in (("static", None),
+                      ("sharded", ShardedBackend(g, mesh, AXES))):
+    server = ContinuousBatcher(g, lanes=4, phases_per_step=6,
+                               cache=DistCache(capacity=16), backend=backend)
+    for s in trace:
+        server.submit(s)
+    done = sorted(server.drain(max_steps=2000), key=lambda r: r.req_id)
+    results[name] = done
+for a, b in zip(results["static"], results["sharded"]):
+    assert (a.source, a.cache_hit, a.coalesced) == (b.source, b.cache_hit, b.coalesced)
+    np.testing.assert_array_equal(a.dist, b.dist, err_msg=f"src {a.source}")
+    assert a.phases == b.phases, a.source
+print("DISTRIBUTED-BATCH-PASS")
+"""
+
+
+def test_distributed_batch_suite():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert "DISTRIBUTED-BATCH-PASS" in out.stdout, out.stdout + out.stderr

@@ -81,3 +81,63 @@ def test_webgraph_has_heavy_tail_hubs():
     np.add.at(deg, np.asarray(g.dst)[real], 1)
     # preferential attachment: the top hub collects far more than mean degree
     assert deg.max() > 5 * deg.mean()
+
+
+# --- silent-wrong-answer input holes (regressions: these passed silently
+# --- before the validation landed, producing wrong/poisoned results) -------
+
+
+def test_from_coo_rejects_nan_weights():
+    # NaN slips through a `w < 0` check (NaN comparisons are False) and then
+    # poisons every min-plus reduction downstream — must fail loudly instead
+    with pytest.raises(ValueError, match="finite"):
+        from_coo([0, 1], [1, 2], [1.0, np.nan], n=3)
+
+
+def test_from_coo_rejects_negative_and_minus_inf_but_allows_pad_inf():
+    with pytest.raises(ValueError, match="non-negative"):
+        from_coo([0], [1], [-1.0], n=2)
+    with pytest.raises(ValueError, match="non-negative"):
+        from_coo([0], [1], [-np.inf], n=2)
+    # +inf is the documented padding sentinel and must keep working
+    g = from_coo([0, 0], [1, 0], [1.0, np.inf], n=2)
+    assert int(np.isfinite(np.asarray(g.w)).sum()) == 1
+
+
+def test_shard_graph_rejects_out_of_range_sources():
+    from repro.core.distributed import shard_graph
+
+    g = grid_road(5, 5, seed=4)  # n = 25; n_pad = 32 for 2 shards
+    # negative source: numpy wrap-around would seed vertex n_pad-1 and
+    # silently solve the wrong query
+    with pytest.raises(ValueError, match="source"):
+        shard_graph(g, 2, source=-1)
+    # padding-range source: would seed an edgeless padding vertex and
+    # silently return all-inf distances
+    with pytest.raises(ValueError, match="source"):
+        shard_graph(g, 2, source=g.n)
+    sg = shard_graph(g, 2, source=g.n - 1)  # real vertices all fine
+    assert sg.n_pad > g.n  # the padding range this guards actually exists
+
+
+def test_sharded_batch_sources_reject_padding_range():
+    from repro.core.distributed import (
+        init_sharded_batch_state,
+        reset_sharded_lanes,
+        shard_graph_batch,
+    )
+
+    g = grid_road(5, 5, seed=4)
+    sg = shard_graph_batch(g, 2)
+    assert sg.n_pad > g.n
+    with pytest.raises(ValueError, match=rf"\[0, {g.n}\)"):
+        init_sharded_batch_state(sg, [0, g.n])  # in [n, n_pad): padding
+    with pytest.raises(ValueError, match=rf"\[0, {g.n}\)"):
+        init_sharded_batch_state(sg, [-2])
+    state = init_sharded_batch_state(sg, [0, 3])
+    with pytest.raises(ValueError, match=rf"\[0, {g.n}\)"):
+        reset_sharded_lanes(state, np.asarray([sg.n_pad - 1, -2], np.int64))
+    with pytest.raises(ValueError, match="shape"):
+        reset_sharded_lanes(state, np.asarray([0], np.int32))
+    with pytest.raises(ValueError, match="integer"):
+        init_sharded_batch_state(sg, np.asarray([0.5, 1.0]))

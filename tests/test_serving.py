@@ -9,6 +9,7 @@ lengths with seeded rngs.
 """
 import json
 
+import jax
 import numpy as np
 import pytest
 
@@ -19,8 +20,22 @@ from repro.serving import (
     ContinuousBatcher,
     DistCache,
     ServingMetrics,
+    ShardedBackend,
+    StaticBackend,
     graph_key,
 )
+
+BACKENDS = ["static", "sharded"]
+
+
+def _make_backend(kind: str, g):
+    """Backend under test; 'sharded' runs the mesh stepper on a 1-device
+    mesh so the adapter parity is exercised in-process (the 8-fake-device
+    variant lives in tests/test_distributed_batch.py)."""
+    if kind == "static":
+        return StaticBackend(g)
+    mesh = jax.make_mesh((jax.device_count(),), ("v",))
+    return ShardedBackend(g, mesh, ("v",))
 
 GRAPHS = {
     "gnp": lambda: uniform_gnp(180, 9 / 180, seed=31),
@@ -208,6 +223,72 @@ def test_metrics_report_is_json_and_consistent(graph):
     assert rep["steps"] == server.metrics.steps >= 1
     assert rep["phases_per_query_mean"] > 0
     assert rep["engine_trips"] == int(server.state.trips)
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_backend_adapters_share_scheduler_semantics(kind, solo_cache):
+    """The adapter acceptance test: the same trace served through either
+    engine backend yields identical admission/coalescing/cache behaviour and
+    bit-exact per-request distances vs standalone solves."""
+    g = uniform_gnp(160, 8 / 160, seed=41)
+    backend = _make_backend(kind, g)
+    server = ContinuousBatcher(g, lanes=3, phases_per_step=5,
+                               cache=DistCache(capacity=16), backend=backend)
+    trace = [9, 9, 0, 158, 9, 0, 77]
+    for s in trace:
+        server.submit(s)
+    done = server.drain(max_steps=2000)
+    assert len(done) == len(trace)
+    for req in done:
+        solo = solo_cache(g, req.source)
+        np.testing.assert_array_equal(
+            req.dist, np.asarray(solo.dist),
+            err_msg=f"{kind}: req {req.req_id} (src {req.source})")
+        assert req.dist.shape == (g.n,)  # sharded padding never leaks out
+        if not (req.cache_hit or req.coalesced):
+            assert int(req.phases) == int(solo.phases), (kind, req.req_id)
+    # identical dedup classification regardless of backend: the first 9 and
+    # the first 0 burn lanes, later duplicates coalesce or hit the cache
+    engine_served = [r for r in done if not r.cache_hit and not r.coalesced]
+    assert sorted(r.source for r in engine_served) == [0, 9, 77, 158], kind
+    rep = json.loads(server.metrics.to_json())
+    assert rep["queries_completed"] == len(trace)
+    assert rep["engine_trips"] == int(server.state.trips)
+    # fresh duplicates after completion are cache hits on both backends
+    server.submit(9)
+    (late,) = server.drain(max_steps=2000)
+    assert late.cache_hit
+    np.testing.assert_array_equal(late.dist, np.asarray(solo_cache(g, 9).dist))
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_completed_rows_survive_donated_engine_reuse(kind, solo_cache):
+    """Copy-before-donate discipline (the harvest-then-donate hazard).
+
+    ``step``/``reset_lanes`` with ``donate=True`` may invalidate the engine
+    state's old buffers, so the scheduler must hand out host-owned row
+    copies. Force donation on (even on CPU, where XLA ignores it, this pins
+    the call path) and check rows delivered earlier stay bit-identical while
+    the donated state is mutated by later queries reusing the same lanes."""
+    g = grid_road(9, 9, seed=42)
+    server = ContinuousBatcher(g, lanes=2, phases_per_step=4,
+                               backend=_make_backend(kind, g), donate=True)
+    assert server._donate  # the override actually arms donation
+    for s in (0, 40, 80):
+        server.submit(s)
+    first = server.drain(max_steps=2000)
+    snapshots = [(r, r.dist.copy()) for r in first]
+    # second wave re-uses (and donate-resets) every lane several times
+    for s in (17, 63, 5, 71):
+        server.submit(s)
+    server.drain(max_steps=2000)
+    for req, snap in snapshots:
+        assert isinstance(req.dist, np.ndarray)
+        assert not req.dist.flags.writeable  # mutation must fail loudly
+        np.testing.assert_array_equal(req.dist, snap,
+                                      err_msg=f"{kind}: src {req.source}")
+        np.testing.assert_array_equal(
+            req.dist, np.asarray(solo_cache(g, req.source).dist))
 
 
 def test_arrival_queue_fifo_and_latency_fields():

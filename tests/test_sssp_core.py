@@ -114,6 +114,19 @@ def test_static_engine_matches_generic(graph):
         assert int(eng.sum_fringe) == int(gen.sum_fringe), (name, pallas)
 
 
+def test_static_engine_trace_is_absent_not_fabricated(graph):
+    """Regression: run_phased_static used to return settled_per_phase =
+    zeros((1,)) — a plausible-looking but fake per-phase trace. The stepper
+    does not trace, so the field must be explicitly absent (None), while the
+    generic engine keeps producing the real trace."""
+    name, g, ref = graph
+    eng = run_phased_static(g, 0)
+    assert eng.settled_per_phase is None
+    gen = run_phased(g, 0, "instatic|outstatic", trace_len=g.n + 1)
+    trace = np.asarray(gen.settled_per_phase)
+    assert trace.sum() == int(np.isfinite(ref).sum())  # the real thing
+
+
 def test_other_sources(graph):
     name, g, _ = graph
     src = g.n // 2

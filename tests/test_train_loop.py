@@ -15,6 +15,7 @@ DCFG = DataConfig(seed=0, batch=4, seq_len=32)
 OCFG = OptConfig(lr=5e-3, warmup_steps=2, total_steps=24)
 
 
+@pytest.mark.slow  # ~7s of train/save/resume/retrain; full-lane material
 def test_train_checkpoint_resume_determinism():
     mesh = make_host_mesh()
     with tempfile.TemporaryDirectory() as d:
