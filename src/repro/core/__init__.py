@@ -2,11 +2,20 @@
 criteria (Kainer & Traeff 2019 / Crauser et al. 1998), plus the Delta-stepping
 baseline and reference oracles."""
 from repro.core.criteria import REGISTRY as CRITERIA
+from repro.core.criteria import CritPlan, canonical, plan_for
 from repro.core.delta_stepping import DeltaResult, default_delta, run_delta_stepping
-from repro.core.graph import Graph, from_coo, to_ell_in, to_numpy_csr, transpose
+from repro.core.graph import (
+    Graph,
+    from_coo,
+    to_ell_in,
+    to_ell_out,
+    to_numpy_csr,
+    transpose,
+)
 from repro.core.oracle import bellman_ford_jnp, dijkstra_numpy
 from repro.core.phased import PhasedResult, run_phased
 from repro.core.static_engine import (
+    DEFAULT_CRITERION,
     EMPTY_LANE,
     KEEP_LANE,
     BatchedResult,
@@ -23,6 +32,11 @@ from repro.core.static_engine import (
 
 __all__ = [
     "CRITERIA",
+    "CritPlan",
+    "plan_for",
+    "canonical",
+    "DEFAULT_CRITERION",
+    "to_ell_out",
     "Graph",
     "from_coo",
     "to_ell_in",

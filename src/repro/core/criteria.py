@@ -19,6 +19,7 @@ Status encoding: 0 = U (unexplored), 1 = F (fringe), 2 = S (settled).
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, NamedTuple
 
 import jax
@@ -157,12 +158,244 @@ REGISTRY: dict[str, Callable[[CritContext], jax.Array]] = {
 }
 
 
+# Fixed canonical name order (hierarchy order, IN family then OUT then oracle).
+# ``parse`` sorts by it so every spelling of the same disjunction — "in|out",
+# "out|in", "in|in|out" — lowers to ONE canonical tuple/string and therefore
+# one jit cache entry per engine, instead of a compilation per spelling.
+_CANON_ORDER = (
+    "dijk", "instatic", "insimple", "in",
+    "outstatic", "outsimple", "outweak", "out",
+    "oracle",
+)
+# exhaustiveness guard: a REGISTRY name missing here would pass parse's
+# validation yet silently vanish from the canonical tuple (accepted but
+# never applied) — fail at import instead (REGISTRY is defined above)
+assert set(_CANON_ORDER) == set(REGISTRY), (
+    set(_CANON_ORDER) ^ set(REGISTRY)
+)
+
+
 def parse(criterion: str) -> tuple[str, ...]:
-    names = tuple(s.strip().lower() for s in criterion.split("|"))
+    """Parse a '|'-joined criterion string into canonical name order.
+
+    Names are deduplicated and sorted by the fixed registry order
+    (:data:`_CANON_ORDER`): disjunction is commutative and idempotent, so
+    reordering/deduping never changes the settle mask, but it collapses all
+    spellings onto one static jit key."""
+    names = {s.strip().lower() for s in criterion.split("|")}
     for nm in names:
         if nm not in REGISTRY:
             raise ValueError(f"unknown criterion {nm!r}; have {sorted(REGISTRY)}")
-    return names
+    return tuple(nm for nm in _CANON_ORDER if nm in names)
+
+
+def canonical(criterion: str) -> str:
+    """The canonical spelling of a criterion string (parse then re-join)."""
+    return "|".join(parse(criterion))
+
+
+# ---------------------------------------------------------------------------
+# Criterion plans: the compiled lowering the production engines execute
+# ---------------------------------------------------------------------------
+#
+# ``evaluate`` above is the *reference* semantics (dense COO segment-mins,
+# one pass per criterion). The production engines — the static stepper, the
+# sharded stepper, and everything serving on top — instead consume a
+# :class:`CritPlan`, a static description of the same disjunction in terms of
+#
+#   (a) the per-vertex *keys* each member needs: nothing (DIJK), the static
+#       in/out minima already on the Graph, or a *dynamic* key recomputed
+#       each phase as a masked min over the (in- or out-) adjacency of the
+#       unsettled neighbourhood;
+#   (b) the fused *threshold lanes* to reduce over the fringe: lane 0 is
+#       always min_F d (every family compares against it), plus one
+#       ``min_F (d + key)`` lane per OUT-family member.
+#
+# Every dynamic key has the same algebraic shape ``key[v] = min over
+# neighbours u of (gate[u] + c(u,v))`` where ``gate`` is a cheap elementwise
+# function of status (and possibly a static min or another key). That is
+# exactly one ``ell_key_min`` kernel pass (static engine) or one
+# candidate-exchange round (sharded engine) per key per phase — the engines
+# *recompute* the keys instead of maintaining them incrementally as the
+# paper's heaps do, because on a vector machine a dense masked min over the
+# already-resident adjacency is cheaper than any scatter-updated structure
+# (DESIGN.md Sec. 8 prices this).
+
+
+class KeySpec(NamedTuple):
+    """One dynamic per-vertex key: ``key[v] = min_u gate[u] + c`` over the
+    ``side`` adjacency of v, where ``gate`` is elementwise in status.
+
+    gate == "unsettled":  gate[u] = 0 if status[u] < S else +inf
+    gate == "twohop":     gate[u] = 0 if F, ``aux``[u] if U, +inf if S
+    ``aux`` names the U-branch vector: "in_static" / "out_static" (the
+    Graph's static minima) or another key's name (a dependency, ordered
+    earlier in ``CritPlan.keys``).
+    """
+
+    name: str
+    side: str  # "in" (reduce over in-edges) | "out" (over out-edges)
+    gate: str  # "unsettled" | "twohop"
+    aux: str | None
+
+
+_KEY_SPECS = {
+    "in_dyn": KeySpec("in_dyn", "in", "unsettled", None),  # INSIMPLE, Eq. 6
+    "in_full": KeySpec("in_full", "in", "twohop", "in_static"),  # IN, Eq. 1
+    "out_dyn": KeySpec("out_dyn", "out", "unsettled", None),  # OUTSIMPLE, Eq. 7
+    "out_weak": KeySpec("out_weak", "out", "twohop", "out_static"),  # Eq. 3
+    "out_full": KeySpec("out_full", "out", "twohop", "out_dyn"),  # OUT, Eq. 2
+}
+
+# per criterion name: the IN-family comparison term ("zero" = DIJK's d itself,
+# "static" = the Graph's in_min_static, else a dynamic key name) or the
+# OUT-family lane key ("static" = out_min_static, else a dynamic key name)
+_IN_TERM = {"dijk": "zero", "instatic": "static", "insimple": "in_dyn",
+            "in": "in_full"}
+_OUT_TERM = {"outstatic": "static", "outsimple": "out_dyn",
+             "outweak": "out_weak", "out": "out_full"}
+
+
+class CritPlan(NamedTuple):
+    """Static lowering of a criterion disjunction (hashable jit metadata)."""
+
+    criterion: str  # canonical '|'-joined spelling
+    names: tuple[str, ...]  # canonical parsed names
+    keys: tuple[KeySpec, ...]  # dynamic keys, deduped, dependencies first
+    in_terms: tuple[str, ...]  # IN-family terms ("zero"/"static"/key name)
+    out_terms: tuple[str, ...]  # OUT-family lane keys ("static"/key name)
+    needs_oracle: bool  # plan reads per-lane dist_true
+    needs_fallback: bool  # engine must materialise evaluate()'s DIJK guard
+
+    @property
+    def num_lanes(self) -> int:
+        """Threshold lanes the fused frontier reduction produces."""
+        return 1 + len(self.out_terms)
+
+    @property
+    def needs_out_adjacency(self) -> bool:
+        return any(k.side == "out" for k in self.keys)
+
+    @property
+    def dynamic(self) -> bool:
+        return bool(self.keys)
+
+
+def plan_for(criterion: str) -> CritPlan:
+    """Lower a criterion string into the :class:`CritPlan` the engines run.
+
+    Memoised on the *canonical* spelling, so two engines given different
+    spellings of one disjunction share one plan object — and therefore one
+    compiled step program.
+    """
+    return _plan_for_canonical(canonical(criterion))
+
+
+@functools.lru_cache(maxsize=None)
+def _plan_for_canonical(criterion: str) -> CritPlan:
+    names = parse(criterion)
+    keys: list[KeySpec] = []
+
+    def _need(key_name: str):
+        spec = _KEY_SPECS[key_name]
+        if spec.aux in _KEY_SPECS:  # dependency key must be computed first
+            _need(spec.aux)
+        if spec not in keys:
+            keys.append(spec)
+
+    in_terms: list[str] = []
+    out_terms: list[str] = []
+    for nm in names:
+        if nm in _IN_TERM:
+            t = _IN_TERM[nm]
+            if t not in ("zero", "static"):
+                _need(t)
+            in_terms.append(t)
+        elif nm in _OUT_TERM:
+            t = _OUT_TERM[nm]
+            if t != "static":
+                _need(t)
+            out_terms.append(t)
+        elif nm != "oracle":
+            # a criterion registered without a plan lowering would otherwise
+            # run in run_phased but be silently OMITTED by every production
+            # engine — breaking the bit-exactness contract with no error
+            raise NotImplementedError(
+                f"criterion {nm!r} is registered but has no plan lowering; "
+                f"add it to _IN_TERM/_OUT_TERM (and a KeySpec if dynamic)"
+            )
+    # The DIJK fallback guard of ``evaluate`` provably never fires for any
+    # non-oracle member even in f32 (keys are >= 0, and IEEE rounding is
+    # monotone, so each member's mask contains the fringe argmin whenever the
+    # fringe is non-empty — see DESIGN.md Sec. 8). Only a *bare* oracle plan
+    # can produce an empty mask on a non-empty fringe (f32-vs-f64 tolerance),
+    # so only there must the engine materialise the guard to stay bit-exact
+    # with ``run_phased``.
+    return CritPlan(
+        criterion="|".join(names),
+        names=names,
+        keys=tuple(keys),
+        in_terms=tuple(in_terms),
+        out_terms=tuple(out_terms),
+        needs_oracle="oracle" in names,
+        needs_fallback=names == ("oracle",),
+    )
+
+
+def key_gate(spec: KeySpec, status: jax.Array, in_min_static: jax.Array,
+             out_min_static: jax.Array, keys: dict) -> jax.Array:
+    """The elementwise gate vector of a dynamic key, shaped like ``status``.
+
+    Shape-agnostic: the static engine calls it on ``(B, n)`` status with
+    ``(n,)`` static minima, the sharded engine on ``(B, n_loc)`` blocks with
+    local minima — broadcasting covers both. ``keys`` maps already-computed
+    key names to arrays (dependency resolution for ``out_full``).
+    """
+    if spec.gate == "unsettled":
+        return jnp.where(status < S, 0.0, INF).astype(jnp.float32)
+    if spec.aux == "in_static":
+        aux = in_min_static
+    elif spec.aux == "out_static":
+        aux = out_min_static
+    else:
+        aux = keys[spec.aux]
+    return jnp.where(
+        status == F, 0.0, jnp.where(status == U, aux, INF)
+    ).astype(jnp.float32)
+
+
+def plan_union_mask(plan: CritPlan, d: jax.Array, fringe: jax.Array,
+                    mins: jax.Array, keys: dict, in_min_static: jax.Array,
+                    dist_true: jax.Array | None) -> jax.Array:
+    """The plan's settle mask over batched state (before any DIJK fallback).
+
+    Shapes: ``d``/``fringe`` are ``(B, V)``; ``mins`` is the ``(L, B)``
+    output of the fused lane reduction (lane 0 = min_F d, lane 1+k = the
+    OUT threshold for ``plan.out_terms[k]``); ``keys`` maps dynamic key
+    names to ``(B, V)`` arrays; ``in_min_static`` is ``(V,)``; ``dist_true``
+    is ``(B, V)`` iff the plan needs the oracle. V is n on the static engine
+    and n_loc inside a shard — the comparisons are all elementwise, which is
+    what makes the same lowering correct in both places. Bit-exact
+    transcription of each registered criterion's comparison (the same float
+    ops ``evaluate`` runs), so the union equals ``evaluate``'s mask whenever
+    the fallback does not fire — and the fallback provably cannot fire for
+    non-oracle members (see :func:`plan_for`).
+    """
+    min_fd = mins[0][:, None]
+    settle = jnp.zeros_like(fringe)
+    for t in plan.in_terms:
+        if t == "zero":  # DIJK, Eq. d <= min_F d
+            settle = settle | (d <= min_fd)
+        elif t == "static":  # INSTATIC, Eq. 4
+            settle = settle | (d - in_min_static <= min_fd)
+        else:  # INSIMPLE / IN via the dynamic key
+            settle = settle | (d - keys[t] <= min_fd)
+    for i in range(len(plan.out_terms)):  # OUT family: d <= L_k
+        settle = settle | (d <= mins[1 + i][:, None])
+    if plan.needs_oracle:
+        tol = 1e-6 + 1e-6 * jnp.abs(dist_true)
+        settle = settle | (d <= dist_true + tol)
+    return settle & fringe
 
 
 def evaluate(names: tuple[str, ...], ctx: CritContext) -> jax.Array:

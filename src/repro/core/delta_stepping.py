@@ -21,6 +21,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graph import Graph
 
@@ -37,7 +38,29 @@ class DeltaResult:
     dist: jax.Array  # (n,) f32
     phases: jax.Array  # scalar int32 (light rounds + heavy rounds)
     buckets_processed: jax.Array  # scalar int32
-    relax_edges: jax.Array  # scalar int64 (out-edges scanned from processed sets)
+    relax_edges: np.int64  # scalar int64 (out-edges scanned from processed
+    #   sets). Delta-stepping is label-CORRECTING: a vertex's out-edges can
+    #   be rescanned every light round it re-enters the bucket, so unlike
+    #   the phased engines this total is NOT bounded by m — it reaches
+    #   m x rounds and overflows int32 on large graph x phase products
+    #   (DESIGN.md Sec. 4). Accumulated on device as uint32 lo / int32 hi
+    #   limbs (x64 stays off) and combined on the host.
+
+
+def _acc_work(lo: jax.Array, hi: jax.Array, delta: jax.Array):
+    """Add a per-phase int32 edge count into the (uint32 lo, int32 hi) limbs.
+
+    ``delta`` fits int32 (it is bounded by m per phase); the carry is the
+    uint32 wrap test. Keeps the while_loop carries x64-free while the total
+    survives past 2^31 scanned edges.
+    """
+    new_lo = lo + delta.astype(jnp.uint32)
+    return new_lo, hi + (new_lo < lo).astype(jnp.int32)
+
+
+def _combine_work(lo, hi) -> np.int64:
+    """Host-side limb merge: the true int64 total (numpy, so x64-independent)."""
+    return np.int64(int(hi) << 32 | int(lo))
 
 
 def default_delta(g: Graph) -> float:
@@ -64,12 +87,12 @@ def _run(g: Graph, source, delta, max_phases: int):
         return jnp.minimum(tent, upd)
 
     def outer_cond(state):
-        tent, settled, phases, buckets, work = state
+        tent, settled, phases, buckets, w_lo, w_hi = state
         active = (~settled) & jnp.isfinite(tent)
         return jnp.any(active) & (phases < max_phases)
 
     def outer_body(state):
-        tent, settled, phases, buckets, work = state
+        tent, settled, phases, buckets, w_lo, w_hi = state
         active = (~settled) & jnp.isfinite(tent)
         bidx = jnp.where(active, jnp.floor(tent / delta), INF)
         b = jnp.min(bidx)  # lowest non-empty bucket
@@ -80,33 +103,39 @@ def _run(g: Graph, source, delta, max_phases: int):
         removed0 = jnp.zeros((n,), bool)
 
         def inner_cond(istate):
-            tent, last_proc, removed, phases, work = istate
+            tent, last_proc, removed, phases, w_lo, w_hi = istate
             cur = (~settled) & (tent >= lo) & (tent < hi) & (tent < last_proc)
             return jnp.any(cur) & (phases < max_phases)
 
         def inner_body(istate):
-            tent, last_proc, removed, phases, work = istate
+            tent, last_proc, removed, phases, w_lo, w_hi = istate
             cur = (~settled) & (tent >= lo) & (tent < hi) & (tent < last_proc)
             last_proc = jnp.where(cur, tent, last_proc)
             removed = removed | cur
             tent = relax(tent, cur, light_e)
-            work = work + jnp.sum(jnp.where(cur, out_deg, 0), dtype=jnp.int32)
-            return tent, last_proc, removed, phases + 1, work
+            w_lo, w_hi = _acc_work(
+                w_lo, w_hi, jnp.sum(jnp.where(cur, out_deg, 0), dtype=jnp.int32)
+            )
+            return tent, last_proc, removed, phases + 1, w_lo, w_hi
 
-        tent, _, removed, phases, work = jax.lax.while_loop(
-            inner_cond, inner_body, (tent, last_proc0, removed0, phases, work)
+        tent, _, removed, phases, w_lo, w_hi = jax.lax.while_loop(
+            inner_cond, inner_body,
+            (tent, last_proc0, removed0, phases, w_lo, w_hi),
         )
         # ---- one heavy round for everything removed from the bucket
         tent = relax(tent, removed, heavy_e)
-        work = work + jnp.sum(jnp.where(removed, out_deg, 0), dtype=jnp.int32)
+        w_lo, w_hi = _acc_work(
+            w_lo, w_hi, jnp.sum(jnp.where(removed, out_deg, 0), dtype=jnp.int32)
+        )
         settled = settled | removed
-        return tent, settled, phases + 1, buckets + 1, work
+        return tent, settled, phases + 1, buckets + 1, w_lo, w_hi
 
-    state0 = (tent0, settled0, jnp.int32(0), jnp.int32(0), jnp.int32(0))
-    tent, settled, phases, buckets, work = jax.lax.while_loop(
+    state0 = (tent0, settled0, jnp.int32(0), jnp.int32(0),
+              jnp.uint32(0), jnp.int32(0))
+    tent, settled, phases, buckets, w_lo, w_hi = jax.lax.while_loop(
         outer_cond, outer_body, state0
     )
-    return DeltaResult(tent, phases, buckets, work)
+    return tent, phases, buckets, w_lo, w_hi
 
 
 def run_delta_stepping(
@@ -115,4 +144,7 @@ def run_delta_stepping(
     if delta is None:
         delta = default_delta(g)
     cap = int(max_phases) if max_phases is not None else 4 * g.n + 16
-    return _run(g, jnp.int32(source), jnp.float32(delta), cap)
+    tent, phases, buckets, w_lo, w_hi = _run(
+        g, jnp.int32(source), jnp.float32(delta), cap
+    )
+    return DeltaResult(tent, phases, buckets, _combine_work(w_lo, w_hi))

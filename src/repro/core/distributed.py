@@ -59,8 +59,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.graph import Graph
+from repro.core import criteria as C
+from repro.core.graph import Graph, transpose
 from repro.core.static_engine import (
+    DEFAULT_CRITERION,
     EMPTY_LANE,
     KEEP_LANE,
     BatchedResult,
@@ -255,7 +257,8 @@ def make_distributed_sssp(mesh: Mesh, axes, *, schedule: str = "reduce_scatter",
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["src_local", "dst", "w", "in_min", "out_min", "out_deg"],
+    data_fields=["src_local", "dst", "w", "tsrc_local", "tdst", "tw",
+                 "in_min", "out_min", "out_deg"],
     meta_fields=["n", "n_pad", "n_loc", "num_shards"],
 )
 @dataclasses.dataclass(frozen=True)
@@ -265,6 +268,18 @@ class ShardedBatchGraph:
     Unlike the legacy :class:`ShardedGraph` it bakes in *no* source state —
     queries live in :class:`ShardedBatchState` lanes, so one sharded graph
     serves arbitrarily many batches/resets (the serving workload).
+
+    Carries up to *two* edge partitions: the forward one (edges grouped by
+    the owner of their source — the relax push and the IN-family dynamic
+    keys flow along it) and optionally the transpose one (edges grouped by
+    the owner of their *destination* — the OUT-family dynamic keys reduce
+    "over my out-edges gated by the target's status", so the gate is
+    evaluated at the target's owner and the contribution exchanged back to
+    the source's owner). The transpose arrays double the edge memory, so
+    front-ends that know the criterion up front
+    (``run_sharded_batch``/``ShardedBackend``) only build them when the
+    plan carries dynamic OUT keys; plans without such keys never ship them
+    into the step program either way.
     """
 
     n: int
@@ -274,6 +289,10 @@ class ShardedBatchGraph:
     src_local: jax.Array  # (P, E_loc) int32, local (in-block) source index
     dst: jax.Array  # (P, E_loc) int32, global destination
     w: jax.Array  # (P, E_loc) f32, +inf padding
+    tsrc_local: jax.Array | None  # (P, E_loc_t) int32, local index of the
+    #   edge's DST (None when sharded with with_transpose=False)
+    tdst: jax.Array | None  # (P, E_loc_t) int32, global id of the edge's SRC
+    tw: jax.Array | None  # (P, E_loc_t) f32, +inf padding
     in_min: jax.Array  # (n_pad,) f32, +inf on padding vertices
     out_min: jax.Array  # (n_pad,) f32, +inf on padding vertices
     out_deg: jax.Array  # (n_pad,) int32 real out-degrees (0 on padding)
@@ -281,8 +300,9 @@ class ShardedBatchGraph:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["dist", "status", "trips", "phases", "sum_fringe", "relax_edges"],
-    meta_fields=["n"],
+    data_fields=["dist", "status", "trips", "phases", "sum_fringe",
+                 "relax_edges", "dist_true"],
+    meta_fields=["n", "criterion"],
 )
 @dataclasses.dataclass(frozen=True)
 class ShardedBatchState:
@@ -292,7 +312,10 @@ class ShardedBatchState:
     fixed-shape pytree whose ``(B, n_pad)`` vertex arrays are block-sharded
     over the mesh's vertex axis inside ``step_sharded_batch`` (each device
     holds ``(B, n_loc)``). Same counter semantics as the static stepper, so
-    :func:`harvest_sharded` yields a drop-in ``BatchedResult``.
+    :func:`harvest_sharded` yields a drop-in ``BatchedResult``. The
+    criterion is static metadata selecting the compiled SPMD step program;
+    dynamic keys are recomputed shard-locally every phase and never carried
+    (they are pure functions of status).
     """
 
     n: int  # true vertex count; columns in [n, n_pad) are padding
@@ -302,6 +325,9 @@ class ShardedBatchState:
     phases: jax.Array  # (B,) int32 phases each lane's current query was live
     sum_fringe: jax.Array  # (B,) int32 per-lane sum over live phases of |F|
     relax_edges: jax.Array  # (B,) int32 per-lane out-edges relaxed
+    dist_true: jax.Array | None  # (B, n_pad) f32 per-lane true distances
+    #   (+inf on padding columns), only when the plan includes 'oracle'
+    criterion: str  # canonical criterion string; static: selects the plan
 
     @property
     def num_lanes(self) -> int:
@@ -311,30 +337,72 @@ class ShardedBatchState:
     def n_pad(self) -> int:
         return self.dist.shape[1]
 
+    @property
+    def plan(self) -> C.CritPlan:
+        return C.plan_for(self.criterion)
 
-def shard_graph_batch(g: Graph, num_shards: int,
-                      pad_multiple: int = 8) -> ShardedBatchGraph:
-    """Block-partition vertices for the batch stepper (no baked-in source)."""
+
+def shard_graph_batch(g: Graph, num_shards: int, pad_multiple: int = 8,
+                      with_transpose: bool = True) -> ShardedBatchGraph:
+    """Block-partition vertices for the batch stepper (no baked-in source).
+
+    ``with_transpose`` additionally builds the transpose edge partition that
+    feeds the dynamic OUT-family criterion keys (see
+    :class:`ShardedBatchGraph`). It defaults on so a hand-sharded graph
+    accepts every criterion; front-ends that know the criterion pass
+    ``plan.needs_out_adjacency`` to skip the second partition (and its
+    doubled edge memory) for plans that never read it.
+    """
     n_loc, n_pad, src_l, dst_l, w_l, out_deg = _partition_edges(
         g, num_shards, pad_multiple
     )
+    tsrc_l = tdst_l = tw_l = None
+    if with_transpose:
+        _, _, tsrc_l, tdst_l, tw_l, _ = _partition_edges(
+            transpose(g), num_shards, pad_multiple
+        )
+        tsrc_l, tdst_l, tw_l = map(jnp.asarray, (tsrc_l, tdst_l, tw_l))
     return ShardedBatchGraph(
         n=g.n, n_pad=n_pad, n_loc=n_loc, num_shards=num_shards,
         src_local=jnp.asarray(src_l), dst=jnp.asarray(dst_l), w=jnp.asarray(w_l),
+        tsrc_local=tsrc_l, tdst=tdst_l, tw=tw_l,
         in_min=_pad_min_vec(g.in_min_static, n_pad),
         out_min=_pad_min_vec(g.out_min_static, n_pad),
         out_deg=jnp.asarray(out_deg),
     )
 
 
-def init_sharded_batch_state(sg: ShardedBatchGraph, sources) -> ShardedBatchState:
+def _pad_dist_true(dist_true, plan: C.CritPlan, b: int, n: int, n_pad: int):
+    """(B, n_pad) f32 dist_true (or None): true rows, +inf padding columns."""
+    if not plan.needs_oracle:
+        return None
+    if dist_true is None:
+        raise ValueError(
+            f"criterion {plan.criterion!r} includes 'oracle': per-lane "
+            f"dist_true of shape ({b}, {n}) is required"
+        )
+    dt = np.asarray(dist_true, np.float32)
+    if dt.shape != (b, n):
+        raise ValueError(f"dist_true must have shape ({b}, {n}); got {dt.shape}")
+    out = np.full((b, n_pad), np.inf, np.float32)
+    out[:, :n] = dt
+    return jnp.asarray(out)
+
+
+def init_sharded_batch_state(sg: ShardedBatchGraph, sources,
+                             criterion: str = DEFAULT_CRITERION,
+                             dist_true=None) -> ShardedBatchState:
     """Fresh ``(B, n_pad)`` stepper state for B lanes over one sharded graph.
 
     ``sources[i] == -1`` (:data:`~repro.core.static_engine.EMPTY_LANE`)
     leaves lane ``i`` empty. Sources are validated against the *true* vertex
     count ``sg.n``, never ``n_pad``: an id in the padding range would seed a
     fringe on a vertex with no edges and silently answer all-inf.
+
+    ``criterion`` is any string ``run_phased`` accepts; a plan containing
+    ``'oracle'`` requires per-lane ``dist_true`` rows ``(B, n)``.
     """
+    plan = C.plan_for(criterion)
     src_np = validate_sources(
         sources, sg.n, EMPTY_LANE, f"in [0, {sg.n}) or -1 for an empty lane"
     )
@@ -348,6 +416,8 @@ def init_sharded_batch_state(sg: ShardedBatchGraph, sources) -> ShardedBatchStat
         phases=jnp.zeros((b,), jnp.int32),
         sum_fringe=jnp.zeros((b,), jnp.int32),
         relax_edges=jnp.zeros((b,), jnp.int32),
+        dist_true=_pad_dist_true(dist_true, plan, b, sg.n, sg.n_pad),
+        criterion=plan.criterion,
     )
 
 
@@ -373,19 +443,33 @@ _SHARDED_STEP_CACHE: dict = {}
 
 
 def _get_sharded_step(mesh: Mesh, axes, schedule: str,
-                      stop_on_lane_finish: bool, donate: bool):
+                      stop_on_lane_finish: bool, donate: bool,
+                      criterion: str):
     """Build (and memoise) the jitted SPMD chunked-step program.
 
     One compiled program per (mesh, axes, schedule, early-exit flag,
-    donation) — ``k_phases`` and the graph/state arrays are traced operands,
-    so chunk sizes and repeated calls never recompile.
+    donation, criterion) — ``k_phases`` and the graph/state arrays are
+    traced operands, so chunk sizes and repeated calls never recompile.
+
+    Criterion-plan lowering on the mesh (DESIGN.md Sec. 8): each *dynamic*
+    key is recomputed shard-locally every phase as one gated push +
+    segment-min + exchange round — the IN-family keys ride the forward edge
+    partition (the gate lives at the source's owner, the key lands at the
+    destination's owner, exactly the relax dataflow), the OUT-family keys
+    ride the transpose partition (gate at the destination's owner, key back
+    at the source's owner). The fused threshold pmin widens from ``(2, B)``
+    to ``(L, B)`` where L = 1 + |OUT terms|.
     """
-    key = (mesh, tuple(axes), schedule, bool(stop_on_lane_finish), bool(donate))
+    key = (mesh, tuple(axes), schedule, bool(stop_on_lane_finish),
+           bool(donate), criterion)
     hit = _SHARDED_STEP_CACHE.get(key)
     if hit is not None:
         return hit
     if schedule not in ("allreduce", "reduce_scatter"):
         raise ValueError(f"unknown exchange schedule: {schedule!r}")
+    plan = C.plan_for(criterion)
+    needs_t = plan.needs_out_adjacency
+    needs_o = plan.needs_oracle
     axes = tuple(axes)
     bspec = P(None, axes)  # (B, n_pad) lane-replicated, vertex-sharded
     vspec = P(axes)
@@ -394,10 +478,14 @@ def _get_sharded_step(mesh: Mesh, axes, schedule: str,
     num_shards = int(np.prod([mesh.shape[a] for a in axes]))
 
     def spmd(d, status, phases, sum_f, redges, trips,
-             in_min, out_min, out_deg, src_l, dst_g, w, k):
-        # shapes inside shard_map: d/status (B, n_loc); in_min/out_min/
-        # out_deg (n_loc,); edges (1, E_loc); counters replicated
+             in_min, out_min, out_deg, src_l, dst_g, w,
+             tsrc_l, tdst_g, tw, dist_true, k):
+        # shapes inside shard_map: d/status/dist_true (B, n_loc); in_min/
+        # out_min/out_deg (n_loc,); edge partitions (1, E_loc); counters
+        # replicated. tsrc_l/tdst_g/tw and dist_true are zero-size dummies
+        # unless the plan needs them (static shapes keep one spec list).
         src_l, dst_g, w = src_l[0], dst_g[0], w[0]
+        tsrc_l, tdst_g, tw = tsrc_l[0], tdst_g[0], tw[0]
         n_loc = d.shape[1]
         n_pad = n_loc * num_shards
         start = trips
@@ -409,23 +497,49 @@ def _get_sharded_step(mesh: Mesh, axes, schedule: str,
 
         live0 = live_vec(status)  # (B,) lanes live at chunk entry
 
+        def key_exchange(gate, from_l, to_g, ws):
+            """One dynamic-key round: gated push + local segmin + exchange.
+
+            Padding edges carry w = +inf (and gate is never -inf), so they
+            contribute a neutral +inf — the same masking convention as the
+            relax push and the ELL sentinel slots.
+            """
+            cand = gate[:, from_l] + ws[None]
+            contrib = jax.vmap(
+                lambda c: jax.ops.segment_min(c, to_g, num_segments=n_pad)
+            )(cand)
+            return _exchange_min_batch(contrib, axes, n_loc, schedule)
+
+        def dyn_keys(status):
+            keys = {}
+            for spec in plan.keys:
+                gate = C.key_gate(spec, status, in_min, out_min, keys)
+                if spec.side == "in":
+                    keys[spec.name] = key_exchange(gate, src_l, dst_g, w)
+                else:
+                    keys[spec.name] = key_exchange(gate, tsrc_l, tdst_g, tw)
+            return keys
+
         def body(carry):
             d, status, phases, sum_f, redges, trips, _ = carry
             fringe = status == 1
-            # one fused (2, B) pmin: per-lane min fringe distance and L_out
-            mins = jax.lax.pmin(
-                jnp.stack([
-                    jnp.min(jnp.where(fringe, d, INF), axis=1),
-                    jnp.min(jnp.where(fringe, d + out_min[None], INF), axis=1),
-                ]),
-                axes,
+            keys = dyn_keys(status)
+            # one fused (L, B) pmin: min fringe distance + the plan's OUT lanes
+            lanes = [jnp.min(jnp.where(fringe, d, INF), axis=1)]
+            for t in plan.out_terms:
+                kk = out_min[None] if t == "static" else keys[t]
+                lanes.append(jnp.min(jnp.where(fringe, d + kk, INF), axis=1))
+            mins = jax.lax.pmin(jnp.stack(lanes), axes)
+            settle = C.plan_union_mask(
+                plan, d, fringe, mins, keys, in_min, dist_true
             )
-            min_fd, l_out = mins[0], mins[1]
-            settle = fringe & (
-                (d - in_min[None] <= min_fd[:, None])
-                | (d <= l_out[:, None])
-                | (d <= min_fd[:, None])
-            )
+            if plan.needs_fallback:
+                # bare-oracle guard needs a global any(): one extra (B,) psum
+                any_mask = jax.lax.psum(
+                    jnp.sum(settle, axis=1, dtype=jnp.int32), axes
+                ) > 0
+                dijk = fringe & (d <= mins[0][:, None])
+                settle = jnp.where(any_mask[:, None], settle, dijk)
             cand = jnp.where(settle[:, src_l], d[:, src_l] + w[None], INF)
             contrib = jax.vmap(
                 lambda c: jax.ops.segment_min(c, dst_g, num_segments=n_pad)
@@ -471,16 +585,30 @@ def _get_sharded_step(mesh: Mesh, axes, schedule: str,
         spmd,
         mesh=mesh,
         in_specs=(bspec, bspec, rspec, rspec, rspec, rspec,
-                  vspec, vspec, vspec, espec, espec, espec, rspec),
+                  vspec, vspec, vspec, espec, espec, espec,
+                  espec, espec, espec, bspec, rspec),
         out_specs=(bspec, bspec, rspec, rspec, rspec, rspec),
     )
 
-    def step(state: ShardedBatchState, src_l, dst_g, w, in_min, out_min,
-             out_deg, k):
+    def step(state: ShardedBatchState, src_l, dst_g, w, tsrc_l, tdst_g, tw,
+             in_min, out_min, out_deg, k):
+        b = state.dist.shape[0]
+        if not needs_t:
+            # zero-size transpose dummies: nothing crosses the wire, the
+            # traced body never indexes them (plan is static)
+            p = src_l.shape[0]
+            tsrc_l = jnp.zeros((p, 0), jnp.int32)
+            tdst_g = jnp.zeros((p, 0), jnp.int32)
+            tw = jnp.zeros((p, 0), jnp.float32)
+        dist_true = state.dist_true
+        if not needs_o:
+            # (B, 0) dummy: sharded to (B, 0) blocks, never read by the body
+            dist_true = jnp.zeros((b, 0), jnp.float32)
         d, status, phases, sum_f, redges, trips = mapped(
             state.dist, state.status, state.phases, state.sum_fringe,
             state.relax_edges, state.trips,
-            in_min, out_min, out_deg, src_l, dst_g, w, k,
+            in_min, out_min, out_deg, src_l, dst_g, w,
+            tsrc_l, tdst_g, tw, dist_true, k,
         )
         return dataclasses.replace(
             state, dist=d, status=status, phases=phases, sum_fringe=sum_f,
@@ -524,18 +652,30 @@ def step_sharded_batch(
             f"graph was sharded for {sg.num_shards} devices but mesh axes "
             f"{axes} span {num}"
         )
-    fn = _get_sharded_step(mesh, axes, schedule, stop_on_lane_finish, donate)
-    return fn(state, sg.src_local, sg.dst, sg.w, sg.in_min, sg.out_min,
-              sg.out_deg, jnp.int32(k_phases))
+    if C.plan_for(state.criterion).needs_out_adjacency and sg.tsrc_local is None:
+        raise ValueError(
+            f"criterion {state.criterion!r} needs dynamic OUT keys but the "
+            f"graph was sharded with with_transpose=False; re-shard with "
+            f"shard_graph_batch(..., with_transpose=True)"
+        )
+    fn = _get_sharded_step(mesh, axes, schedule, stop_on_lane_finish, donate,
+                           state.criterion)
+    return fn(state, sg.src_local, sg.dst, sg.w,
+              sg.tsrc_local, sg.tdst, sg.tw,
+              sg.in_min, sg.out_min, sg.out_deg, jnp.int32(k_phases))
 
 
-def _reset_sharded_impl(state: ShardedBatchState, sources) -> ShardedBatchState:
+def _reset_sharded_impl(state: ShardedBatchState, sources,
+                        new_dist_true) -> ShardedBatchState:
     touch = sources >= EMPTY_LANE  # KEEP_LANE rows pass through unchanged
     fresh_d, fresh_s = _fresh_rows(sources, state.dist.shape[1])
 
     def ctr(old):
         return jnp.where(touch, 0, old)
 
+    dist_true = state.dist_true
+    if dist_true is not None and new_dist_true is not None:
+        dist_true = jnp.where(touch[:, None], new_dist_true, dist_true)
     return dataclasses.replace(
         state,
         dist=jnp.where(touch[:, None], fresh_d, state.dist),
@@ -543,6 +683,7 @@ def _reset_sharded_impl(state: ShardedBatchState, sources) -> ShardedBatchState:
         phases=ctr(state.phases),
         sum_fringe=ctr(state.sum_fringe),
         relax_edges=ctr(state.relax_edges),
+        dist_true=dist_true,
     )
 
 
@@ -551,21 +692,38 @@ _reset_sharded_donate = jax.jit(_reset_sharded_impl, donate_argnums=(0,))
 
 
 def reset_sharded_lanes(state: ShardedBatchState, sources,
-                        donate: bool = False) -> ShardedBatchState:
+                        donate: bool = False,
+                        dist_true=None) -> ShardedBatchState:
     """Re-initialise several lanes in one device call (sharded twin of
     :func:`~repro.core.static_engine.reset_lanes`).
 
     ``sources`` is ``(B,)``: ``-2`` keeps a lane's bits untouched, ``-1``
     parks it empty, a vertex id in ``[0, n)`` starts a fresh query there.
     Ids are validated against the true ``n`` — the padding range is invalid.
+    On an oracle-plan state, refilling a lane requires fresh ``dist_true``
+    rows ``(B, n)``.
     """
     src_np = validate_sources(
         sources, state.n, KEEP_LANE,
         f"in [0, {state.n}), -1 (park) or -2 (keep)",
         expect_lanes=state.num_lanes,
     )
+    dt = None
+    if state.dist_true is not None:
+        if dist_true is None and (src_np >= 0).any():
+            raise ValueError(
+                "criterion includes 'oracle': refilling lanes requires "
+                "dist_true rows (B, n)"
+            )
+        if dist_true is not None:
+            dt = _pad_dist_true(dist_true, state.plan, state.num_lanes,
+                                state.n, state.n_pad)
+    elif dist_true is not None:
+        raise ValueError(
+            f"criterion {state.criterion!r} does not read dist_true"
+        )
     fn = _reset_sharded_donate if donate else _reset_sharded
-    return fn(state, jnp.asarray(src_np))
+    return fn(state, jnp.asarray(src_np), dt)
 
 
 def sharded_lanes_active(state: ShardedBatchState) -> np.ndarray:
@@ -587,27 +745,37 @@ def harvest_sharded(state: ShardedBatchState) -> BatchedResult:
 
 def run_sharded_batch(g: Graph, mesh: Mesh, axes, sources,
                       schedule: str = "reduce_scatter",
-                      max_phases: int | None = None) -> BatchedResult:
+                      max_phases: int | None = None,
+                      criterion: str = DEFAULT_CRITERION,
+                      dist_true=None) -> BatchedResult:
     """One-shot batched distributed solve: shard, init, drain, harvest."""
     if isinstance(axes, str):
         axes = (axes,)
     num = int(np.prod([mesh.shape[a] for a in axes]))
-    sg = shard_graph_batch(g, num)
-    state = init_sharded_batch_state(sg, sources)
+    sg = shard_graph_batch(
+        g, num, with_transpose=C.plan_for(criterion).needs_out_adjacency
+    )
+    state = init_sharded_batch_state(sg, sources, criterion=criterion,
+                                     dist_true=dist_true)
     cap = int(max_phases) if max_phases is not None else g.n + 1
     state = step_sharded_batch(sg, state, mesh, axes, cap, schedule=schedule)
     return harvest_sharded(state)
 
 
 def run_distributed(g: Graph, mesh: Mesh, axes, source: int = 0,
-                    schedule: str = "reduce_scatter"):
+                    schedule: str = "reduce_scatter",
+                    criterion: str = DEFAULT_CRITERION,
+                    dist_true=None):
     """Convenience wrapper: shard, run, return (dist (n,), phases).
 
     Since the stepper refactor this is a thin B=1 front-end over
     :func:`step_sharded_batch`; results are bit-exact against the legacy
     single-query program (``tests/test_distributed_batch.py`` pins it).
+    ``dist_true`` is the (n,) true-distance row (oracle plans only).
     """
     if not 0 <= int(source) < g.n:
         raise ValueError(f"source must be in [0, {g.n}); got {source}")
-    res = run_sharded_batch(g, mesh, axes, [int(source)], schedule=schedule)
+    dt = None if dist_true is None else np.asarray(dist_true, np.float32)[None]
+    res = run_sharded_batch(g, mesh, axes, [int(source)], schedule=schedule,
+                            criterion=criterion, dist_true=dt)
     return res.dist[0], res.phases[0]

@@ -102,6 +102,25 @@ def to_numpy_csr(g: Graph):
     return indptr, dst, w
 
 
+def _build_ell(from_ids, to_ids, w, n, pad_multiple):
+    """(n, D) ELL rows keyed by ``to_ids`` holding (from_id, weight) pairs."""
+    real = np.isfinite(w)
+    from_ids, to_ids, w = from_ids[real], to_ids[real], w[real]
+    deg = np.zeros(n, np.int64)
+    np.add.at(deg, to_ids, 1)
+    max_deg = int(deg.max()) if deg.size and deg.max() > 0 else 1
+    d_pad = -(-max_deg // pad_multiple) * pad_multiple
+    cols = np.full((n, d_pad), n, np.int32)  # sentinel neighbour id == n
+    ws = np.full((n, d_pad), np.inf, np.float32)
+    order = np.argsort(to_ids, kind="stable")
+    from_ids, to_ids, w = from_ids[order], to_ids[order], w[order]
+    # position of each edge within its row
+    slot = np.arange(len(to_ids)) - np.searchsorted(to_ids, to_ids, side="left")
+    cols[to_ids, slot] = from_ids
+    ws[to_ids, slot] = w
+    return jnp.asarray(cols), jnp.asarray(ws)
+
+
 def to_ell_in(g: Graph, pad_multiple: int = 8):
     """ELL layout of *incoming* adjacency: (n, D) source-ids and weights.
 
@@ -121,25 +140,29 @@ def to_ell_in(g: Graph, pad_multiple: int = 8):
     hit = cache.get(pad_multiple)
     if hit is not None:
         return hit
-    src = np.asarray(g.src)
-    dst = np.asarray(g.dst)
-    w = np.asarray(g.w)
-    real = np.isfinite(w)
-    src, dst, w = src[real], dst[real], w[real]
-    n = g.n
-    deg = np.zeros(n, np.int64)
-    np.add.at(deg, dst, 1)
-    max_deg = int(deg.max()) if deg.size and deg.max() > 0 else 1
-    d_pad = -(-max_deg // pad_multiple) * pad_multiple
-    cols = np.full((n, d_pad), n, np.int32)  # sentinel source id == n
-    ws = np.full((n, d_pad), np.inf, np.float32)
-    order = np.argsort(dst, kind="stable")
-    src, dst, w = src[order], dst[order], w[order]
-    # position of each edge within its destination row
-    slot = np.arange(len(dst)) - np.searchsorted(dst, dst, side="left")
-    cols[dst, slot] = src
-    ws[dst, slot] = w
-    out = (jnp.asarray(cols), jnp.asarray(ws))
+    out = _build_ell(np.asarray(g.src), np.asarray(g.dst), np.asarray(g.w),
+                     g.n, pad_multiple)
+    cache[pad_multiple] = out
+    return out
+
+
+def to_ell_out(g: Graph, pad_multiple: int = 8):
+    """ELL layout of *outgoing* adjacency: (n, D) target-ids and weights.
+
+    The transpose twin of :func:`to_ell_in` — rows are source vertices,
+    columns hold (target, weight) pairs, D = max out-degree rounded up.
+    Consumed by the dynamic OUT-family criterion keys (``out_dyn`` /
+    ``out_weak`` / ``out_full``): ``ell_key_min`` reduces a gate vector
+    indexed by the *target* status over these rows, which is exactly
+    ``min over out-edges staying unsettled`` from the paper's Eq. 2/3/7.
+    Memoised per Graph instance like the incoming view.
+    """
+    cache = g.__dict__.setdefault("_ell_out_cache", {})
+    hit = cache.get(pad_multiple)
+    if hit is not None:
+        return hit
+    out = _build_ell(np.asarray(g.dst), np.asarray(g.src), np.asarray(g.w),
+                     g.n, pad_multiple)
     cache[pad_multiple] = out
     return out
 

@@ -38,9 +38,10 @@ class PhasedResult:
     phases: jax.Array  # scalar int32: number of phases executed
     sum_fringe: jax.Array  # scalar int32: sum over phases of |F| (paper Table 2)
     settled_per_phase: jax.Array | None  # (trace_len,) int32 (0 beyond
-    #   `phases`), or None when the producing engine does not trace per-phase
-    #   settles (run_phased_static: the stepper's state is fixed-shape across
-    #   chunking, so it carries no trace buffer)
+    #   `phases`), or None when tracing was disabled (trace_len=1: the ring
+    #   holds only the last phase, which must never masquerade as a profile).
+    #   run_phased_static populates it from the stepper's device-side trace
+    #   ring (BatchState.settled_trace), sized to the phase cap by default.
     relax_edges: jax.Array  # scalar int32: total out-edges relaxed (work)
 
 
@@ -128,4 +129,5 @@ def run_phased(
         dist_true = jnp.zeros((g.n,), jnp.float32)
     dist_true = jnp.asarray(dist_true, jnp.float32)
     cap = int(max_phases) if max_phases is not None else g.n + 1
-    return _run(g, jnp.int32(source), dist_true, criterion, int(trace_len), cap)
+    # the canonical spelling is the jit key: "out|in" and "in|out" compile once
+    return _run(g, jnp.int32(source), dist_true, "|".join(names), int(trace_len), cap)

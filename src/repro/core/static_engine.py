@@ -1,17 +1,31 @@
-"""Production phased-SSSP engine for the static criteria (paper Sec. 5).
+"""Production phased-SSSP engine executing compiled criterion plans.
 
-Specialised, kernel-backed implementation of ``INSTATIC | OUTSTATIC`` — the
-criterion the paper actually implements in parallel (and finds competitive
-with Delta-stepping). Per phase it does exactly two fused passes:
+Kernel-backed implementation of *any* registered criterion disjunction
+(``repro.core.criteria``), lowered through a
+:class:`~repro.core.criteria.CritPlan` (the default remains
+``INSTATIC | OUTSTATIC`` — the criterion the paper implements in parallel).
+Per phase it does:
 
-  1. ``frontier_crit`` kernel: one pass over vertex state -> the two global
-     thresholds (min_F d and L_out) + fringe size;
-  2. settle-mask (elementwise) + ``ell_relax`` kernel: one pass over the ELL
-     incoming adjacency -> candidate distance updates.
+  1. one ``ell_key_min`` pass per *dynamic* key the plan needs (masked
+     segment-min over the unsettled in-/out-neighbourhood; zero passes for
+     the all-static default);
+  2. ``frontier_crit`` lane kernel: one pass over vertex state -> the plan's
+     ``L = 1 + |OUT terms|`` fused thresholds + fringe size;
+  3. settle-mask (elementwise over the plan's terms) + ``ell_relax`` kernel:
+     one pass over the ELL incoming adjacency -> candidate distance updates.
+
+Cost model: 2 + (#dynamic keys) adjacency/vertex passes per phase, traded
+against the phase-count reduction of the stronger criterion (DESIGN.md
+Sec. 8). The plan is static jit metadata carried on the state
+(``BatchState.criterion``), so each criterion compiles exactly one step
+program; the dynamic keys themselves are data, carried in
+``BatchState.crit_keys`` and recomputed from status each phase.
 
 This is the single-device building block that ``repro.core.distributed``
 shard_maps over the production mesh. ``use_pallas=False`` swaps in the ref.py
-oracles (bit-identical math) for differential testing.
+oracles (bit-identical math) for differential testing, and every
+engine x criterion combination is bit-exact per row against ``run_phased``
+with the same criterion string (pinned by ``tests/test_stepper_criteria.py``).
 
 Stepper API (the resumable core every front-end shares):
 
@@ -50,7 +64,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import Graph, to_ell_in
+from repro.core import criteria as C
+from repro.core.graph import Graph, to_ell_in, to_ell_out
 from repro.core.phased import PhasedResult
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
@@ -60,13 +75,16 @@ INF = jnp.inf
 EMPTY_LANE = -1  # sentinel source id: lane holds no query
 KEEP_LANE = -2  # sentinel source id for reset_lanes: leave the lane untouched
 
+DEFAULT_CRITERION = "instatic|outstatic"  # the paper's parallel implementation
+
 
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=[
-        "dist", "status", "trips", "phases", "sum_fringe", "relax_edges", "out_deg",
+        "dist", "status", "trips", "phases", "sum_fringe", "relax_edges",
+        "out_deg", "crit_keys", "dist_true", "settled_trace",
     ],
-    meta_fields=[],
+    meta_fields=["criterion"],
 )
 @dataclasses.dataclass(frozen=True)
 class BatchState:
@@ -74,7 +92,9 @@ class BatchState:
 
     A pure pytree of fixed-shape device arrays: ``step_batch`` maps it to a
     new state of identical shapes, so the loop can be chunked, paused, and
-    individual lanes reset between chunks without recompilation.
+    individual lanes reset between chunks without recompilation. The
+    criterion rides along as *static metadata* (it keys the compiled step
+    program), the criterion's dynamic per-vertex keys as *data*.
     """
 
     dist: jax.Array  # (B, n) f32 tentative distances
@@ -86,6 +106,16 @@ class BatchState:
     sum_fringe: jax.Array  # (B,) int32: per-lane sum over live phases of |F|
     relax_edges: jax.Array  # (B,) int32: per-lane out-edges relaxed
     out_deg: jax.Array  # (n,) int32: graph out-degrees (carried for counters)
+    crit_keys: jax.Array | None  # (K_dyn, B, n) f32 dynamic criterion keys as
+    #   of the last executed phase (ordered like the plan's ``keys``), or
+    #   None for all-static plans. Recomputed from status inside every phase
+    #   (never read stale); carried so state shapes stay fixed across chunks.
+    dist_true: jax.Array | None  # (B, n) f32 per-lane true distances, only
+    #   when the plan includes 'oracle'; None otherwise
+    settled_trace: jax.Array  # (B, trace_len) int32 ring of per-phase settle
+    #   counts: phase p of a lane's current query lands in slot p % trace_len
+    #   (size the ring >= expected phases for a full profile; 1 = cheap off)
+    criterion: str  # canonical criterion string; static: selects the plan
 
     @property
     def num_lanes(self) -> int:
@@ -95,11 +125,16 @@ class BatchState:
     def n(self) -> int:
         return self.dist.shape[1]
 
+    @property
+    def plan(self) -> C.CritPlan:
+        return C.plan_for(self.criterion)
+
 
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=[
         "dist", "status", "phases", "sum_fringe", "relax_edges", "total_phases",
+        "settled_per_phase",
     ],
     meta_fields=[],
 )
@@ -115,6 +150,9 @@ class BatchedResult:
     total_phases: jax.Array  # scalar int32: loop trips since state init —
     #   equals max over rows for a one-shot batch; cumulative (spans every
     #   query the lanes ever served) when harvested from a resumed state
+    settled_per_phase: jax.Array | None = None  # (B, trace_len) int32 ring of
+    #   per-phase settle counts (see BatchState.settled_trace), or None when
+    #   the producing engine carries no trace (the sharded stepper)
 
 
 def validate_sources(sources, n: int, lo: int, range_desc: str,
@@ -161,8 +199,10 @@ def _fresh_rows(sources, n: int):
     return d, status
 
 
-@jax.jit
-def _init_state(g: Graph, sources: jax.Array) -> BatchState:
+@partial(jax.jit, static_argnames=("criterion", "trace_len"))
+def _init_state(g: Graph, sources: jax.Array, dist_true,
+                criterion: str, trace_len: int) -> BatchState:
+    plan = C.plan_for(criterion)
     n = g.n
     b = sources.shape[0]
     d0, status0 = _fresh_rows(sources, n)
@@ -178,43 +218,127 @@ def _init_state(g: Graph, sources: jax.Array) -> BatchState:
         sum_fringe=zeros_b,
         relax_edges=zeros_b,
         out_deg=out_deg,
+        crit_keys=(
+            jnp.zeros((len(plan.keys), b, n), jnp.float32) if plan.keys else None
+        ),
+        dist_true=dist_true,
+        settled_trace=jnp.zeros((b, trace_len), jnp.int32),
+        criterion=criterion,
     )
 
 
-def init_batch_state(g: Graph, sources) -> BatchState:
+def _validate_dist_true(dist_true, plan: C.CritPlan, b: int, n: int):
+    """(B, n) f32 dist_true when the plan reads it, else None.
+
+    A provided ``dist_true`` on a non-oracle plan is dropped (the reference
+    ``run_phased`` accepts-and-ignores it the same way), so callers can
+    plumb it unconditionally.
+    """
+    if not plan.needs_oracle:
+        return None
+    if dist_true is None:
+        raise ValueError(
+            f"criterion {plan.criterion!r} includes 'oracle': per-lane "
+            f"dist_true of shape ({b}, {n}) is required"
+        )
+    dt = jnp.asarray(dist_true, jnp.float32)
+    if dt.shape != (b, n):
+        raise ValueError(
+            f"dist_true must have shape ({b}, {n}); got {dt.shape}"
+        )
+    return dt
+
+
+def init_batch_state(
+    g: Graph,
+    sources,
+    criterion: str = DEFAULT_CRITERION,
+    dist_true=None,
+    trace_len: int = 1,
+) -> BatchState:
     """Fresh ``(B, n)`` stepper state for B lanes over one shared graph.
 
     ``sources[i] == -1`` (:data:`EMPTY_LANE`) leaves lane ``i`` empty — an
     all-+inf fixed point with no fringe that costs nothing per phase and can
     later be populated with :func:`reset_lane`.
+
+    ``criterion`` is any string ``run_phased`` accepts; it is canonicalised
+    and stored as static metadata on the state, selecting the compiled step
+    program. A plan containing ``'oracle'`` additionally requires per-lane
+    ``dist_true`` rows ``(B, n)``. ``trace_len`` sizes the per-lane
+    settled-per-phase ring (``>=`` expected phases records the full profile;
+    the default 1 keeps the state small).
     """
+    plan = C.plan_for(criterion)
     src_np = validate_sources(
         sources, g.n, EMPTY_LANE, f"in [0, {g.n}) or -1 for an empty lane"
     )
-    return _init_state(g, jnp.asarray(src_np))
+    if trace_len < 1:
+        raise ValueError(f"trace_len must be >= 1; got {trace_len}")
+    dt = _validate_dist_true(dist_true, plan, src_np.shape[0], g.n)
+    return _init_state(
+        g, jnp.asarray(src_np), dt, plan.criterion, int(trace_len)
+    )
+
+
+def _compute_keys(plan: C.CritPlan, g: Graph, status, ell_in, ell_out,
+                  use_pallas: bool) -> dict:
+    """The plan's dynamic keys for the current status: name -> (B, n) f32.
+
+    One masked ELL segment-min pass per key (dependencies first — e.g.
+    ``out_full`` consumes the ``out_dyn`` computed just before it), over the
+    incoming or outgoing adjacency view as the key's side dictates.
+    """
+    keys: dict = {}
+    for spec in plan.keys:
+        gate = C.key_gate(spec, status, g.in_min_static, g.out_min_static, keys)
+        cols, ws = ell_in if spec.side == "in" else ell_out
+        if use_pallas:
+            keys[spec.name] = kops.key_min_batch(gate, cols, ws)
+        else:
+            keys[spec.name] = kref.ell_key_min_batch_ref(
+                kops.pad_lane_batch(gate), cols, ws
+            )
+    return keys
+
+
+def _threshold_keys(plan: C.CritPlan, g: Graph, keys: dict, b: int):
+    """Key stack for the fused lane reduction: None (no OUT members),
+    ``(K, n)`` shared (all static — the default plan pays no per-lane key
+    traffic), or ``(K, B, n)`` per-lane (any dynamic OUT key)."""
+    if not plan.out_terms:
+        return None
+    if all(t == "static" for t in plan.out_terms):
+        return g.out_min_static[None]
+    return jnp.stack([
+        jnp.broadcast_to(g.out_min_static, (b, g.n)) if t == "static"
+        else keys[t]
+        for t in plan.out_terms
+    ])
 
 
 def _step_batch_impl(
-    g: Graph, ell_cols, ell_ws, state: BatchState, k_phases, use_pallas: bool,
-    stop_on_lane_finish: bool = False,
+    g: Graph, ell_cols, ell_ws, oell_cols, oell_ws, state: BatchState,
+    k_phases, use_pallas: bool, stop_on_lane_finish: bool = False,
 ) -> BatchState:
-    n = g.n
+    plan = C.plan_for(state.criterion)
     b = state.dist.shape[0]
-    lane_pad = -(-(n + 1) // 128) * 128
     start = state.trips
     live0 = jnp.any(state.status == 1, axis=1)  # (B,) lanes live at entry
+    trace_len = state.settled_trace.shape[1]
+    rows_b = jnp.arange(b)
+    ell_in = (ell_cols, ell_ws)
+    ell_out = (oell_cols, oell_ws)
 
-    def thresholds(d, status):
+    def thresholds(d, status, tkeys):
         if use_pallas:
-            return kops.static_thresholds_batch(d, status, g.out_min_static)
-        return kref.frontier_crit_batch_ref(d, status, g.out_min_static)
+            return kops.crit_thresholds_batch(d, status, tkeys)
+        return kref.frontier_crit_lanes_batch_ref(d, status, tkeys)
 
     def relax(d, settle):
         if use_pallas:
             return kops.relax_settled_batch(d, settle, ell_cols, ell_ws)
-        dmask = jnp.full((b, lane_pad), INF, jnp.float32).at[:, :n].set(
-            jnp.where(settle, d, INF)
-        )
+        dmask = kops.pad_lane_batch(jnp.where(settle, d, INF))
         return kref.ell_relax_batch_ref(dmask, ell_cols, ell_ws)
 
     def cond(s):
@@ -228,19 +352,33 @@ def _step_batch_impl(
 
     def body(s):
         d, status = s.dist, s.status
-        min_fd, l_out, n_f = thresholds(d, status)  # each (B,)
         fringe = status == 1
-        settle = fringe & (
-            (d - g.in_min_static[None] <= min_fd[:, None])
-            | (d <= l_out[:, None])
-            | (d <= min_fd[:, None])
+        keys = _compute_keys(plan, g, status, ell_in, ell_out, use_pallas)
+        mins, n_f = thresholds(d, status, _threshold_keys(plan, g, keys, b))
+        settle = C.plan_union_mask(
+            plan, d, fringe, mins, keys, g.in_min_static, s.dist_true
         )
+        if plan.needs_fallback:
+            # bare-oracle plans can produce an empty mask on a non-empty
+            # fringe (f32-vs-f64 tolerance); reproduce evaluate()'s DIJK
+            # guard per lane so progress — and run_phased parity — hold
+            dijk = fringe & (d <= mins[0][:, None])
+            settle = jnp.where(
+                jnp.any(settle, axis=1, keepdims=True), settle, dijk
+            )
         upd = relax(d, settle)
         new_d = jnp.minimum(d, upd)
         new_status = jnp.where(
             settle, 2, jnp.where((status == 0) & (upd < INF), 1, status)
         )
         live = (n_f > 0).astype(jnp.int32)  # finished/empty lanes stop counting
+        # ring write: phase p lands in slot p % trace_len; dead lanes must
+        # not write (their stuck slot may hold a wrapped live entry)
+        idx = s.phases % trace_len
+        n_settled = jnp.sum(settle, axis=1, dtype=jnp.int32)
+        trace = s.settled_trace.at[rows_b, idx].set(
+            jnp.where(n_f > 0, n_settled, s.settled_trace[rows_b, idx])
+        )
         return BatchState(
             dist=new_d,
             status=new_status,
@@ -250,6 +388,13 @@ def _step_batch_impl(
             relax_edges=s.relax_edges
             + jnp.sum(jnp.where(settle, s.out_deg[None], 0), axis=1, dtype=jnp.int32),
             out_deg=s.out_deg,
+            crit_keys=(
+                jnp.stack([keys[k.name] for k in plan.keys])
+                if plan.keys else None
+            ),
+            dist_true=s.dist_true,
+            settled_trace=trace,
+            criterion=s.criterion,
         )
 
     return jax.lax.while_loop(cond, body, state)
@@ -260,7 +405,7 @@ _step_batch = jax.jit(_step_batch_impl, static_argnames=_STEP_STATICS)
 # donating variant: XLA may update the (B, n) state in place instead of
 # copying it per call (no-op on CPU, which ignores donation)
 _step_batch_donate = jax.jit(
-    _step_batch_impl, static_argnames=_STEP_STATICS, donate_argnums=(3,)
+    _step_batch_impl, static_argnames=_STEP_STATICS, donate_argnums=(5,)
 )
 
 
@@ -272,6 +417,7 @@ def step_batch(
     use_pallas: bool = True,
     stop_on_lane_finish: bool = False,
     donate: bool = False,
+    ell_out=None,
 ) -> BatchState:
     """Advance the phase loop by up to ``k_phases`` more trips.
 
@@ -280,7 +426,13 @@ def step_batch(
     as any lane that was live on entry terminates (the continuous batcher
     uses this to refill finished lanes with zero idle trips). ``k_phases`` is
     a traced operand, so varying it does not trigger recompilation; shapes
-    are fixed by ``(B, n)``.
+    are fixed by ``(B, n)`` and the state's criterion plan selects the
+    compiled body (stored as static metadata, so each criterion compiles
+    once).
+
+    ``ell_out`` optionally passes a precomputed ``to_ell_out(g)``; it is
+    built (and memoised) on demand only when the plan carries OUT-side
+    dynamic keys.
 
     ``donate=True`` donates the input state's buffers so accelerator
     backends update them in place rather than copying ~8·B·n bytes per
@@ -290,14 +442,21 @@ def step_batch(
     if ell is None:
         ell = to_ell_in(g)
     cols, ws = ell
+    plan = C.plan_for(state.criterion)
+    if plan.needs_out_adjacency:
+        if ell_out is None:
+            ell_out = to_ell_out(g)
+        ocols, ows = ell_out
+    else:
+        ocols = ows = None
     fn = _step_batch_donate if donate else _step_batch
     return fn(
-        g, cols, ws, state, jnp.int32(k_phases), bool(use_pallas),
+        g, cols, ws, ocols, ows, state, jnp.int32(k_phases), bool(use_pallas),
         bool(stop_on_lane_finish),
     )
 
 
-def _reset_lanes_impl(state: BatchState, sources) -> BatchState:
+def _reset_lanes_impl(state: BatchState, sources, new_dist_true) -> BatchState:
     b, n = state.dist.shape
     touch = sources >= EMPTY_LANE  # KEEP_LANE rows pass through unchanged
     fresh_d, fresh_s = _fresh_rows(sources, n)
@@ -305,6 +464,9 @@ def _reset_lanes_impl(state: BatchState, sources) -> BatchState:
     def ctr(old):
         return jnp.where(touch, 0, old)
 
+    dist_true = state.dist_true
+    if dist_true is not None and new_dist_true is not None:
+        dist_true = jnp.where(touch[:, None], new_dist_true, dist_true)
     return BatchState(
         dist=jnp.where(touch[:, None], fresh_d, state.dist),
         status=jnp.where(touch[:, None], fresh_s, state.status),
@@ -313,13 +475,20 @@ def _reset_lanes_impl(state: BatchState, sources) -> BatchState:
         sum_fringe=ctr(state.sum_fringe),
         relax_edges=ctr(state.relax_edges),
         out_deg=state.out_deg,
+        crit_keys=(
+            None if state.crit_keys is None
+            else jnp.where(touch[None, :, None], 0.0, state.crit_keys)
+        ),
+        dist_true=dist_true,
+        settled_trace=jnp.where(touch[:, None], 0, state.settled_trace),
+        criterion=state.criterion,
     )
 
 
 def _reset_lane_impl(state: BatchState, lane, source) -> BatchState:
     b = state.dist.shape[0]
     vec = jnp.full((b,), KEEP_LANE, jnp.int32).at[lane].set(source)
-    return _reset_lanes_impl(state, vec)
+    return _reset_lanes_impl(state, vec, None)
 
 
 _reset_lane = jax.jit(_reset_lane_impl)
@@ -330,7 +499,8 @@ _reset_lanes = jax.jit(_reset_lanes_impl)
 _reset_lanes_donate = jax.jit(_reset_lanes_impl, donate_argnums=(0,))
 
 
-def reset_lanes(state: BatchState, sources, donate: bool = False) -> BatchState:
+def reset_lanes(state: BatchState, sources, donate: bool = False,
+                dist_true=None) -> BatchState:
     """Re-initialise several lanes in one device call.
 
     ``sources`` is a ``(B,)`` int vector aligned with the lanes: entry
@@ -339,14 +509,35 @@ def reset_lanes(state: BatchState, sources, donate: bool = False) -> BatchState:
     query there. Semantically identical to a sequence of :func:`reset_lane`
     calls, but an admission burst costs one dispatch regardless of how many
     lanes it refills (the continuous batcher's admission path).
+
+    On an oracle-plan state, refilling a lane with a real source requires
+    fresh per-lane ``dist_true`` rows ``(B, n)`` (touched rows replace the
+    stored ones); parking/keeping lanes does not.
     """
     src_np = validate_sources(
         sources, state.n, KEEP_LANE,
         f"in [0, {state.n}), -1 (park) or -2 (keep)",
         expect_lanes=state.num_lanes,
     )
+    dt = None
+    if state.dist_true is not None:
+        if dist_true is None and (src_np >= 0).any():
+            raise ValueError(
+                "criterion includes 'oracle': refilling lanes requires "
+                "dist_true rows (B, n)"
+            )
+        if dist_true is not None:
+            dt = jnp.asarray(dist_true, jnp.float32)
+            if dt.shape != state.dist.shape:
+                raise ValueError(
+                    f"dist_true must have shape {state.dist.shape}; got {dt.shape}"
+                )
+    elif dist_true is not None:
+        raise ValueError(
+            f"criterion {state.criterion!r} does not read dist_true"
+        )
     fn = _reset_lanes_donate if donate else _reset_lanes
-    return fn(state, jnp.asarray(src_np))
+    return fn(state, jnp.asarray(src_np), dt)
 
 
 def reset_lane(
@@ -368,6 +559,11 @@ def reset_lane(
         raise ValueError(f"lane must be in [0, {state.num_lanes}); got {lane}")
     if not EMPTY_LANE <= source < state.n:
         raise ValueError(f"source must be in [0, {state.n}) or -1; got {source}")
+    if state.dist_true is not None and source >= 0:
+        raise ValueError(
+            "criterion includes 'oracle': use reset_lanes(..., dist_true=...) "
+            "to refill a lane with its true-distance row"
+        )
     fn = _reset_lane_donate if donate else _reset_lane
     return fn(state, jnp.int32(lane), jnp.int32(source))
 
@@ -378,7 +574,14 @@ def lanes_active(state: BatchState) -> np.ndarray:
 
 
 def harvest(state: BatchState) -> BatchedResult:
-    """Freeze a stepper state into a :class:`BatchedResult`."""
+    """Freeze a stepper state into a :class:`BatchedResult`.
+
+    ``settled_per_phase`` is the ``(B, trace_len)`` ring only when tracing
+    was actually enabled (``trace_len > 1``); a length-1 ring holds just the
+    last phase's count, and handing that out as "the trace" is exactly the
+    plausible-but-fake-profile hazard PR 3 removed — so it maps to None.
+    """
+    trace = state.settled_trace if state.settled_trace.shape[1] > 1 else None
     return BatchedResult(
         dist=state.dist,
         status=state.status.astype(jnp.int8),
@@ -386,6 +589,7 @@ def harvest(state: BatchState) -> BatchedResult:
         sum_fringe=state.sum_fringe,
         relax_edges=state.relax_edges,
         total_phases=state.trips,
+        settled_per_phase=trace,
     )
 
 
@@ -395,25 +599,47 @@ def run_phased_static(
     ell=None,
     use_pallas: bool = True,
     max_phases: int | None = None,
+    criterion: str = DEFAULT_CRITERION,
+    dist_true=None,
+    trace_len: int | None = None,
+    ell_out=None,
 ) -> PhasedResult:
-    """INSTATIC|OUTSTATIC phased SSSP via the Pallas kernels (B=1 stepper)."""
+    """Phased SSSP via the Pallas kernels (B=1 stepper), any criterion.
+
+    ``trace_len`` sizes the settled-per-phase ring; the default (None)
+    covers the phase cap so the result carries the *full* per-phase profile
+    — every criterion settles >= 1 vertex per phase, so the ring never
+    wraps and matches ``run_phased``'s trace exactly. ``dist_true`` is the
+    (n,) true-distance row, required iff the criterion includes 'oracle'.
+    """
     if ell is None:
         ell = to_ell_in(g)
     cap = int(max_phases) if max_phases is not None else g.n + 1
     if not 0 <= int(source) < g.n:
         raise ValueError(f"source must be in [0, {g.n}); got {source}")
-    state = init_batch_state(g, [int(source)])
-    state = step_batch(g, state, cap, ell=ell, use_pallas=use_pallas)
+    if trace_len is None:
+        trace_len = cap
+    dt = None
+    if dist_true is not None:
+        dt = jnp.asarray(dist_true, jnp.float32).reshape(1, g.n)
+    state = init_batch_state(
+        g, [int(source)], criterion=criterion, dist_true=dt,
+        trace_len=trace_len,
+    )
+    state = step_batch(
+        g, state, cap, ell=ell, use_pallas=use_pallas, ell_out=ell_out
+    )
     return PhasedResult(
         dist=state.dist[0],
         status=state.status[0].astype(jnp.int8),
         phases=state.phases[0],
         sum_fringe=state.sum_fringe[0],
-        # the stepper does not record a per-phase settled trace (its state is
-        # fixed-shape across arbitrary chunking); None means "not traced" —
-        # never a fabricated all-zeros vector a consumer could mistake for a
-        # real profile. Use run_phased(..., trace_len=n+1) for the trace.
-        settled_per_phase=None,
+        # same honesty rule as harvest(): an explicitly disabled ring
+        # (trace_len=1 holds only the last phase) reads as "not traced",
+        # never as a one-slot pseudo-profile
+        settled_per_phase=(
+            state.settled_trace[0] if trace_len > 1 else None
+        ),
         relax_edges=state.relax_edges[0],
     )
 
@@ -424,8 +650,12 @@ def run_phased_static_batch(
     ell=None,
     use_pallas: bool = True,
     max_phases: int | None = None,
+    criterion: str = DEFAULT_CRITERION,
+    dist_true=None,
+    trace_len: int = 1,
+    ell_out=None,
 ) -> BatchedResult:
-    """Batched INSTATIC|OUTSTATIC SSSP: B sources, one graph, one phase loop.
+    """Batched phased SSSP: B sources, one graph, one phase loop.
 
     Args:
       g: the shared input graph.
@@ -436,9 +666,16 @@ def run_phased_static_batch(
       use_pallas: kernels (True) vs ref.py oracles (False); bit-identical.
       max_phases: safety cap on loop trips (default n+1: every live row
         settles >= 1 vertex per phase, so all rows end within n phases).
+      criterion: any registered criterion disjunction (default the paper's
+        ``instatic|outstatic``); selects the compiled plan.
+      dist_true: (B, n) per-row true distances, required iff the criterion
+        includes 'oracle'.
+      trace_len: settled-per-phase ring length per row (default 1 = off).
+      ell_out: optional precomputed ``to_ell_out(g)`` for dynamic OUT keys.
 
-    Row ``i`` of the result equals ``run_phased_static(g, sources[i])``
-    exactly (same float ops in the same phase structure, per-row).
+    Row ``i`` of the result equals ``run_phased_static(g, sources[i],
+    criterion=criterion)`` exactly (same float ops in the same phase
+    structure, per-row).
     """
     if ell is None:
         ell = to_ell_in(g)
@@ -446,6 +683,11 @@ def run_phased_static_batch(
     # silently dropped by the scatter (all-inf row, 0 phases)
     src_np = validate_sources(sources, g.n, 0, f"in [0, {g.n})")
     cap = int(max_phases) if max_phases is not None else g.n + 1
-    state = init_batch_state(g, src_np)
-    state = step_batch(g, state, cap, ell=ell, use_pallas=use_pallas)
+    state = init_batch_state(
+        g, src_np, criterion=criterion, dist_true=dist_true,
+        trace_len=trace_len,
+    )
+    state = step_batch(
+        g, state, cap, ell=ell, use_pallas=use_pallas, ell_out=ell_out
+    )
     return harvest(state)

@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the phased-SSSP hot spots (validated in
 interpret mode on CPU; see ref.py for the pure-jnp oracles)."""
 from repro.kernels.ops import (
+    crit_thresholds_batch,
+    key_min_batch,
     relax_settled,
     relax_settled_batch,
     static_thresholds,
@@ -8,6 +10,8 @@ from repro.kernels.ops import (
 )
 
 __all__ = [
+    "crit_thresholds_batch",
+    "key_min_batch",
     "relax_settled",
     "relax_settled_batch",
     "static_thresholds",

@@ -1,27 +1,35 @@
-"""Pallas TPU kernel: fused frontier reduction for the static criteria.
+"""Pallas TPU kernel: fused frontier reduction over plan-defined lanes.
 
-One pass over the vertex state produces the three global scalars every phase
-of the ``INSTATIC | OUTSTATIC`` engine needs:
+One pass over the vertex state produces every per-phase threshold a
+:class:`~repro.core.criteria.CritPlan` needs, plus the fringe size:
 
-    lane 0 (f32): min_F d            (threshold of DIJK / INSTATIC, Eq. 4)
-    lane 1 (f32): min_F (d + minout) (threshold L of OUTSTATIC, Eq. 5)
-    int acc (i32): |F|               (fringe size, the paper's work measure)
+    lane 0     (f32): min_F d              (DIJK / IN-family threshold)
+    lane 1+k   (f32): min_F (d + key_k)    (one lane per OUT-family member)
+    int acc    (i32): |F|                  (the paper's work measure)
 
-Unfused this is three masked reductions = three passes over ``d``/``status``;
-the fusion makes the criteria *memory-roofline optimal* (each vertex word is
-read exactly once per phase). Grid-step accumulation: every tile min/sum-
-accumulates into the same VMEM output blocks, initialised at grid step 0 —
-the canonical Pallas reduction idiom (output block index maps are constant,
-so the blocks persist across steps).
+Unfused this is 2+K masked reductions = 2+K passes over ``d``/``status``;
+the fusion keeps the criteria *memory-roofline optimal* (each vertex word is
+read exactly once per phase however many lanes the plan carries). Grid-step
+accumulation: every tile min/sum-accumulates into the same VMEM output
+blocks, initialised at grid step 0 — the canonical Pallas reduction idiom
+(output block index maps are constant, so the blocks persist across steps).
+
+Key stacks come in two layouts, chosen by the plan:
+  * shared  ``(K, n)``    — all OUT keys static (the default
+    ``instatic|outstatic`` plan): one load of each key vector serves every
+    batch lane, exactly the pre-plan traffic;
+  * per-lane ``(K, B, n)`` — any dynamic key (each lane's status differs, so
+    its keys differ): the stack is lane-striped; the extra read is noise next
+    to the per-key ``ell_key_min`` pass that produced it.
 
 The fringe count accumulates in a dedicated ``int32`` output block, never in
 a float lane: f32 sums silently lose counts past 2^24, which a batch of
 large-graph queries reaches (see DESIGN.md Sec. 4).
 
-The batched variant (:func:`frontier_crit_batch`) reduces per-batch-row
-thresholds ``(B, 3)`` in the same single pass: the vertex axis is tiled by
-the grid while every tile carries all ``B`` lanes, so one load of the shared
-``out_min`` vector serves the whole batch.
+``frontier_crit``/``frontier_crit_batch`` are the historical fixed-2-lane
+entry points (INSTATIC|OUTSTATIC), now thin wrappers over the lane kernel
+with ``keys = out_min[None]`` — kept because tests pin them against ref.py
+and the 1-D/2-D parity contract (DESIGN.md Sec. 5).
 """
 from __future__ import annotations
 
@@ -35,65 +43,21 @@ INF = jnp.inf
 _LANES = 128
 
 
-def _crit_kernel(d_ref, status_ref, outmin_ref, acc_ref, cnt_ref):
-    step = pl.program_id(0)
-
-    @pl.when(step == 0)
-    def _init():
-        acc_ref[...] = jnp.full((1, _LANES), INF, jnp.float32)
-        cnt_ref[...] = jnp.zeros((1, _LANES), jnp.int32)
-
-    d = d_ref[...]
-    fringe = status_ref[...] == 1
-    min_fd = jnp.min(jnp.where(fringe, d, INF))
-    l_out = jnp.min(jnp.where(fringe, d + outmin_ref[...], INF))
-    n_f = jnp.sum(fringe, dtype=jnp.int32)
-    acc = acc_ref[...]
-    acc = acc.at[0, 0].set(jnp.minimum(acc[0, 0], min_fd))
-    acc = acc.at[0, 1].set(jnp.minimum(acc[0, 1], l_out))
-    acc_ref[...] = acc
-    cnt_ref[...] = cnt_ref[...].at[0, 0].add(n_f)
+def _acc_lanes(d, fringe, keys, acc, cnt):
+    """Shared accumulation body: fold this tile into the (B, _LANES) blocks."""
+    min_fd = jnp.min(jnp.where(fringe, d, INF), axis=1)  # (B,)
+    acc = acc.at[:, 0].set(jnp.minimum(acc[:, 0], min_fd))
+    k_count = 0 if keys is None else keys.shape[0]
+    for k in range(k_count):  # K is static; the loop unrolls into the pass
+        kk = keys[k]  # (B, block) per-lane or (block,) shared
+        term = d + (kk if kk.ndim == 2 else kk[None, :])
+        l_k = jnp.min(jnp.where(fringe, term, INF), axis=1)
+        acc = acc.at[:, 1 + k].set(jnp.minimum(acc[:, 1 + k], l_k))
+    cnt = cnt.at[:, 0].add(jnp.sum(fringe, axis=1, dtype=jnp.int32))
+    return acc, cnt
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def frontier_crit(
-    d: jax.Array,  # (n,) f32 tentative distances
-    status: jax.Array,  # (n,) int32 (0=U, 1=F, 2=S)
-    out_min: jax.Array,  # (n,) f32 static min outgoing weight (+inf if none)
-    *,
-    block: int = 2048,
-    interpret: bool = True,
-):
-    """Returns (min_fringe_d f32, l_out f32, fringe_count i32) scalars."""
-    n = d.shape[0]
-    n_pad = -(-n // block) * block
-    if n_pad != n:
-        d = jnp.pad(d, (0, n_pad - n), constant_values=INF)
-        status = jnp.pad(status, (0, n_pad - n))  # pad as U: never fringe
-        out_min = jnp.pad(out_min, (0, n_pad - n), constant_values=INF)
-    grid = n_pad // block
-    acc, cnt = pl.pallas_call(
-        _crit_kernel,
-        grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, _LANES), lambda i: (0, 0)),
-            pl.BlockSpec((1, _LANES), lambda i: (0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((1, _LANES), jnp.float32),
-            jax.ShapeDtypeStruct((1, _LANES), jnp.int32),
-        ],
-        interpret=interpret,
-    )(d, status.astype(jnp.int32), out_min)
-    return acc[0, 0], acc[0, 1], cnt[0, 0]
-
-
-def _crit_kernel_batch(d_ref, status_ref, outmin_ref, acc_ref, cnt_ref):
+def _lanes_kernel(d_ref, status_ref, keys_ref, acc_ref, cnt_ref):
     step = pl.program_id(0)
 
     @pl.when(step == 0)
@@ -101,44 +65,75 @@ def _crit_kernel_batch(d_ref, status_ref, outmin_ref, acc_ref, cnt_ref):
         acc_ref[...] = jnp.full(acc_ref.shape, INF, jnp.float32)
         cnt_ref[...] = jnp.zeros(cnt_ref.shape, jnp.int32)
 
-    d = d_ref[...]  # (B, block)
-    fringe = status_ref[...] == 1  # (B, block)
-    om = outmin_ref[...]  # (block,) shared across the batch
-    min_fd = jnp.min(jnp.where(fringe, d, INF), axis=1)  # (B,)
-    l_out = jnp.min(jnp.where(fringe, d + om[None, :], INF), axis=1)
-    n_f = jnp.sum(fringe, axis=1, dtype=jnp.int32)  # (B,)
-    acc = acc_ref[...]
-    acc = acc.at[:, 0].set(jnp.minimum(acc[:, 0], min_fd))
-    acc = acc.at[:, 1].set(jnp.minimum(acc[:, 1], l_out))
+    acc, cnt = _acc_lanes(
+        d_ref[...], status_ref[...] == 1, keys_ref[...],
+        acc_ref[...], cnt_ref[...],
+    )
     acc_ref[...] = acc
-    cnt_ref[...] = cnt_ref[...].at[:, 0].add(n_f)
+    cnt_ref[...] = cnt
+
+
+def _lanes_kernel_nokeys(d_ref, status_ref, acc_ref, cnt_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[...] = jnp.full(acc_ref.shape, INF, jnp.float32)
+        cnt_ref[...] = jnp.zeros(cnt_ref.shape, jnp.int32)
+
+    acc, cnt = _acc_lanes(
+        d_ref[...], status_ref[...] == 1, None, acc_ref[...], cnt_ref[...]
+    )
+    acc_ref[...] = acc
+    cnt_ref[...] = cnt
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def frontier_crit_batch(
+def frontier_crit_lanes_batch(
     d: jax.Array,  # (B, n) f32 tentative distances, one row per source
     status: jax.Array,  # (B, n) int32 (0=U, 1=F, 2=S)
-    out_min: jax.Array,  # (n,) f32, shared by every batch row
+    keys: jax.Array | None,  # (K, n) shared, (K, B, n) per-lane, or None (K=0)
     *,
     block: int = 2048,
     interpret: bool = True,
 ):
-    """Returns (min_fringe_d (B,) f32, l_out (B,) f32, fringe_count (B,) i32)."""
+    """Returns (mins (1+K, B) f32, fringe_count (B,) i32).
+
+    ``mins[0]`` is the per-lane min fringe distance; ``mins[1 + k]`` is the
+    OUT-family threshold ``min_F (d + keys[k])``. A plan with no OUT members
+    passes ``keys=None`` and gets the 1-lane reduction.
+    """
     b, n = d.shape
     n_pad = -(-n // block) * block
     if n_pad != n:
         d = jnp.pad(d, ((0, 0), (0, n_pad - n)), constant_values=INF)
-        status = jnp.pad(status, ((0, 0), (0, n_pad - n)))
-        out_min = jnp.pad(out_min, (0, n_pad - n), constant_values=INF)
+        status = jnp.pad(status, ((0, 0), (0, n_pad - n)))  # pad U: never fringe
+        if keys is not None:
+            pad = [(0, 0)] * (keys.ndim - 1) + [(0, n_pad - n)]
+            keys = jnp.pad(keys, pad, constant_values=INF)
     grid = n_pad // block
+    k_count = 0 if keys is None else keys.shape[0]
+    if k_count + 1 > _LANES:
+        raise ValueError(f"too many threshold lanes: {k_count + 1} > {_LANES}")
+    in_specs = [
+        pl.BlockSpec((b, block), lambda i: (0, i)),
+        pl.BlockSpec((b, block), lambda i: (0, i)),
+    ]
+    operands = [d, status.astype(jnp.int32)]
+    kernel = _lanes_kernel_nokeys
+    if keys is not None:
+        kernel = _lanes_kernel
+        if keys.ndim == 2:  # (K, n) shared across lanes
+            in_specs.append(pl.BlockSpec((k_count, block), lambda i: (0, i)))
+        else:  # (K, B, n) per-lane
+            in_specs.append(
+                pl.BlockSpec((k_count, b, block), lambda i: (0, 0, i))
+            )
+        operands.append(keys.astype(jnp.float32))
     acc, cnt = pl.pallas_call(
-        _crit_kernel_batch,
+        kernel,
         grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((b, block), lambda i: (0, i)),
-            pl.BlockSpec((b, block), lambda i: (0, i)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((b, _LANES), lambda i: (0, 0)),
             pl.BlockSpec((b, _LANES), lambda i: (0, 0)),
@@ -148,5 +143,51 @@ def frontier_crit_batch(
             jax.ShapeDtypeStruct((b, _LANES), jnp.int32),
         ],
         interpret=interpret,
-    )(d, status.astype(jnp.int32), out_min)
-    return acc[:, 0], acc[:, 1], cnt[:, 0]
+    )(*operands)
+    return acc[:, : 1 + k_count].T, cnt[:, 0]
+
+
+def frontier_crit_lanes(
+    d: jax.Array,  # (n,) f32
+    status: jax.Array,  # (n,) int32
+    keys: jax.Array | None,  # (K, n) or None
+    *,
+    block: int = 2048,
+    interpret: bool = True,
+):
+    """1-D entry point: returns (mins (1+K,) f32, fringe_count i32 scalar)."""
+    mins, cnt = frontier_crit_lanes_batch(
+        d[None], status[None], keys, block=block, interpret=interpret
+    )
+    return mins[:, 0], cnt[0]
+
+
+def frontier_crit(
+    d: jax.Array,  # (n,) f32 tentative distances
+    status: jax.Array,  # (n,) int32 (0=U, 1=F, 2=S)
+    out_min: jax.Array,  # (n,) f32 static min outgoing weight (+inf if none)
+    *,
+    block: int = 2048,
+    interpret: bool = True,
+):
+    """Returns (min_fringe_d f32, l_out f32, fringe_count i32) scalars —
+    the fixed INSTATIC|OUTSTATIC lane pair."""
+    mins, cnt = frontier_crit_lanes(
+        d, status, out_min[None], block=block, interpret=interpret
+    )
+    return mins[0], mins[1], cnt
+
+
+def frontier_crit_batch(
+    d: jax.Array,  # (B, n) f32 tentative distances, one row per source
+    status: jax.Array,  # (B, n) int32 (0=U, 1=F, 2=S)
+    out_min: jax.Array,  # (n,) f32, shared by every batch row
+    *,
+    block: int = 2048,
+    interpret: bool = True,
+):
+    """Returns (min_fringe_d (B,) f32, l_out (B,) f32, fringe_count (B,) i32)."""
+    mins, cnt = frontier_crit_lanes_batch(
+        d, status, out_min[None], block=block, interpret=interpret
+    )
+    return mins[0], mins[1], cnt

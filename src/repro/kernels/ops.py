@@ -14,14 +14,33 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ell_key_min import ell_key_min, ell_key_min_batch
 from repro.kernels.ell_relax import ell_relax, ell_relax_batch
-from repro.kernels.frontier_crit import frontier_crit, frontier_crit_batch
+from repro.kernels.frontier_crit import (
+    frontier_crit,
+    frontier_crit_batch,
+    frontier_crit_lanes_batch,
+)
 
 INF = jnp.inf
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def pad_lane_batch(x: jax.Array, fill=INF) -> jax.Array:
+    """(B, n) -> (B, lane_pad) with ``fill`` beyond column n.
+
+    THE sentinel/alignment convention of every ELL gather kernel: one extra
+    slot for the sentinel neighbour id (index n) plus rounding to the
+    128-lane multiple, all carrying a min-neutral fill. Kernel-path wrappers
+    and the engines' ref-path twins must share this helper so the two paths
+    can never drift apart bitwise.
+    """
+    b, n = x.shape
+    lane_pad = -(-(n + 1) // 128) * 128
+    return jnp.full((b, lane_pad), fill, jnp.float32).at[:, :n].set(x)
 
 
 def relax_settled(
@@ -73,10 +92,7 @@ def relax_settled_batch(
     """Batched candidate updates (B, n); one adjacency load serves all rows."""
     if interpret is None:
         interpret = _default_interpret()
-    b, n = d.shape
-    lane_pad = -(-(n + 1) // 128) * 128
-    dmask = jnp.full((b, lane_pad), INF, jnp.float32)
-    dmask = dmask.at[:, :n].set(jnp.where(settle_mask, d, INF))
+    dmask = pad_lane_batch(jnp.where(settle_mask, d, INF))
     return ell_relax_batch(
         dmask, ell_cols, ell_ws, block_rows=block_rows, interpret=interpret
     )
@@ -95,4 +111,45 @@ def static_thresholds_batch(
         interpret = _default_interpret()
     return frontier_crit_batch(
         d, status, out_min_static, block=block, interpret=interpret
+    )
+
+
+def crit_thresholds_batch(
+    d: jax.Array,  # (B, n)
+    status: jax.Array,  # (B, n)
+    keys: jax.Array | None,  # (K, n) shared | (K, B, n) per-lane | None
+    *,
+    block: int = 2048,
+    interpret: bool | None = None,
+):
+    """Plan-lane thresholds: (mins (1+K, B), |F| (B,)) in one fused pass.
+
+    The criterion-plan generalisation of :func:`static_thresholds_batch`:
+    ``mins[0]`` is min_F d, ``mins[1+k]`` the OUT lane for ``keys[k]``.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    return frontier_crit_lanes_batch(d, status, keys, block=block,
+                                     interpret=interpret)
+
+
+def key_min_batch(
+    gate: jax.Array,  # (B, n) f32 per-lane criterion gate (not yet padded)
+    ell_cols: jax.Array,  # (n, D) int32 adjacency (incoming OR outgoing view)
+    ell_ws: jax.Array,  # (n, D) f32
+    *,
+    block_rows: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Dynamic criterion key (B, n): per-lane min of gate[neighbour] + w.
+
+    Pads the gate to the lane multiple with +inf so the sentinel slot
+    (index n) and alignment padding are neutral, mirroring
+    :func:`relax_settled_batch`'s masking convention.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    return ell_key_min_batch(
+        pad_lane_batch(gate), ell_cols, ell_ws, block_rows=block_rows,
+        interpret=interpret,
     )

@@ -37,3 +37,32 @@ def frontier_crit_batch_ref(d: jax.Array, status: jax.Array, out_min: jax.Array)
     l_out = jnp.min(jnp.where(fringe, d + out_min[None], INF), axis=1)
     n_f = jnp.sum(fringe, axis=1, dtype=jnp.int32)
     return min_fd, l_out, n_f
+
+
+def ell_key_min_ref(gate: jax.Array, cols: jax.Array, ws: jax.Array) -> jax.Array:
+    """key[v] = min_j gate[cols[v, j]] + ws[v, j] (dynamic criterion key)."""
+    return jnp.min(jnp.take(gate, cols, axis=0) + ws, axis=1)
+
+
+def ell_key_min_batch_ref(gate: jax.Array, cols: jax.Array, ws: jax.Array) -> jax.Array:
+    """key[b, v] = min_j gate[b, cols[v, j]] + ws[v, j]; adjacency shared."""
+    return jnp.min(jnp.take(gate, cols, axis=1) + ws[None], axis=-1)
+
+
+def frontier_crit_lanes_batch_ref(d: jax.Array, status: jax.Array,
+                                  keys: jax.Array | None):
+    """Per-row plan-lane thresholds: (mins (1+K, B), |F| (B,)).
+
+    ``keys`` is ``(K, n)`` (shared static keys), ``(K, B, n)`` (per-lane
+    dynamic keys) or None (K = 0); mins[0] = min_F d, mins[1+k] =
+    min_F (d + keys[k]).
+    """
+    fringe = status == 1
+    rows = [jnp.min(jnp.where(fringe, d, INF), axis=1)]
+    if keys is not None:
+        for k in range(keys.shape[0]):
+            kk = keys[k]
+            term = d + (kk if kk.ndim == 2 else kk[None, :])
+            rows.append(jnp.min(jnp.where(fringe, term, INF), axis=1))
+    n_f = jnp.sum(fringe, axis=1, dtype=jnp.int32)
+    return jnp.stack(rows), n_f

@@ -27,14 +27,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import Graph, to_ell_in
+from repro.core import criteria as C
+from repro.core.graph import Graph, to_ell_in, to_ell_out
 from repro.core.static_engine import (
+    DEFAULT_CRITERION,
     EMPTY_LANE,
     BatchState,
     init_batch_state,
     reset_lanes,
     step_batch,
 )
+
+
+def _serving_plan(criterion: str) -> C.CritPlan:
+    """Validate and canonicalise a serving criterion.
+
+    'oracle' is rejected: a clairvoyant criterion needs the answer it is
+    supposed to compute as input, which no online workload has.
+    """
+    plan = C.plan_for(criterion)
+    if plan.needs_oracle:
+        raise ValueError(
+            "serving backends cannot run the 'oracle' criterion: it requires "
+            "per-query true distances up front"
+        )
+    return plan
 
 
 @jax.jit
@@ -55,6 +72,9 @@ class EngineBackend(Protocol):
     """What the scheduler needs from a resumable B-lane engine."""
 
     g: Graph
+    criterion: str  # canonical criterion string the engine solves with —
+    #   part of the serving cache key: rows computed under different criteria
+    #   coincide only in exact arithmetic, so they must never share entries
 
     @property
     def n(self) -> int:
@@ -88,22 +108,28 @@ class EngineBackend(Protocol):
 class StaticBackend:
     """Adapter over the single-device static-engine stepper."""
 
-    def __init__(self, g: Graph, ell=None, use_pallas: bool = True):
+    def __init__(self, g: Graph, ell=None, use_pallas: bool = True,
+                 criterion: str = DEFAULT_CRITERION):
+        plan = _serving_plan(criterion)
         self.g = g
         self.ell = to_ell_in(g) if ell is None else ell
+        self.ell_out = to_ell_out(g) if plan.needs_out_adjacency else None
         self.use_pallas = bool(use_pallas)
+        self.criterion = plan.criterion
 
     @property
     def n(self) -> int:
         return self.g.n
 
     def init(self, lanes: int) -> BatchState:
-        return init_batch_state(self.g, np.full(lanes, EMPTY_LANE, np.int32))
+        return init_batch_state(self.g, np.full(lanes, EMPTY_LANE, np.int32),
+                                criterion=self.criterion)
 
     def step(self, state, k_phases, *, stop_on_lane_finish=True, donate=False):
         return step_batch(
             self.g, state, k_phases, ell=self.ell, use_pallas=self.use_pallas,
             stop_on_lane_finish=stop_on_lane_finish, donate=donate,
+            ell_out=self.ell_out,
         )
 
     def reset_lanes(self, state, sources, *, donate=False):
@@ -127,7 +153,7 @@ class ShardedBackend:
     """
 
     def __init__(self, g: Graph, mesh, axes, schedule: str = "reduce_scatter",
-                 pad_multiple: int = 8):
+                 pad_multiple: int = 8, criterion: str = DEFAULT_CRITERION):
         # imported lazily-ish at construction: the distributed module pulls
         # in shard_map machinery the static serving path never needs
         from repro.core.distributed import shard_graph_batch
@@ -138,8 +164,14 @@ class ShardedBackend:
         self.mesh = mesh
         self.axes = tuple(axes)
         self.schedule = schedule
+        plan = _serving_plan(criterion)
+        self.criterion = plan.criterion
         num = int(np.prod([mesh.shape[a] for a in self.axes]))
-        self.sg = shard_graph_batch(g, num, pad_multiple=pad_multiple)
+        # the backend's criterion is fixed for its lifetime, so only build
+        # the transpose edge partition when the plan's dynamic OUT keys
+        # will actually read it (it doubles resident edge memory)
+        self.sg = shard_graph_batch(g, num, pad_multiple=pad_multiple,
+                                    with_transpose=plan.needs_out_adjacency)
 
     @property
     def n(self) -> int:
@@ -149,7 +181,8 @@ class ShardedBackend:
         from repro.core.distributed import init_sharded_batch_state
 
         return init_sharded_batch_state(
-            self.sg, np.full(lanes, EMPTY_LANE, np.int32)
+            self.sg, np.full(lanes, EMPTY_LANE, np.int32),
+            criterion=self.criterion,
         )
 
     def step(self, state, k_phases, *, stop_on_lane_finish=True, donate=False):

@@ -1,4 +1,4 @@
-"""LRU memo of completed SSSP rows: ``(graph_key, source) -> dist``.
+"""LRU memo of completed SSSP rows: ``(graph_key, criterion, source) -> dist``.
 
 The serving workload ("millions of users, one road network") repeats
 sources heavily — popular origins recur across requests — and a completed
@@ -8,6 +8,13 @@ the graph (not object identity): two :class:`~repro.core.graph.Graph`
 instances holding the same COO arrays share entries, and any change to the
 edge set or weights changes the key, so stale answers cannot leak across
 graph versions.
+
+The *criterion* is part of the key since criteria became pluggable: two
+backends over the same graph but different criteria agree only in exact
+arithmetic — their float relaxation orders differ — so sharing rows across
+criteria would break the "a served answer is bitwise an engine answer for
+this backend" contract (and any test pinning it). Callers pass the
+backend's canonical criterion string.
 
 Entries are host ``numpy`` arrays marked read-only (a cache hit hands out
 the stored array; copying n floats per hit would defeat the point, and the
@@ -56,13 +63,13 @@ class DistCache:
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1; got {capacity}")
         self.capacity = int(capacity)
-        self._d: OrderedDict[tuple[str, int], np.ndarray] = OrderedDict()
+        self._d: OrderedDict[tuple[str, str, int], np.ndarray] = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
-    def get(self, gkey: str, source: int) -> np.ndarray | None:
-        key = (gkey, int(source))
+    def get(self, gkey: str, criterion: str, source: int) -> np.ndarray | None:
+        key = (gkey, criterion, int(source))
         row = self._d.get(key)
         if row is None:
             self.misses += 1
@@ -71,8 +78,9 @@ class DistCache:
         self.hits += 1
         return row
 
-    def put(self, gkey: str, source: int, dist: np.ndarray) -> None:
-        key = (gkey, int(source))
+    def put(self, gkey: str, criterion: str, source: int,
+            dist: np.ndarray) -> None:
+        key = (gkey, criterion, int(source))
         row = np.asarray(dist)
         if key in self._d:  # refresh recency; identical content by construction
             self._d.move_to_end(key)
@@ -92,5 +100,5 @@ class DistCache:
     def __len__(self) -> int:
         return len(self._d)
 
-    def __contains__(self, key: tuple[str, int]) -> bool:
-        return (key[0], int(key[1])) in self._d
+    def __contains__(self, key: tuple[str, str, int]) -> bool:
+        return (key[0], key[1], int(key[2])) in self._d

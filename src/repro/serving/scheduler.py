@@ -85,6 +85,13 @@ class ContinuousBatcher:
         pass a :class:`~repro.serving.backends.ShardedBackend` to serve the
         same traffic against a mesh-sharded graph. All scheduling semantics
         (admission, coalescing, cache, metrics) are backend-independent.
+      criterion: the settle criterion the engine solves with (any
+        non-oracle string ``run_phased`` accepts). With a default backend it
+        is plumbed into the :class:`StaticBackend`; with an explicit backend
+        it must agree with the backend's own criterion (pass one or the
+        other). Part of the cache key: servers over the same graph but
+        different criteria never share cached rows, even though their
+        answers coincide in exact arithmetic.
       donate: buffer-donation override. Default (None) donates on
         accelerator backends only (CPU ignores donation); tests force True
         to pin the copy-before-donate discipline.
@@ -102,19 +109,30 @@ class ContinuousBatcher:
         retain_completed: int | None = 1024,
         backend: EngineBackend | None = None,
         donate: bool | None = None,
+        criterion: str | None = None,
     ):
         if lanes < 1:
             raise ValueError(f"lanes must be >= 1; got {lanes}")
         if phases_per_step < 1:
             raise ValueError(f"phases_per_step must be >= 1; got {phases_per_step}")
         if backend is None:
-            backend = StaticBackend(g, ell=ell, use_pallas=use_pallas)
+            kw = {} if criterion is None else {"criterion": criterion}
+            backend = StaticBackend(g, ell=ell, use_pallas=use_pallas, **kw)
         elif backend.g is not g:
             raise ValueError(
                 "backend was built over a different Graph instance than `g`"
             )
+        elif criterion is not None:
+            from repro.core.criteria import canonical
+
+            if canonical(criterion) != backend.criterion:
+                raise ValueError(
+                    f"criterion {criterion!r} disagrees with the backend's "
+                    f"{backend.criterion!r}; configure the backend instead"
+                )
         self.g = g
         self.backend = backend
+        self.criterion = backend.criterion
         self.lanes = int(lanes)
         self.phases_per_step = int(phases_per_step)
         self.cache = cache
@@ -197,7 +215,7 @@ class ContinuousBatcher:
             # each arrival is classified exactly once, so this is the one
             # cache lookup of its lifetime — get() owns all hit/miss stats
             hit = (
-                self.cache.get(self._gkey, req.source)
+                self.cache.get(self._gkey, self.criterion, req.source)
                 if self.cache is not None
                 else None
             )
@@ -302,7 +320,8 @@ class ContinuousBatcher:
                     row.flags.writeable = False  # mutation must fail loudly
                 req.dist = row
                 if self.cache is not None:
-                    self.cache.put(self._gkey, req.source, req.dist)
+                    self.cache.put(self._gkey, self.criterion, req.source,
+                                   req.dist)
                     self._inflight.pop(req.source, None)
                 self._lane_req[lane] = None
                 self.completed.append(req)

@@ -13,11 +13,18 @@ Pins, on a (4, 2) mesh:
   3. chunked stepping + ``stop_on_lane_finish`` + ``reset_sharded_lanes``
      invisible to results (same invariants as the static stepper);
   4. ``ContinuousBatcher`` over a ``ShardedBackend`` delivering the same
-     completions as the static backend for the same trace.
+     completions as the static backend for the same trace;
+  5. the strengthened criterion ``in|out`` through the sharded stepper —
+     dynamic keys recomputed shard-locally, (L, B) fused pmin — bit-exact
+     per lane vs ``run_phased_static`` with the same criterion (the
+     criterion-plan acceptance gate for the mesh engine; the *full*
+     criterion sweep is the slow-lane test below).
 """
 import os
 import subprocess
 import sys
+
+import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -93,16 +100,111 @@ for a, b in zip(results["static"], results["sharded"]):
     assert (a.source, a.cache_hit, a.coalesced) == (b.source, b.cache_hit, b.coalesced)
     np.testing.assert_array_equal(a.dist, b.dist, err_msg=f"src {a.source}")
     assert a.phases == b.phases, a.source
+
+# --- 5. strengthened criterion through the sharded stepper (fast-lane pin)
+# transpose edge partition is built only when the plan reads it: the default
+# backend skips it (it doubles edge memory), dynamic-OUT plans carry it, and
+# a transpose-less graph rejects such plans loudly instead of miscomputing
+assert ShardedBackend(g, mesh, AXES).sg.tsrc_local is None
+assert ShardedBackend(g, mesh, AXES, criterion="in|out").sg.tsrc_local is not None
+sg_nt = shard_graph_batch(g, 8, with_transpose=False)
+st_nt = init_sharded_batch_state(sg_nt, srcs, criterion="in|out")
+try:
+    step_sharded_batch(sg_nt, st_nt, mesh, AXES, 1)
+    raise AssertionError("transpose-less graph accepted a dynamic-OUT plan")
+except ValueError as e:
+    assert "with_transpose" in str(e)
+crit = "in|out"
+res_c = run_sharded_batch(g, mesh, AXES, srcs, criterion=crit)
+for i, s in enumerate(srcs):
+    solo_c = run_phased_static(g, int(s), criterion=crit)
+    np.testing.assert_array_equal(np.asarray(res_c.dist[i]),
+                                  np.asarray(solo_c.dist), err_msg=f"{crit}:{s}")
+    assert int(res_c.phases[i]) == int(solo_c.phases), (crit, int(s))
+    assert int(res_c.sum_fringe[i]) == int(solo_c.sum_fringe), (crit, int(s))
+    assert int(res_c.relax_edges[i]) == int(solo_c.relax_edges), (crit, int(s))
+    # the paper's point, inside the mesh engine: stronger criterion, fewer phases
+    assert int(res_c.phases[i]) <= int(res.phases[i]), (crit, int(s))
 print("DISTRIBUTED-BATCH-PASS")
 """
 
+SLOW_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro.core import dijkstra_numpy
+from repro.core.static_engine import run_phased_static
+from repro.core.distributed import (
+    harvest_sharded, init_sharded_batch_state, reset_sharded_lanes,
+    run_sharded_batch, shard_graph_batch, sharded_lanes_active,
+    step_sharded_batch)
+from repro.graphs import uniform_gnp
 
-def test_distributed_batch_suite():
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+AXES = ("data", "model")
+g = uniform_gnp(170, 8 / 170, seed=6)
+srcs = np.asarray([2, 0, 101, 169], np.int32)
+
+# every registered criterion, bit-exact per lane vs the static engine, on
+# both exchange schedules (the static engine is itself pinned against
+# run_phased in tests/test_stepper_criteria.py, closing the triangle)
+for crit in ("dijk", "instatic", "outstatic", "insimple", "outsimple",
+             "in", "out", "outweak", "instatic|outstatic",
+             "insimple|outsimple", "in|out"):
+    for sched in ("allreduce", "reduce_scatter"):
+        res = run_sharded_batch(g, mesh, AXES, srcs, schedule=sched,
+                                criterion=crit)
+        for i, s in enumerate(srcs):
+            solo = run_phased_static(g, int(s), criterion=crit)
+            np.testing.assert_array_equal(
+                np.asarray(res.dist[i]), np.asarray(solo.dist),
+                err_msg=f"{crit}:{sched}:{s}")
+            assert int(res.phases[i]) == int(solo.phases), (crit, sched, int(s))
+            assert int(res.sum_fringe[i]) == int(solo.sum_fringe), (crit, sched)
+            assert int(res.relax_edges[i]) == int(solo.relax_edges), (crit, sched)
+
+# oracle plan on the mesh: per-lane dist_true, padded columns, reset path
+dts = np.stack([dijkstra_numpy(g, int(s)).astype(np.float32) for s in srcs])
+res = run_sharded_batch(g, mesh, AXES, srcs, criterion="oracle", dist_true=dts)
+for i, s in enumerate(srcs):
+    solo = run_phased_static(g, int(s), criterion="oracle", dist_true=dts[i])
+    np.testing.assert_array_equal(np.asarray(res.dist[i]), np.asarray(solo.dist))
+    assert int(res.phases[i]) == int(solo.phases)
+
+# chunked stepping + lane reset under a dynamic-criterion plan
+sg = shard_graph_batch(g, 8)
+state = init_sharded_batch_state(sg, srcs, criterion="in|out")
+while sharded_lanes_active(state).any():
+    state = step_sharded_batch(sg, state, mesh, AXES, 3,
+                               stop_on_lane_finish=True)
+state = reset_sharded_lanes(state, np.asarray([33, -2, -1, -2], np.int32))
+while sharded_lanes_active(state).any():
+    state = step_sharded_batch(sg, state, mesh, AXES, 5)
+after = harvest_sharded(state)
+solo = run_phased_static(g, 33, criterion="in|out")
+np.testing.assert_array_equal(np.asarray(after.dist[0]), np.asarray(solo.dist))
+assert int(after.phases[0]) == int(solo.phases)
+print("DISTRIBUTED-CRITERIA-PASS")
+"""
+
+
+def _run_subprocess(script, marker):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.pop("XLA_FLAGS", None)
     out = subprocess.run(
-        [sys.executable, "-c", SCRIPT], env=env, capture_output=True,
+        [sys.executable, "-c", script], env=env, capture_output=True,
         text=True, timeout=600,
     )
-    assert "DISTRIBUTED-BATCH-PASS" in out.stdout, out.stdout + out.stderr
+    assert marker in out.stdout, out.stdout + out.stderr
+
+
+def test_distributed_batch_suite():
+    _run_subprocess(SCRIPT, "DISTRIBUTED-BATCH-PASS")
+
+
+@pytest.mark.slow
+def test_distributed_criteria_sweep():
+    """Full sharded engine x criterion differential sweep (slow lane; the
+    fast lane keeps the in|out case inside test_distributed_batch_suite)."""
+    _run_subprocess(SLOW_SCRIPT, "DISTRIBUTED-CRITERIA-PASS")

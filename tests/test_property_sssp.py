@@ -29,6 +29,7 @@ from repro.core import (
     run_phased,
     run_phased_static_batch,
 )
+from repro.core.static_engine import init_batch_state, lanes_active, step_batch
 from repro.kernels.ell_relax import ell_relax
 from repro.kernels.frontier_crit import frontier_crit
 from repro.kernels.ref import ell_relax_ref, frontier_crit_ref
@@ -126,6 +127,64 @@ def test_ell_relax_property(n, d, seed):
     assert (np.isfinite(np.asarray(out)) == fin).all()
     np.testing.assert_allclose(np.asarray(out)[fin], np.asarray(ref)[fin],
                                rtol=1e-6)
+
+
+# (weak, strong) pairs of the paper's criteria hierarchy (Sec. 3):
+# DIJK => INSTATIC => INSIMPLE => IN and OUTSTATIC => {OUTSIMPLE, OUTWEAK, OUT}
+_HIER_PAIRS = [
+    ("dijk", "instatic"), ("instatic", "insimple"), ("insimple", "in"),
+    ("outstatic", "outsimple"), ("outstatic", "outweak"), ("outstatic", "out"),
+]
+_HIER_CRITS = sorted({c for p in _HIER_PAIRS for c in p})
+# fixed n and edge padding so all examples share shapes — 6 compiled step
+# programs total instead of 6 per example
+_HIER_N = 36
+
+
+def _settled_trajectory(g, crit, source):
+    """Cumulative settled sets after each phase of a B=1 stepper run."""
+    state = init_batch_state(g, [source], criterion=crit)
+    out = []
+    while lanes_active(state).any():
+        state = step_batch(g, state, 1)
+        out.append(np.asarray(state.status[0]) == 2)
+    return out
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2 ** 30), zero_frac=st.booleans())
+def test_criteria_hierarchy_end_to_end_in_stepper(seed, zero_frac):
+    """The hierarchy holds on full engine *trajectories*, not just per-state
+    masks: a stronger criterion's cumulative settled set contains the weaker
+    one's at every phase, and its phase count never exceeds the weaker
+    one's. Exercised through the production stepper (criterion plans,
+    dynamic keys, lane kernels) on random graphs."""
+    n = _HIER_N
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(n, 5 * n))
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if len(src) == 0:
+        src, dst = np.array([0]), np.array([1])
+    w = rng.uniform(0, 1, len(src)).astype(np.float32)
+    if zero_frac:
+        w[: max(1, len(w) // 8)] = 0.0
+    g = from_coo(src, dst, w, n, pad_to=5 * n)
+    source = int(rng.integers(0, n))
+    traj = {c: _settled_trajectory(g, c, source) for c in _HIER_CRITS}
+    for weak, strong in _HIER_PAIRS:
+        tw, ts = traj[weak], traj[strong]
+        assert len(ts) <= len(tw), (weak, strong, len(tw), len(ts))
+        final_s = ts[-1] if ts else np.zeros(n, bool)
+        for t, settled_weak in enumerate(tw):
+            settled_strong = ts[t] if t < len(ts) else final_s
+            stray = settled_weak & ~settled_strong
+            assert not stray.any(), (
+                f"{strong} (stronger) missing vertices {np.where(stray)[0]} "
+                f"that {weak} settled by phase {t}"
+            )
 
 
 @settings(max_examples=25, deadline=None)

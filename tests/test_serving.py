@@ -51,10 +51,13 @@ def graph(request):
 
 @pytest.fixture(scope="module")
 def solo_cache():
+    # keyed by CONTENT hash, never id(): the memo outlives the graphs and a
+    # GC'd graph's id can be recycled by a fresh one, silently returning a
+    # different graph's rows (observed as a rare order-dependent flake)
     memo = {}
 
     def solo(g, s):
-        key = (id(g), int(s))
+        key = (graph_key(g), int(s))
         if key not in memo:
             memo[key] = run_phased_static(g, int(s))
         return memo[key]
@@ -166,14 +169,15 @@ def test_completed_retention_is_bounded(graph):
 
 def test_cache_rows_are_readonly_and_lru_evicts():
     c = DistCache(capacity=2)
-    c.put("g", 1, np.ones(4))
-    c.put("g", 2, np.full(4, 2.0))
-    assert c.get("g", 1) is not None  # refresh 1 -> 2 becomes LRU
-    c.put("g", 3, np.full(4, 3.0))
+    c.put("g", "crit", 1, np.ones(4))
+    c.put("g", "crit", 2, np.full(4, 2.0))
+    assert c.get("g", "crit", 1) is not None  # refresh 1 -> 2 becomes LRU
+    c.put("g", "crit", 3, np.full(4, 3.0))
     assert c.evictions == 1
-    assert c.get("g", 2) is None  # evicted
-    assert c.get("g", 1) is not None and c.get("g", 3) is not None
-    row = c.get("g", 1)
+    assert c.get("g", "crit", 2) is None  # evicted
+    assert c.get("g", "crit", 1) is not None
+    assert c.get("g", "crit", 3) is not None
+    row = c.get("g", "crit", 1)
     with pytest.raises(ValueError):
         row[0] = 99.0
     assert len(c) == 2
@@ -203,6 +207,66 @@ def test_cache_does_not_leak_across_graphs():
     assert not done[0].cache_hit  # different graph content -> no hit
     solo = run_phased_static(g3, 0)
     np.testing.assert_array_equal(done[0].dist, np.asarray(solo.dist))
+
+
+def test_cache_does_not_leak_across_criteria():
+    """Poisoned-cache double-serve: two servers over the SAME graph but
+    different criteria share a cache object. A row poisoned under one
+    criterion's key must never be served by the other — with pluggable
+    criteria the answers only coincide in exact arithmetic, and a shared
+    entry would silently break the bitwise engine-answer contract."""
+    g = uniform_gnp(120, 8 / 120, seed=7)
+    cache = DistCache()
+    a = ContinuousBatcher(g, lanes=1, cache=cache)  # default criterion
+    a.submit(3)
+    a.drain(max_steps=500)
+    assert (graph_key(g), a.criterion, 3) in cache
+    # poison the default-criterion entry so any cross-criterion hit is loud
+    poisoned = np.full(g.n, -1.0, np.float32)
+    cache._d[(graph_key(g), a.criterion, 3)] = poisoned
+    b = ContinuousBatcher(g, lanes=1, cache=cache, criterion="in|out")
+    b.submit(3)
+    done = b.drain(max_steps=500)
+    assert not done[0].cache_hit  # different criterion -> not a hit
+    solo = run_phased_static(g, 3, criterion="in|out")
+    np.testing.assert_array_equal(done[0].dist, np.asarray(solo.dist))
+    # and the poisoned row stayed confined to its own key
+    assert cache.get(graph_key(g), b.criterion, 3) is not None
+    np.testing.assert_array_equal(
+        cache.get(graph_key(g), a.criterion, 3), poisoned)
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_backend_criterion_is_plumbed_end_to_end(kind):
+    """A server configured with a strengthened criterion must deliver rows
+    bit-exact vs the standalone engine under that criterion, with that
+    criterion's (smaller) phase counts."""
+    g = uniform_gnp(150, 8 / 150, seed=44)
+    if kind == "static":
+        backend = StaticBackend(g, criterion="insimple|outsimple")
+    else:
+        mesh = jax.make_mesh((jax.device_count(),), ("v",))
+        backend = ShardedBackend(g, mesh, ("v",), criterion="insimple|outsimple")
+    assert backend.criterion == "insimple|outsimple"
+    server = ContinuousBatcher(g, lanes=2, phases_per_step=5, backend=backend,
+                               cache=DistCache(capacity=8))
+    for s in (0, 7, 0, 149):
+        server.submit(s)
+    done = server.drain(max_steps=2000)
+    for req in done:
+        solo = run_phased_static(g, req.source, criterion="insimple|outsimple")
+        np.testing.assert_array_equal(req.dist, np.asarray(solo.dist),
+                                      err_msg=f"{kind}: src {req.source}")
+        if not (req.cache_hit or req.coalesced):
+            assert int(req.phases) == int(solo.phases)
+    # criterion spelling is canonicalised; a mismatched override is rejected
+    assert ContinuousBatcher(
+        g, backend=StaticBackend(g, criterion="out|in"), criterion="in|out"
+    ).criterion == "in|out"
+    with pytest.raises(ValueError, match="disagrees"):
+        ContinuousBatcher(g, backend=backend, criterion="in|out")
+    with pytest.raises(ValueError, match="oracle"):
+        StaticBackend(g, criterion="oracle")
 
 
 def test_metrics_report_is_json_and_consistent(graph):

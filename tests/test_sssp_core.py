@@ -97,6 +97,28 @@ def test_delta_extremes_match_bfs_and_dijkstra(graph):
     assert _dist_equal(run_delta_stepping(g, 0, delta=10.0).dist, ref)
 
 
+def test_delta_relax_edges_is_int64():
+    """Regression: relax_edges was documented int64 but accumulated int32 —
+    label-correcting rescans push the total past 2^31 on large
+    graph x phase products (DESIGN.md Sec. 4). The device loop now carries
+    uint32/int32 limbs and the combined host value is a true int64."""
+    import jax.numpy as jnp
+
+    from repro.core.delta_stepping import _acc_work, _combine_work
+
+    g = GRAPHS["gnp"]()
+    res = run_delta_stepping(g, 0)
+    assert res.relax_edges.dtype == np.int64
+    assert int(res.relax_edges) > 0
+    # the limbs must survive the uint32 wrap (the int32-overflow regime)
+    lo, hi = _acc_work(jnp.uint32(2 ** 32 - 2), jnp.int32(0), jnp.int32(5))
+    assert (int(lo), int(hi)) == (3, 1)
+    assert int(_combine_work(lo, hi)) == 2 ** 32 + 3
+    assert _combine_work(lo, hi).dtype == np.int64
+    # in-loop limbs stay x64-free so prod configs never need jax_enable_x64
+    assert lo.dtype == jnp.uint32 and hi.dtype == jnp.int32
+
+
 def test_bellman_ford_oracle(graph):
     name, g, ref = graph
     assert _dist_equal(bellman_ford_jnp(g, 0), ref)
@@ -114,17 +136,23 @@ def test_static_engine_matches_generic(graph):
         assert int(eng.sum_fringe) == int(gen.sum_fringe), (name, pallas)
 
 
-def test_static_engine_trace_is_absent_not_fabricated(graph):
-    """Regression: run_phased_static used to return settled_per_phase =
-    zeros((1,)) — a plausible-looking but fake per-phase trace. The stepper
-    does not trace, so the field must be explicitly absent (None), while the
-    generic engine keeps producing the real trace."""
+def test_static_engine_trace_matches_generic(graph):
+    """The stepper's device-side trace ring (BatchState.settled_trace) must
+    reproduce run_phased's settled-per-phase profile exactly — never the
+    fabricated zeros vector a pre-PR-3 bug once returned. run_phased_static
+    sizes the ring to the phase cap by default, so it never wraps and the
+    full profile comes back."""
     name, g, ref = graph
     eng = run_phased_static(g, 0)
-    assert eng.settled_per_phase is None
     gen = run_phased(g, 0, "instatic|outstatic", trace_len=g.n + 1)
-    trace = np.asarray(gen.settled_per_phase)
+    p = int(gen.phases)
+    assert int(eng.phases) == p
+    np.testing.assert_array_equal(
+        np.asarray(eng.settled_per_phase)[:p],
+        np.asarray(gen.settled_per_phase)[:p])
+    trace = np.asarray(eng.settled_per_phase)
     assert trace.sum() == int(np.isfinite(ref).sum())  # the real thing
+    assert (trace[:p] > 0).all()  # every phase settles >= 1
 
 
 def test_other_sources(graph):

@@ -1,0 +1,221 @@
+"""Engine x criterion acceptance tests for the criterion-plan refactor.
+
+The contract: every criterion string ``run_phased`` accepts is accepted by
+the production stepper, and each engine x criterion combination is bit-exact
+per row against ``run_phased`` with the same criterion string — distances,
+phase counts, sum_fringe, relax_edges, and the settled-per-phase trace.
+``run_phased`` implements the full registry through the dense reference loop
+and acts as the differential oracle.
+
+Lane budget: the full criterion sweep is marked ``slow``; the fast lane
+keeps one dynamic-criterion case (``insimple|outsimple``) plus the plan/
+canonicalisation unit tests (the sharded fast-lane case lives in
+``tests/test_distributed_batch.py``).
+"""
+import numpy as np
+import pytest
+
+from repro.core import criteria as C
+from repro.core import dijkstra_numpy, run_phased
+from repro.core.static_engine import (
+    harvest,
+    init_batch_state,
+    lanes_active,
+    reset_lanes,
+    run_phased_static,
+    run_phased_static_batch,
+    step_batch,
+)
+from repro.graphs import grid_road, kronecker, uniform_gnp, webgraph
+
+ALL_CRITERIA = [
+    "dijk", "instatic", "outstatic", "insimple", "outsimple",
+    "in", "out", "outweak", "instatic|outstatic", "insimple|outsimple",
+    "in|out", "oracle",
+]
+
+GRAPHS = {
+    "gnp": lambda: uniform_gnp(230, 9 / 230, seed=51),
+    "kron": lambda: kronecker(7, seed=52),
+    "grid": lambda: grid_road(12, 10, seed=53),
+    "web": lambda: webgraph(200, 5, seed=54),
+}
+
+
+def _assert_row_matches(eng_dist, eng_phases, eng_sumf, eng_redges, gen, msg):
+    np.testing.assert_array_equal(np.asarray(eng_dist), np.asarray(gen.dist),
+                                  err_msg=msg)
+    assert int(eng_phases) == int(gen.phases), msg
+    assert int(eng_sumf) == int(gen.sum_fringe), msg
+    assert int(eng_redges) == int(gen.relax_edges), msg
+
+
+def _check_static(g, crit, sources, use_pallas):
+    kw = {}
+    if crit == "oracle":
+        kw["dist_true"] = np.stack(
+            [dijkstra_numpy(g, int(s)).astype(np.float32) for s in sources]
+        )
+    res = run_phased_static_batch(
+        g, sources, criterion=crit, use_pallas=use_pallas, **kw
+    )
+    for i, s in enumerate(sources):
+        gen = run_phased(
+            g, int(s), crit,
+            dist_true=None if crit != "oracle" else kw["dist_true"][i],
+        )
+        _assert_row_matches(res.dist[i], res.phases[i], res.sum_fringe[i],
+                            res.relax_edges[i], gen,
+                            f"{crit}:src{int(s)}:pallas={use_pallas}")
+
+
+def test_fast_dynamic_criterion_static_parity():
+    """Fast-lane pin: one dynamic criterion through the batched stepper,
+    kernels and ref oracles, multi-source."""
+    g = GRAPHS["gnp"]()
+    srcs = np.asarray([0, 7, 229], np.int32)
+    for pallas in (True, False):
+        _check_static(g, "insimple|outsimple", srcs, pallas)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("crit", ALL_CRITERIA)
+@pytest.mark.parametrize("name", list(GRAPHS))
+def test_every_criterion_matches_run_phased(name, crit):
+    """The full engine x criterion differential sweep (slow lane)."""
+    g = GRAPHS[name]()
+    srcs = np.asarray([0, g.n // 3, g.n - 1], np.int32)
+    _check_static(g, crit, srcs, True)
+
+
+@pytest.mark.slow
+def test_ref_path_bit_identical_on_dynamic_plans():
+    g = GRAPHS["grid"]()
+    srcs = np.asarray([0, 5, g.n - 1], np.int32)
+    for crit in ("in|out", "outweak", "dijk|outsimple"):
+        a = run_phased_static_batch(g, srcs, criterion=crit, use_pallas=True)
+        b = run_phased_static_batch(g, srcs, criterion=crit, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(a.dist), np.asarray(b.dist))
+        np.testing.assert_array_equal(np.asarray(a.phases), np.asarray(b.phases))
+
+
+def test_chunking_and_reset_invariance_under_dynamic_criterion():
+    """The stepper contract (chunk sizes / early exit / lane resets are
+    invisible) must survive plans that carry dynamic keys in the state."""
+    g = grid_road(11, 9, seed=55)
+    srcs = np.asarray([0, g.n - 1, 17], np.int32)
+    full = run_phased_static_batch(g, srcs, criterion="in|out")
+    state = init_batch_state(g, srcs, criterion="in|out")
+    assert state.criterion == "in|out"
+    assert state.crit_keys is not None  # dynamic keys ride in the state
+    assert state.crit_keys.shape[0] == len(C.plan_for("in|out").keys)
+    while lanes_active(state).any():
+        state = step_batch(g, state, 3, stop_on_lane_finish=True)
+    res = harvest(state)
+    np.testing.assert_array_equal(np.asarray(res.dist), np.asarray(full.dist))
+    np.testing.assert_array_equal(np.asarray(res.phases), np.asarray(full.phases))
+    # refill lane 1, park lane 2; lane 0 must pass through bit-unchanged
+    state = reset_lanes(state, np.asarray([-2, 40, -1], np.int32))
+    while lanes_active(state).any():
+        state = step_batch(g, state, 7)
+    after = harvest(state)
+    np.testing.assert_array_equal(np.asarray(after.dist[0]), np.asarray(full.dist[0]))
+    solo = run_phased_static(g, 40, criterion="in|out")
+    np.testing.assert_array_equal(np.asarray(after.dist[1]), np.asarray(solo.dist))
+    assert int(after.phases[1]) == int(solo.phases)
+    assert np.isinf(np.asarray(after.dist[2])).all()
+
+
+def test_trace_ring_matches_run_phased_trace():
+    """Satellite: the stepper's settled-per-phase trace ring vs the generic
+    engine's trace — exact when the ring covers the phase count, and a true
+    ring (last trace_len phases) when it does not."""
+    g = GRAPHS["web"]()
+    gen = run_phased(g, 0, "instatic|outstatic", trace_len=g.n + 1)
+    p = int(gen.phases)
+    eng = run_phased_static(g, 0)  # default trace_len covers the cap
+    np.testing.assert_array_equal(
+        np.asarray(eng.settled_per_phase)[:p],
+        np.asarray(gen.settled_per_phase)[:p])
+    # wrapped ring: slot i holds the latest phase p with p % L == i
+    L = 5
+    small = run_phased_static(g, 0, trace_len=L)
+    want = np.zeros(L, np.int64)
+    trace = np.asarray(gen.settled_per_phase)
+    for ph in range(p):
+        want[ph % L] = trace[ph]
+    np.testing.assert_array_equal(np.asarray(small.settled_per_phase), want)
+    # batch harvest exposes the per-row rings...
+    res = run_phased_static_batch(g, [0, 3], trace_len=g.n + 1)
+    np.testing.assert_array_equal(
+        np.asarray(res.settled_per_phase[0])[:p], trace[:p])
+    # ... but a disabled ring (default trace_len=1) must read as "not
+    # traced", never as a plausible-looking one-slot profile
+    assert run_phased_static_batch(g, [0, 3]).settled_per_phase is None
+
+
+def test_oracle_plan_requires_and_validates_dist_true():
+    g = GRAPHS["gnp"]()
+    with pytest.raises(ValueError, match="oracle"):
+        init_batch_state(g, [0], criterion="oracle")
+    with pytest.raises(ValueError, match="shape"):
+        init_batch_state(g, [0], criterion="oracle",
+                         dist_true=np.zeros((2, g.n), np.float32))
+    dt = dijkstra_numpy(g, 0).astype(np.float32)[None]
+    state = init_batch_state(g, [0], criterion="oracle", dist_true=dt)
+    # refilling an oracle lane without fresh truth rows must fail loudly
+    with pytest.raises(ValueError, match="dist_true"):
+        reset_lanes(state, np.asarray([3], np.int32))
+    # ... and succeed with them (bit-exact vs a fresh solve)
+    dt3 = dijkstra_numpy(g, 3).astype(np.float32)[None]
+    state = reset_lanes(state, np.asarray([3], np.int32), dist_true=dt3)
+    while lanes_active(state).any():
+        state = step_batch(g, state, 50)
+    solo = run_phased_static(g, 3, criterion="oracle", dist_true=dt3[0])
+    np.testing.assert_array_equal(np.asarray(state.dist[0]), np.asarray(solo.dist))
+    # non-oracle states reject stray dist_true rows
+    plain = init_batch_state(g, [0])
+    with pytest.raises(ValueError, match="dist_true"):
+        reset_lanes(plain, np.asarray([1], np.int32), dist_true=dt)
+
+
+def test_parse_canonicalises_and_dedupes():
+    assert C.parse("out|in") == ("in", "out")
+    assert C.parse("in|out|in") == ("in", "out")
+    assert C.parse("OUTSTATIC |instatic") == ("instatic", "outstatic")
+    assert C.canonical("out|in") == "in|out"
+    with pytest.raises(ValueError, match="unknown criterion"):
+        C.parse("in|nope")
+    # one plan (and therefore one compiled step program) per disjunction
+    assert C.plan_for("out|in") is C.plan_for("in|out")
+
+
+def test_criterion_spellings_share_one_jit_entry():
+    """Satellite: permuted/duplicated spellings must not fragment the jit
+    caches — neither the reference loop's nor the stepper's."""
+    from repro.core.phased import _run
+
+    g = uniform_gnp(64, 0.1, seed=56)
+    before = _run._cache_size()
+    a = run_phased(g, 0, "in|out")
+    mid = _run._cache_size()
+    b = run_phased(g, 0, "out|in|in")
+    assert _run._cache_size() == mid > before - 1
+    np.testing.assert_array_equal(np.asarray(a.dist), np.asarray(b.dist))
+    # stepper: the canonical string is the state's static metadata
+    s1 = init_batch_state(g, [0], criterion="out|in")
+    s2 = init_batch_state(g, [0], criterion="in|out")
+    assert s1.criterion == s2.criterion == "in|out"
+
+
+def test_plan_structure():
+    p = C.plan_for("in|out")
+    assert [k.name for k in p.keys] == ["in_full", "out_dyn", "out_full"]
+    assert p.num_lanes == 2 and p.needs_out_adjacency and p.dynamic
+    d = C.plan_for("instatic|outstatic")
+    assert d.keys == () and not d.dynamic and d.num_lanes == 2
+    assert C.plan_for("oracle").needs_fallback
+    assert not C.plan_for("oracle|dijk").needs_fallback
+    # dependency ordering: out_full always follows its out_dyn input
+    q = C.plan_for("out")
+    assert [k.name for k in q.keys] == ["out_dyn", "out_full"]
