@@ -257,7 +257,20 @@ _OUT_TERM = {"outstatic": "static", "outsimple": "out_dyn",
 
 
 class CritPlan(NamedTuple):
-    """Static lowering of a criterion disjunction (hashable jit metadata)."""
+    """Static lowering of a criterion disjunction (hashable jit metadata).
+
+    The scan-fusion fields mark which dynamic keys fuse into which adjacency
+    scan of the single-scan phase body (DESIGN.md Sec. 9):
+
+      * ``in_scan_keys`` ride the relax scan over the incoming ELL — their
+        gates are elementwise in status (never key-dependent), so the fused
+        ``ell_relax_keys`` kernel emits them for the *next* phase from the
+        same tile loads that relax this one, and the engine carries them;
+      * ``out_scan_keys`` are the independent out-side keys, one fused
+        out-ELL scan for all of them; ``out_scan_dep`` (only ``out_full``)
+        additionally needs a second sweep gated by one of the independent
+        keys (its ``aux``), still inside the same launch.
+    """
 
     criterion: str  # canonical '|'-joined spelling
     names: tuple[str, ...]  # canonical parsed names
@@ -266,6 +279,9 @@ class CritPlan(NamedTuple):
     out_terms: tuple[str, ...]  # OUT-family lane keys ("static"/key name)
     needs_oracle: bool  # plan reads per-lane dist_true
     needs_fallback: bool  # engine must materialise evaluate()'s DIJK guard
+    in_scan_keys: tuple[str, ...]  # keys fused into the relax (in-ELL) scan
+    out_scan_keys: tuple[str, ...]  # independent keys of the out-ELL scan
+    out_scan_dep: str | None  # dependent out key (gate reads another key)
 
     @property
     def num_lanes(self) -> int:
@@ -331,6 +347,36 @@ def _plan_for_canonical(criterion: str) -> CritPlan:
     # can produce an empty mask on a non-empty fringe (f32-vs-f64 tolerance),
     # so only there must the engine materialise the guard to stay bit-exact
     # with ``run_phased``.
+    # scan-fusion marking: every in-side key's gate must be elementwise in
+    # status (true for the whole registry — in-side auxes are static), and at
+    # most one out-side key may depend on another (out_full <- out_dyn). A
+    # future KeySpec breaking either assumption must extend the fused
+    # kernels, not silently fall back — fail at plan time.
+    in_scan: list[str] = []
+    out_scan: list[str] = []
+    out_dep: str | None = None
+    for spec in keys:
+        if spec.side == "in":
+            if spec.aux in _KEY_SPECS:
+                raise NotImplementedError(
+                    f"in-side key {spec.name!r} depends on key {spec.aux!r}; "
+                    f"the fused in-scan only lowers status-elementwise gates"
+                )
+            in_scan.append(spec.name)
+        elif spec.aux in _KEY_SPECS:
+            if out_dep is not None:
+                raise NotImplementedError(
+                    f"two dependent out-side keys ({out_dep!r}, "
+                    f"{spec.name!r}); the fused out-scan lowers at most one"
+                )
+            if _KEY_SPECS[spec.aux].side != "out":
+                raise NotImplementedError(
+                    f"out-side key {spec.name!r} depends on the in-side key "
+                    f"{spec.aux!r}; no fused lowering"
+                )
+            out_dep = spec.name
+        else:
+            out_scan.append(spec.name)
     return CritPlan(
         criterion="|".join(names),
         names=names,
@@ -339,6 +385,9 @@ def _plan_for_canonical(criterion: str) -> CritPlan:
         out_terms=tuple(out_terms),
         needs_oracle="oracle" in names,
         needs_fallback=names == ("oracle",),
+        in_scan_keys=tuple(in_scan),
+        out_scan_keys=tuple(out_scan),
+        out_scan_dep=out_dep,
     )
 
 
@@ -362,6 +411,50 @@ def key_gate(spec: KeySpec, status: jax.Array, in_min_static: jax.Array,
     return jnp.where(
         status == F, 0.0, jnp.where(status == U, aux, INF)
     ).astype(jnp.float32)
+
+
+def in_scan_gate_parts(spec: KeySpec, status: jax.Array, settle: jax.Array,
+                       in_min_static: jax.Array):
+    """Gate parts ``(ga, gb, gc)`` for the fused in-scan's sweep-1 keys.
+
+    The fused ``ell_relax_keys`` kernel evaluates the key gate on the
+    POST-phase status (the status the next phase will see) as
+    ``min(ga, gb, gc + fin)`` where ``fin[u] = 0`` iff the relax update for
+    ``u`` is finite (``u`` enters the fringe) else +inf. The parts encode
+    the status transition ``new_S = settle | S``, ``new_F = (F \\ settle) |
+    (U & fin)``, ``new_U = U & ~fin`` without needing ``upd`` on the host:
+
+      unsettled gate (0 on new_F|new_U, +inf on new_S):
+        ga = +inf on settle | S, 0 elsewhere;  gb = gc = +inf.
+      twohop gate (0 on new_F, aux on new_U, +inf on new_S), aux static:
+        ga = 0 on F & ~settle;  gb = aux on U;  gc = 0 on U (so gc + fin
+        contributes 0 exactly on U-vertices that join the fringe).
+
+    All branch values are exact (0 / aux >= 0 / +inf) and ``min`` is
+    rounding-free, so the result is bit-identical to :func:`key_gate`
+    evaluated on the materialised new status — the recompute-vs-carry
+    equivalence the stepper's ``keys_valid`` flag relies on.
+    """
+    if spec.gate == "unsettled":
+        ga = jnp.where(settle | (status == S), INF, 0.0).astype(jnp.float32)
+        gb = jnp.full_like(ga, INF)
+        return ga, gb, gb
+    assert spec.aux == "in_static", spec  # guarded at plan time
+    ga = jnp.where((status == F) & ~settle, 0.0, INF).astype(jnp.float32)
+    gb = jnp.where(status == U, in_min_static, INF).astype(jnp.float32)
+    gc = jnp.where(status == U, 0.0, INF).astype(jnp.float32)
+    return ga, gb, gc
+
+
+def dep_gate_parts(spec: KeySpec, status: jax.Array):
+    """Gate parts ``(dga, dgb)`` for the fused out-scan's dependent key:
+    ``key_gate(spec, status) == min(dga, dgb + aux_key)`` elementwise —
+    0 on F (edge contributes as-is), ``aux_key`` on U (two-hop slack), +inf
+    on S. Exact for ``aux_key >= 0`` incl. +inf."""
+    assert spec.gate == "twohop" and spec.aux in _KEY_SPECS, spec
+    dga = jnp.where(status == F, 0.0, INF).astype(jnp.float32)
+    dgb = jnp.where(status == U, 0.0, INF).astype(jnp.float32)
+    return dga, dgb
 
 
 def plan_union_mask(plan: CritPlan, d: jax.Array, fringe: jax.Array,

@@ -301,7 +301,7 @@ class ShardedBatchGraph:
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["dist", "status", "trips", "phases", "sum_fringe",
-                 "relax_edges", "dist_true"],
+                 "relax_edges", "dist_true", "settled_trace"],
     meta_fields=["n", "criterion"],
 )
 @dataclasses.dataclass(frozen=True)
@@ -327,6 +327,11 @@ class ShardedBatchState:
     relax_edges: jax.Array  # (B,) int32 per-lane out-edges relaxed
     dist_true: jax.Array | None  # (B, n_pad) f32 per-lane true distances
     #   (+inf on padding columns), only when the plan includes 'oracle'
+    settled_trace: jax.Array  # (B, trace_len) int32 ring of per-phase settle
+    #   counts, same semantics as BatchState.settled_trace (phase p of a
+    #   lane's current query lands in slot p % trace_len; 1 = cheap off).
+    #   Lane-replicated across the mesh: the settle count is already a psum,
+    #   so every device writes the identical ring.
     criterion: str  # canonical criterion string; static: selects the plan
 
     @property
@@ -391,7 +396,8 @@ def _pad_dist_true(dist_true, plan: C.CritPlan, b: int, n: int, n_pad: int):
 
 def init_sharded_batch_state(sg: ShardedBatchGraph, sources,
                              criterion: str = DEFAULT_CRITERION,
-                             dist_true=None) -> ShardedBatchState:
+                             dist_true=None,
+                             trace_len: int = 1) -> ShardedBatchState:
     """Fresh ``(B, n_pad)`` stepper state for B lanes over one sharded graph.
 
     ``sources[i] == -1`` (:data:`~repro.core.static_engine.EMPTY_LANE`)
@@ -401,11 +407,15 @@ def init_sharded_batch_state(sg: ShardedBatchGraph, sources,
 
     ``criterion`` is any string ``run_phased`` accepts; a plan containing
     ``'oracle'`` requires per-lane ``dist_true`` rows ``(B, n)``.
+    ``trace_len`` sizes the per-lane settled-per-phase ring (same semantics
+    as the static stepper's; the default 1 keeps it off).
     """
     plan = C.plan_for(criterion)
     src_np = validate_sources(
         sources, sg.n, EMPTY_LANE, f"in [0, {sg.n}) or -1 for an empty lane"
     )
+    if trace_len < 1:
+        raise ValueError(f"trace_len must be >= 1; got {trace_len}")
     d0, st0 = _fresh_rows(jnp.asarray(src_np), sg.n_pad)
     b = src_np.shape[0]
     # one distinct buffer per counter: a shared zeros array would make the
@@ -417,6 +427,7 @@ def init_sharded_batch_state(sg: ShardedBatchGraph, sources,
         sum_fringe=jnp.zeros((b,), jnp.int32),
         relax_edges=jnp.zeros((b,), jnp.int32),
         dist_true=_pad_dist_true(dist_true, plan, b, sg.n, sg.n_pad),
+        settled_trace=jnp.zeros((b, int(trace_len)), jnp.int32),
         criterion=plan.criterion,
     )
 
@@ -451,14 +462,18 @@ def _get_sharded_step(mesh: Mesh, axes, schedule: str,
     donation, criterion) — ``k_phases`` and the graph/state arrays are
     traced operands, so chunk sizes and repeated calls never recompile.
 
-    Criterion-plan lowering on the mesh (DESIGN.md Sec. 8): each *dynamic*
-    key is recomputed shard-locally every phase as one gated push +
-    segment-min + exchange round — the IN-family keys ride the forward edge
-    partition (the gate lives at the source's owner, the key lands at the
-    destination's owner, exactly the relax dataflow), the OUT-family keys
-    ride the transpose partition (gate at the destination's owner, key back
-    at the source's owner). The fused threshold pmin widens from ``(2, B)``
-    to ``(L, B)`` where L = 1 + |OUT terms|.
+    Criterion-plan lowering on the mesh (DESIGN.md Sec. 8/9): each *dynamic*
+    key is recomputed shard-locally every phase — the IN-family keys ride
+    the forward edge partition (the gate lives at the source's owner, the
+    key lands at the destination's owner, exactly the relax dataflow), the
+    OUT-family keys ride the transpose partition (gate at the destination's
+    owner, key back at the source's owner). Same-side *independent* keys
+    share ONE fused gated push + segment-min over their partition (the mesh
+    twin of the single-scan phase body: the local edge arrays are read once
+    per side per phase, not once per key); the exchange stays one round per
+    key, and the dependent ``out_full`` still needs its own pass after its
+    ``out_dyn`` input is exchanged. The fused threshold pmin widens from
+    ``(2, B)`` to ``(L, B)`` where L = 1 + |OUT terms|.
     """
     key = (mesh, tuple(axes), schedule, bool(stop_on_lane_finish),
            bool(donate), criterion)
@@ -477,17 +492,20 @@ def _get_sharded_step(mesh: Mesh, axes, schedule: str,
     rspec = P()
     num_shards = int(np.prod([mesh.shape[a] for a in axes]))
 
-    def spmd(d, status, phases, sum_f, redges, trips,
+    def spmd(d, status, phases, sum_f, redges, trips, trace,
              in_min, out_min, out_deg, src_l, dst_g, w,
              tsrc_l, tdst_g, tw, dist_true, k):
         # shapes inside shard_map: d/status/dist_true (B, n_loc); in_min/
-        # out_min/out_deg (n_loc,); edge partitions (1, E_loc); counters
-        # replicated. tsrc_l/tdst_g/tw and dist_true are zero-size dummies
-        # unless the plan needs them (static shapes keep one spec list).
+        # out_min/out_deg (n_loc,); edge partitions (1, E_loc); counters and
+        # the (B, trace_len) trace ring replicated. tsrc_l/tdst_g/tw and
+        # dist_true are zero-size dummies unless the plan needs them (static
+        # shapes keep one spec list).
         src_l, dst_g, w = src_l[0], dst_g[0], w[0]
         tsrc_l, tdst_g, tw = tsrc_l[0], tdst_g[0], tw[0]
         n_loc = d.shape[1]
         n_pad = n_loc * num_shards
+        trace_len = trace.shape[1]
+        rows_b = jnp.arange(d.shape[0])
         start = trips
 
         def live_vec(status):
@@ -497,31 +515,51 @@ def _get_sharded_step(mesh: Mesh, axes, schedule: str,
 
         live0 = live_vec(status)  # (B,) lanes live at chunk entry
 
-        def key_exchange(gate, from_l, to_g, ws):
-            """One dynamic-key round: gated push + local segmin + exchange.
+        def keys_exchange(gates, from_l, to_g, ws):
+            """Fused same-side key rounds: ONE gated push + local segmin
+            over the edge partition for all K stacked gates, then one
+            exchange round per key (the exchange schedule is unchanged —
+            only the local scan fuses).
 
-            Padding edges carry w = +inf (and gate is never -inf), so they
-            contribute a neutral +inf — the same masking convention as the
-            relax push and the ELL sentinel slots.
+            Padding edges carry w = +inf (and gates are never -inf), so
+            they contribute a neutral +inf — the same masking convention as
+            the relax push and the ELL sentinel slots.
             """
-            cand = gate[:, from_l] + ws[None]
-            contrib = jax.vmap(
+            cand = gates[:, :, from_l] + ws[None, None]  # (K, B, E_loc)
+            contrib = jax.vmap(jax.vmap(
                 lambda c: jax.ops.segment_min(c, to_g, num_segments=n_pad)
-            )(cand)
-            return _exchange_min_batch(contrib, axes, n_loc, schedule)
+            ))(cand)
+            return [
+                _exchange_min_batch(contrib[i], axes, n_loc, schedule)
+                for i in range(gates.shape[0])
+            ]
 
         def dyn_keys(status):
             keys = {}
-            for spec in plan.keys:
+            by_name = {s.name: s for s in plan.keys}
+            # independent keys, grouped by side: one local scan per side
+            for names, (from_l, to_g, ws) in (
+                (plan.in_scan_keys, (src_l, dst_g, w)),
+                (plan.out_scan_keys, (tsrc_l, tdst_g, tw)),
+            ):
+                if not names:
+                    continue
+                gates = jnp.stack([
+                    C.key_gate(by_name[nm], status, in_min, out_min, keys)
+                    for nm in names
+                ])
+                for nm, key in zip(names, keys_exchange(gates, from_l, to_g, ws)):
+                    keys[nm] = key
+            if plan.out_scan_dep is not None:
+                spec = by_name[plan.out_scan_dep]
                 gate = C.key_gate(spec, status, in_min, out_min, keys)
-                if spec.side == "in":
-                    keys[spec.name] = key_exchange(gate, src_l, dst_g, w)
-                else:
-                    keys[spec.name] = key_exchange(gate, tsrc_l, tdst_g, tw)
+                keys[spec.name] = keys_exchange(
+                    gate[None], tsrc_l, tdst_g, tw
+                )[0]
             return keys
 
         def body(carry):
-            d, status, phases, sum_f, redges, trips, _ = carry
+            d, status, phases, sum_f, redges, trips, trace, _ = carry
             fringe = status == 1
             keys = dyn_keys(status)
             # one fused (L, B) pmin: min fringe distance + the plan's OUT lanes
@@ -549,18 +587,22 @@ def _get_sharded_step(mesh: Mesh, axes, schedule: str,
             new_status = jnp.where(
                 settle, 2, jnp.where((status == 0) & (upd < INF), 1, status)
             )
-            # one fused (3, B) psum: |F| this phase, relaxed out-edges, and
-            # the post-update live-lane counts the loop condition needs
+            # one fused (4, B) psum: |F| this phase, relaxed out-edges, the
+            # post-update live-lane counts the loop condition needs, and the
+            # per-lane settle count the trace ring records
             counts = jax.lax.psum(
                 jnp.stack([
                     jnp.sum(fringe, axis=1, dtype=jnp.int32),
                     jnp.sum(jnp.where(settle, out_deg[None], 0),
                             axis=1, dtype=jnp.int32),
                     jnp.sum(new_status == 1, axis=1, dtype=jnp.int32),
+                    jnp.sum(settle, axis=1, dtype=jnp.int32),
                 ]),
                 axes,
             )
-            n_f, d_redges, live_cnt = counts[0], counts[1], counts[2]
+            n_f, d_redges, live_cnt, n_settled = (
+                counts[0], counts[1], counts[2], counts[3]
+            )
             new_live = live_cnt > 0
             go = jnp.any(new_live) & (trips + 1 - start < k)
             if stop_on_lane_finish:
@@ -568,26 +610,34 @@ def _get_sharded_step(mesh: Mesh, axes, schedule: str,
                 # so the scheduler can refill it instead of idling it out
                 go &= jnp.all(new_live == live0)
             alive = (n_f > 0).astype(jnp.int32)  # finished lanes stop counting
+            # ring write, same semantics as BatchState.settled_trace: phase p
+            # lands in slot p % trace_len; dead lanes must not write (their
+            # stuck slot may hold a wrapped live entry). All inputs are
+            # psums / replicated, so every device writes the same ring.
+            idx = phases % trace_len
+            new_trace = trace.at[rows_b, idx].set(
+                jnp.where(n_f > 0, n_settled, trace[rows_b, idx])
+            )
             return (new_d, new_status, phases + alive, sum_f + n_f,
-                    redges + d_redges, trips + 1, go)
+                    redges + d_redges, trips + 1, new_trace, go)
 
         def cond(carry):
             return carry[-1]
 
         go0 = jnp.any(live0) & (k > 0)
-        carry = (d, status, phases, sum_f, redges, trips, go0)
-        d, status, phases, sum_f, redges, trips, _ = jax.lax.while_loop(
+        carry = (d, status, phases, sum_f, redges, trips, trace, go0)
+        d, status, phases, sum_f, redges, trips, trace, _ = jax.lax.while_loop(
             cond, body, carry
         )
-        return d, status, phases, sum_f, redges, trips
+        return d, status, phases, sum_f, redges, trips, trace
 
     mapped = shard_map_compat(
         spmd,
         mesh=mesh,
-        in_specs=(bspec, bspec, rspec, rspec, rspec, rspec,
+        in_specs=(bspec, bspec, rspec, rspec, rspec, rspec, rspec,
                   vspec, vspec, vspec, espec, espec, espec,
                   espec, espec, espec, bspec, rspec),
-        out_specs=(bspec, bspec, rspec, rspec, rspec, rspec),
+        out_specs=(bspec, bspec, rspec, rspec, rspec, rspec, rspec),
     )
 
     def step(state: ShardedBatchState, src_l, dst_g, w, tsrc_l, tdst_g, tw,
@@ -604,15 +654,15 @@ def _get_sharded_step(mesh: Mesh, axes, schedule: str,
         if not needs_o:
             # (B, 0) dummy: sharded to (B, 0) blocks, never read by the body
             dist_true = jnp.zeros((b, 0), jnp.float32)
-        d, status, phases, sum_f, redges, trips = mapped(
+        d, status, phases, sum_f, redges, trips, trace = mapped(
             state.dist, state.status, state.phases, state.sum_fringe,
-            state.relax_edges, state.trips,
+            state.relax_edges, state.trips, state.settled_trace,
             in_min, out_min, out_deg, src_l, dst_g, w,
             tsrc_l, tdst_g, tw, dist_true, k,
         )
         return dataclasses.replace(
             state, dist=d, status=status, phases=phases, sum_fringe=sum_f,
-            relax_edges=redges, trips=trips,
+            relax_edges=redges, trips=trips, settled_trace=trace,
         )
 
     fn = jax.jit(step, donate_argnums=(0,) if donate else ())
@@ -684,6 +734,7 @@ def _reset_sharded_impl(state: ShardedBatchState, sources,
         sum_fringe=ctr(state.sum_fringe),
         relax_edges=ctr(state.relax_edges),
         dist_true=dist_true,
+        settled_trace=jnp.where(touch[:, None], 0, state.settled_trace),
     )
 
 
@@ -732,7 +783,13 @@ def sharded_lanes_active(state: ShardedBatchState) -> np.ndarray:
 
 
 def harvest_sharded(state: ShardedBatchState) -> BatchedResult:
-    """Freeze a sharded stepper state into a (padding-free) BatchedResult."""
+    """Freeze a sharded stepper state into a (padding-free) BatchedResult.
+
+    Same trace honesty rule as the static :func:`~repro.core.static_engine.
+    harvest`: a length-1 ring was never a trace (it holds only the last
+    phase's count), so it maps to None rather than a fake one-slot profile.
+    """
+    trace = state.settled_trace if state.settled_trace.shape[1] > 1 else None
     return BatchedResult(
         dist=state.dist[:, : state.n],
         status=state.status[:, : state.n].astype(jnp.int8),
@@ -740,6 +797,7 @@ def harvest_sharded(state: ShardedBatchState) -> BatchedResult:
         sum_fringe=state.sum_fringe,
         relax_edges=state.relax_edges,
         total_phases=state.trips,
+        settled_per_phase=trace,
     )
 
 
@@ -747,7 +805,7 @@ def run_sharded_batch(g: Graph, mesh: Mesh, axes, sources,
                       schedule: str = "reduce_scatter",
                       max_phases: int | None = None,
                       criterion: str = DEFAULT_CRITERION,
-                      dist_true=None) -> BatchedResult:
+                      dist_true=None, trace_len: int = 1) -> BatchedResult:
     """One-shot batched distributed solve: shard, init, drain, harvest."""
     if isinstance(axes, str):
         axes = (axes,)
@@ -756,7 +814,7 @@ def run_sharded_batch(g: Graph, mesh: Mesh, axes, sources,
         g, num, with_transpose=C.plan_for(criterion).needs_out_adjacency
     )
     state = init_sharded_batch_state(sg, sources, criterion=criterion,
-                                     dist_true=dist_true)
+                                     dist_true=dist_true, trace_len=trace_len)
     cap = int(max_phases) if max_phases is not None else g.n + 1
     state = step_sharded_batch(sg, state, mesh, axes, cap, schedule=schedule)
     return harvest_sharded(state)

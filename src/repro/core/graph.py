@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -164,6 +165,239 @@ def to_ell_out(g: Graph, pad_multiple: int = 8):
     out = _build_ell(np.asarray(g.dst), np.asarray(g.src), np.asarray(g.w),
                      g.n, pad_multiple)
     cache[pad_multiple] = out
+    return out
+
+
+def out_degrees(g: Graph) -> jax.Array:
+    """(n,) int32 real out-degrees (padding edges excluded), memoised.
+
+    The batched steppers carry this vector for the ``relax_edges`` counter;
+    before memoisation every ``init_batch_state`` recomputed it with a
+    device ``segment_sum`` — a per-admission cost in serving. Cached in the
+    instance ``__dict__`` like the ELL views (dropped by jit flattening).
+    """
+    hit = g.__dict__.get("_out_deg_cache")
+    if hit is not None:
+        return hit
+    src = np.asarray(g.src)
+    w = np.asarray(g.w)
+    deg = np.zeros(g.n, np.int32)
+    np.add.at(deg, src[np.isfinite(w)], 1)
+    out = jnp.asarray(deg)
+    g.__dict__["_out_deg_cache"] = out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Degree-sliced ELL: stop paying max-degree padding on skewed graphs
+# ---------------------------------------------------------------------------
+
+
+class EllSlice(NamedTuple):
+    """One degree bucket of a sliced ELL view.
+
+    ``rows[i]`` is the vertex that slice-row ``i`` belongs to; a *split*
+    heavy vertex contributes several rows (same ``rows`` id, disjoint edge
+    chunks), merged back by the consumer's scatter-min — exact, because f32
+    ``min`` has no rounding, so the merge is bit-identical to the padded
+    single-row reduction in any order.
+    """
+
+    rows: jax.Array  # (R_b,) int32 vertex ids (repeats allowed: split rows)
+    cols: jax.Array  # (R_b, D_b) int32 neighbour ids (sentinel id = n)
+    ws: jax.Array  # (R_b, D_b) f32, +inf padding
+
+
+class SlicedEll(NamedTuple):
+    """A degree-sliced ELL adjacency view: one :class:`EllSlice` per bucket.
+
+    Plain-ELL pads every vertex to the maximum degree, so one rmat-style hub
+    makes *every* row tile pay ``D_max`` lanes. Slicing buckets rows by
+    degree (each bucket padded only to its own width) and splits rows beyond
+    the last width into chunks, bounding padded slots by ~2x the real edge
+    count instead of ``n * D_max``. Zero-degree vertices appear in no slice
+    (the consumer's +inf merge identity is exactly their empty-min value).
+
+    ``merge_idx`` turns the slice->vertex merge into a *gather*: entry
+    ``[v, c]`` is the position of v's c-th slice-row in the row-major
+    concatenation of all slices (sentinel = total rows, where consumers
+    append one +inf slot), so ``merged[v] = min_c concat[merge_idx[v, c]]``
+    — the same take+min idiom as the kernels, instead of a scatter-min
+    (scatters serialise on CPU and row-conflict on TPU). C is the maximum
+    chunk count, 1 unless heavy rows split.
+    """
+
+    slices: tuple[EllSlice, ...]
+    merge_idx: jax.Array  # (n, C) int32 positions into concat(slices)+[inf]
+
+    @property
+    def widths(self) -> tuple[int, ...]:
+        return tuple(int(s.cols.shape[1]) for s in self.slices)
+
+    @property
+    def padded_slots(self) -> int:
+        return sum(int(s.cols.size) for s in self.slices)
+
+
+def default_slice_boundaries(deg: np.ndarray, pad_multiple: int = 8,
+                             max_slices: int = 4) -> tuple[int, ...]:
+    """Bucket widths for :func:`to_ell_in_sliced`: geometric (x4) from
+    ``pad_multiple`` up to the 95th-percentile degree, at most
+    ``max_slices`` buckets. Rows beyond the last width are split into
+    chunks of that width, so hubs never widen a bucket."""
+    deg = deg[deg > 0]
+    if deg.size == 0:
+        return (pad_multiple,)
+    p95 = int(np.percentile(deg, 95))
+    widths = [pad_multiple]
+    while widths[-1] < p95 and len(widths) < max_slices:
+        widths.append(widths[-1] * 4)
+    return tuple(widths)
+
+
+def _build_ell_sliced(from_ids, to_ids, w, n, pad_multiple, boundaries,
+                      split):
+    """Slice rows keyed by ``to_ids`` into per-degree-bucket ELL tiles."""
+    real = np.isfinite(w)
+    from_ids, to_ids, w = from_ids[real], to_ids[real], w[real]
+    deg = np.zeros(n, np.int64)
+    np.add.at(deg, to_ids, 1)
+    if boundaries is None:
+        boundaries = default_slice_boundaries(deg, pad_multiple)
+    widths = sorted(
+        {max(pad_multiple, -(-int(b) // pad_multiple) * pad_multiple)
+         for b in boundaries}
+    )
+    if split is None:
+        split = widths[-1]
+    split = max(pad_multiple, -(-int(split) // pad_multiple) * pad_multiple)
+    if split < widths[-1]:
+        raise ValueError(
+            f"split threshold {split} below the widest bucket {widths[-1]}"
+        )
+    # per-edge slot within its row (same stable order as _build_ell)
+    order = np.argsort(to_ids, kind="stable")
+    from_ids, to_ids, w = from_ids[order], to_ids[order], w[order]
+    slot = np.arange(len(to_ids)) - np.searchsorted(to_ids, to_ids, "left")
+    slices = []
+    lo = 0
+    for width in widths:
+        last = width == widths[-1]
+        if last:
+            vmask = deg > lo  # widest bucket also owns the split rows
+        else:
+            vmask = (deg > lo) & (deg <= width)
+        verts = np.nonzero(vmask)[0]
+        if verts.size == 0:
+            lo = width
+            continue
+        use_w = split if last else width
+        # chunk index of each row occurrence: vertex v with degree d gets
+        # ceil(d / use_w) rows; edge at slot s lands in chunk s // use_w
+        chunks = np.maximum(1, -(-deg[verts] // use_w)) if last else np.ones(
+            verts.size, np.int64
+        )
+        rows = np.repeat(verts, chunks).astype(np.int32)
+        # row offset of each vertex's first chunk within this slice
+        first = np.zeros(n, np.int64)
+        first[verts] = np.cumsum(chunks) - chunks
+        emask = vmask[to_ids]
+        e_to, e_from, e_w, e_slot = (
+            to_ids[emask], from_ids[emask], w[emask], slot[emask]
+        )
+        r = first[e_to] + e_slot // use_w
+        c = e_slot % use_w
+        cols_b = np.full((rows.size, use_w), n, np.int32)
+        ws_b = np.full((rows.size, use_w), np.inf, np.float32)
+        cols_b[r, c] = e_from
+        ws_b[r, c] = e_w
+        slices.append(EllSlice(
+            rows=jnp.asarray(rows), cols=jnp.asarray(cols_b),
+            ws=jnp.asarray(ws_b),
+        ))
+        lo = width
+    if not slices:  # edgeless graph: one empty well-formed slice
+        slices.append(EllSlice(
+            rows=jnp.zeros((0,), jnp.int32),
+            cols=jnp.full((0, widths[0]), n, jnp.int32),
+            ws=jnp.full((0, widths[0]), np.inf, jnp.float32),
+        ))
+    # gather-based merge plan: position of each vertex's slice-rows in the
+    # row-major slice concatenation (sentinel = total rows -> +inf slot)
+    all_rows = np.concatenate([np.asarray(s.rows) for s in slices])
+    total = all_rows.shape[0]
+    occ = np.zeros(n, np.int64)
+    np.add.at(occ, all_rows, 1)
+    c_max = max(int(occ.max()) if occ.size else 1, 1)
+    merge_idx = np.full((n, c_max), total, np.int32)
+    order = np.argsort(all_rows, kind="stable")
+    srt = all_rows[order]
+    rank = np.arange(total) - np.searchsorted(srt, srt, side="left")
+    merge_idx[srt, rank] = order
+    return SlicedEll(slices=tuple(slices), merge_idx=jnp.asarray(merge_idx))
+
+
+def _sliced_cache_key(pad_multiple, boundaries, split):
+    return (pad_multiple,
+            None if boundaries is None else tuple(int(b) for b in boundaries),
+            None if split is None else int(split))
+
+
+def _ledger_boundaries(side: str, n: int):
+    """Tuned bucket boundaries from the kernel tuning ledger, if any.
+
+    Imported lazily: ``repro.kernels.config`` is dependency-free, but the
+    graph module must stay importable without the kernel package in
+    pathological partial-install states, and the lookup is only needed when
+    no explicit boundaries were given.
+    """
+    from repro.kernels.config import resolve_slice_boundaries
+
+    return resolve_slice_boundaries(side, n)
+
+
+def to_ell_in_sliced(g: Graph, pad_multiple: int = 8,
+                     boundaries=None, split: int | None = None) -> SlicedEll:
+    """Degree-sliced ELL view of the *incoming* adjacency.
+
+    ``boundaries`` are bucket widths (rounded up to ``pad_multiple``);
+    when omitted, a tuning-ledger entry for this (side, n) — written by
+    ``repro.kernels.config.autotune_slicing`` — wins over the
+    :func:`default_slice_boundaries` of the in-degree distribution. Rows
+    with degree beyond ``split`` (default: the widest bucket) are split
+    into width-``split`` chunks merged by the consumer. Memoised per Graph
+    instance keyed by the full parameter tuple, like :func:`to_ell_in`.
+    """
+    if boundaries is None:
+        boundaries = _ledger_boundaries("in", g.n)
+    cache = g.__dict__.setdefault("_ell_in_sliced_cache", {})
+    key = _sliced_cache_key(pad_multiple, boundaries, split)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+    out = _build_ell_sliced(np.asarray(g.src), np.asarray(g.dst),
+                            np.asarray(g.w), g.n, pad_multiple, boundaries,
+                            split)
+    cache[key] = out
+    return out
+
+
+def to_ell_out_sliced(g: Graph, pad_multiple: int = 8,
+                      boundaries=None, split: int | None = None) -> SlicedEll:
+    """Degree-sliced ELL view of the *outgoing* adjacency (transpose twin
+    of :func:`to_ell_in_sliced`, same ledger consultation), memoised per
+    Graph instance."""
+    if boundaries is None:
+        boundaries = _ledger_boundaries("out", g.n)
+    cache = g.__dict__.setdefault("_ell_out_sliced_cache", {})
+    key = _sliced_cache_key(pad_multiple, boundaries, split)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+    out = _build_ell_sliced(np.asarray(g.dst), np.asarray(g.src),
+                            np.asarray(g.w), g.n, pad_multiple, boundaries,
+                            split)
+    cache[key] = out
     return out
 
 

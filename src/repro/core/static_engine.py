@@ -4,22 +4,41 @@ Kernel-backed implementation of *any* registered criterion disjunction
 (``repro.core.criteria``), lowered through a
 :class:`~repro.core.criteria.CritPlan` (the default remains
 ``INSTATIC | OUTSTATIC`` — the criterion the paper implements in parallel).
-Per phase it does:
+The phase body is *single-scan*: one adjacency scan per ELL view per phase,
+however many dynamic keys the plan carries (DESIGN.md Sec. 9):
 
-  1. one ``ell_key_min`` pass per *dynamic* key the plan needs (masked
-     segment-min over the unsettled in-/out-neighbourhood; zero passes for
-     the all-static default);
+  1. the fused **out-scan** (plans with out-side dynamic keys only): every
+     independent out-side key gathers from one pass over the outgoing ELL;
+     a dependent key (``out_full``) adds a second sweep inside the same
+     launch;
   2. ``frontier_crit`` lane kernel: one pass over vertex state -> the plan's
-     ``L = 1 + |OUT terms|`` fused thresholds + fringe size;
-  3. settle-mask (elementwise over the plan's terms) + ``ell_relax`` kernel:
-     one pass over the ELL incoming adjacency -> candidate distance updates.
+     ``L = 1 + |OUT terms|`` fused thresholds + fringe size. In-side keys
+     are read from ``BatchState.crit_keys`` — they were emitted by the
+     previous phase's in-scan (see 3) and are bitwise what recomputing from
+     the current status would give;
+  3. settle-mask (elementwise over the plan's terms) + the fused **in-scan**
+     (``ell_relax_keys``): one pass over the incoming ELL emits this phase's
+     relax update *and* the next phase's in-side key mins (gated on the
+     post-settle status) from the same tile loads. Plans with no in-side
+     keys run the plain relax kernel.
 
-Cost model: 2 + (#dynamic keys) adjacency/vertex passes per phase, traded
-against the phase-count reduction of the stronger criterion (DESIGN.md
-Sec. 8). The plan is static jit metadata carried on the state
-(``BatchState.criterion``), so each criterion compiles exactly one step
-program; the dynamic keys themselves are data, carried in
-``BatchState.crit_keys`` and recomputed from status each phase.
+Cost model: at most 2 adjacency scans + 1 vertex pass per phase for every
+registered criterion (the all-static default keeps its 1 + 1), traded
+against the phase-count reduction of the stronger criterion — this is what
+makes ``in|out``'s phase-count win show up on the wall clock
+(BENCH_fused.json; PR 4's composed pipeline paid 4 adjacency passes). The
+plan is static jit metadata carried on the state (``BatchState.criterion``),
+so each criterion compiles exactly one step program; the dynamic keys are
+data, carried in ``BatchState.crit_keys``. Carried in-side keys are valid
+exactly when ``BatchState.keys_valid`` says so — admission (init/reset)
+invalidates them, and ``step_batch`` re-primes with one composed key pass
+before entering the loop (f32 min is exact, so a re-primed key is bitwise
+the carried one for undisturbed lanes).
+
+Both ELL arguments accept the padded ``(cols, ws)`` layout or the
+degree-sliced ``SlicedEll`` (``to_ell_in_sliced``) — results are
+bit-identical; sliced wins on skewed (rmat-style) degree distributions
+where padded rows pay the hub width (DESIGN.md Sec. 9).
 
 This is the single-device building block that ``repro.core.distributed``
 shard_maps over the production mesh. ``use_pallas=False`` swaps in the ref.py
@@ -65,10 +84,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import criteria as C
-from repro.core.graph import Graph, to_ell_in, to_ell_out
+from repro.core.graph import (
+    Graph,
+    out_degrees,
+    to_ell_in,
+    to_ell_in_sliced,
+    to_ell_out,
+    to_ell_out_sliced,
+)
 from repro.core.phased import PhasedResult
 from repro.kernels import ops as kops
-from repro.kernels import ref as kref
 
 INF = jnp.inf
 
@@ -82,7 +107,7 @@ DEFAULT_CRITERION = "instatic|outstatic"  # the paper's parallel implementation
     jax.tree_util.register_dataclass,
     data_fields=[
         "dist", "status", "trips", "phases", "sum_fringe", "relax_edges",
-        "out_deg", "crit_keys", "dist_true", "settled_trace",
+        "out_deg", "crit_keys", "keys_valid", "dist_true", "settled_trace",
     ],
     meta_fields=["criterion"],
 )
@@ -106,10 +131,17 @@ class BatchState:
     sum_fringe: jax.Array  # (B,) int32: per-lane sum over live phases of |F|
     relax_edges: jax.Array  # (B,) int32: per-lane out-edges relaxed
     out_deg: jax.Array  # (n,) int32: graph out-degrees (carried for counters)
-    crit_keys: jax.Array | None  # (K_dyn, B, n) f32 dynamic criterion keys as
-    #   of the last executed phase (ordered like the plan's ``keys``), or
-    #   None for all-static plans. Recomputed from status inside every phase
-    #   (never read stale); carried so state shapes stay fixed across chunks.
+    crit_keys: jax.Array | None  # (K_dyn, B, n) f32 dynamic criterion keys
+    #   (ordered like the plan's ``keys``), or None for all-static plans.
+    #   Out-side slots hold the last executed phase's values (recomputed
+    #   in-phase, never read stale); in-side slots hold the keys for the
+    #   CURRENT status — emitted by the previous phase's fused in-scan, or
+    #   re-primed by step_batch when ``keys_valid`` is False (bitwise equal
+    #   either way: f32 min is exact).
+    keys_valid: jax.Array | None  # scalar bool: in-side slots of crit_keys
+    #   match the current status. False after init/reset (admission touches
+    #   status without scanning the adjacency); None when the plan carries
+    #   no in-side dynamic keys.
     dist_true: jax.Array | None  # (B, n) f32 per-lane true distances, only
     #   when the plan includes 'oracle'; None otherwise
     settled_trace: jax.Array  # (B, trace_len) int32 ring of per-phase settle
@@ -200,15 +232,12 @@ def _fresh_rows(sources, n: int):
 
 
 @partial(jax.jit, static_argnames=("criterion", "trace_len"))
-def _init_state(g: Graph, sources: jax.Array, dist_true,
+def _init_state(g: Graph, out_deg: jax.Array, sources: jax.Array, dist_true,
                 criterion: str, trace_len: int) -> BatchState:
     plan = C.plan_for(criterion)
     n = g.n
     b = sources.shape[0]
     d0, status0 = _fresh_rows(sources, n)
-    out_deg = jax.ops.segment_sum(
-        jnp.isfinite(g.w).astype(jnp.int32), g.src, num_segments=n
-    )
     zeros_b = jnp.zeros((b,), jnp.int32)
     return BatchState(
         dist=d0,
@@ -220,6 +249,9 @@ def _init_state(g: Graph, sources: jax.Array, dist_true,
         out_deg=out_deg,
         crit_keys=(
             jnp.zeros((len(plan.keys), b, n), jnp.float32) if plan.keys else None
+        ),
+        keys_valid=(
+            jnp.asarray(False) if plan.in_scan_keys else None
         ),
         dist_true=dist_true,
         settled_trace=jnp.zeros((b, trace_len), jnp.int32),
@@ -276,30 +308,66 @@ def init_batch_state(
     if trace_len < 1:
         raise ValueError(f"trace_len must be >= 1; got {trace_len}")
     dt = _validate_dist_true(dist_true, plan, src_np.shape[0], g.n)
+    # out-degrees memoised per Graph instance: admission (init/reset) runs
+    # per query in serving, the segment-sum it used to pay does not
     return _init_state(
-        g, jnp.asarray(src_np), dt, plan.criterion, int(trace_len)
+        g, out_degrees(g), jnp.asarray(src_np), dt, plan.criterion,
+        int(trace_len)
     )
 
 
-def _compute_keys(plan: C.CritPlan, g: Graph, status, ell_in, ell_out,
-                  use_pallas: bool) -> dict:
-    """The plan's dynamic keys for the current status: name -> (B, n) f32.
+def _spec_by_name(plan: C.CritPlan, name: str) -> C.KeySpec:
+    return plan.keys[[k.name for k in plan.keys].index(name)]
 
-    One masked ELL segment-min pass per key (dependencies first — e.g.
-    ``out_full`` consumes the ``out_dyn`` computed just before it), over the
-    incoming or outgoing adjacency view as the key's side dictates.
+
+def _compute_out_keys(plan: C.CritPlan, g: Graph, status, ell_out,
+                      use_pallas: bool) -> dict:
+    """The plan's out-side dynamic keys for the current status, from ONE
+    fused scan over the outgoing adjacency: name -> (B, n) f32.
+
+    Independent keys (elementwise gates) share the scan's tile loads; the
+    dependent ``out_full`` adds a second sweep inside the same launch,
+    gated by the ``out_dyn`` the first sweep produced (paper Eq. 2's
+    two-hop slack).
     """
-    keys: dict = {}
-    for spec in plan.keys:
-        gate = C.key_gate(spec, status, g.in_min_static, g.out_min_static, keys)
-        cols, ws = ell_in if spec.side == "in" else ell_out
-        if use_pallas:
-            keys[spec.name] = kops.key_min_batch(gate, cols, ws)
-        else:
-            keys[spec.name] = kref.ell_key_min_batch_ref(
-                kops.pad_lane_batch(gate), cols, ws
-            )
-    return keys
+    if not (plan.out_scan_keys or plan.out_scan_dep):
+        return {}
+    gates = jnp.stack([
+        C.key_gate(_spec_by_name(plan, nm), status, g.in_min_static,
+                   g.out_min_static, {})
+        for nm in plan.out_scan_keys
+    ])
+    dep_parts = None
+    names = list(plan.out_scan_keys)
+    if plan.out_scan_dep is not None:
+        spec = _spec_by_name(plan, plan.out_scan_dep)
+        dga, dgb = C.dep_gate_parts(spec, status)
+        dep_parts = (dga, dgb, plan.out_scan_keys.index(spec.aux))
+        names.append(plan.out_scan_dep)
+    keys = kops.out_scan_keys_batch(gates, dep_parts, ell_out,
+                                    use_pallas=use_pallas)
+    return {nm: keys[i] for i, nm in enumerate(names)}
+
+
+def _recompute_in_keys(plan: C.CritPlan, g: Graph, status, ell_in,
+                       use_pallas: bool) -> jax.Array:
+    """(K_in, B, n) in-side keys for the *current* status via composed
+    key-min passes — the priming path after admission; the steady state
+    carries them out of the fused in-scan instead."""
+    return jnp.stack([
+        kops.key_min_batch_any(
+            C.key_gate(_spec_by_name(plan, nm), status, g.in_min_static,
+                       g.out_min_static, {}),
+            ell_in, use_pallas=use_pallas,
+        )
+        for nm in plan.in_scan_keys
+    ])
+
+
+def _in_slot_indices(plan: C.CritPlan) -> list[int]:
+    """Positions of the in-scan keys inside the ``plan.keys`` stack."""
+    order = [k.name for k in plan.keys]
+    return [order.index(nm) for nm in plan.in_scan_keys]
 
 
 def _threshold_keys(plan: C.CritPlan, g: Graph, keys: dict, b: int):
@@ -318,7 +386,7 @@ def _threshold_keys(plan: C.CritPlan, g: Graph, keys: dict, b: int):
 
 
 def _step_batch_impl(
-    g: Graph, ell_cols, ell_ws, oell_cols, oell_ws, state: BatchState,
+    g: Graph, ell_in, ell_out, state: BatchState,
     k_phases, use_pallas: bool, stop_on_lane_finish: bool = False,
 ) -> BatchState:
     plan = C.plan_for(state.criterion)
@@ -327,19 +395,34 @@ def _step_batch_impl(
     live0 = jnp.any(state.status == 1, axis=1)  # (B,) lanes live at entry
     trace_len = state.settled_trace.shape[1]
     rows_b = jnp.arange(b)
-    ell_in = (ell_cols, ell_ws)
-    ell_out = (oell_cols, oell_ws)
+    in_slots = _in_slot_indices(plan)
 
-    def thresholds(d, status, tkeys):
-        if use_pallas:
-            return kops.crit_thresholds_batch(d, status, tkeys)
-        return kref.frontier_crit_lanes_batch_ref(d, status, tkeys)
+    def relax_plain(d, settle):
+        if hasattr(ell_in, "slices"):
+            return kops.relax_settled_batch_sliced(
+                d, settle, ell_in, use_pallas=use_pallas
+            )
+        return kops.relax_settled_batch(
+            d, settle, ell_in[0], ell_in[1], use_pallas=use_pallas
+        )
 
-    def relax(d, settle):
-        if use_pallas:
-            return kops.relax_settled_batch(d, settle, ell_cols, ell_ws)
-        dmask = kops.pad_lane_batch(jnp.where(settle, d, INF))
-        return kref.ell_relax_batch_ref(dmask, ell_cols, ell_ws)
+    if in_slots:
+        # re-prime carried in-side keys once per chunk: admission (init /
+        # reset) touches status without scanning the adjacency, so the
+        # carried slots may be stale. Recomputing equals the carried values
+        # bitwise wherever they were valid (exact min), so one cond per
+        # *chunk* — not per phase — restores the invariant the loop body
+        # relies on: crit_keys in-side slots always match s.status.
+        primed = jax.lax.cond(
+            state.keys_valid,
+            lambda: state.crit_keys,
+            lambda: state.crit_keys.at[jnp.asarray(in_slots)].set(
+                _recompute_in_keys(plan, g, state.status, ell_in, use_pallas)
+            ),
+        )
+        state = dataclasses.replace(
+            state, crit_keys=primed, keys_valid=jnp.asarray(True)
+        )
 
     def cond(s):
         live = jnp.any(s.status == 1, axis=1)  # lanes never revive, live <= live0
@@ -353,8 +436,16 @@ def _step_batch_impl(
     def body(s):
         d, status = s.dist, s.status
         fringe = status == 1
-        keys = _compute_keys(plan, g, status, ell_in, ell_out, use_pallas)
-        mins, n_f = thresholds(d, status, _threshold_keys(plan, g, keys, b))
+        # --- out-scan: every out-side dynamic key from one fused launch
+        keys = _compute_out_keys(plan, g, status, ell_out, use_pallas)
+        # in-side keys ride in from the previous phase's in-scan (or the
+        # pre-loop priming); by invariant they match the current status
+        for i, nm in zip(in_slots, plan.in_scan_keys):
+            keys[nm] = s.crit_keys[i]
+        mins, n_f = kops.crit_thresholds_batch(
+            d, status, _threshold_keys(plan, g, keys, b),
+            use_pallas=use_pallas,
+        )
         settle = C.plan_union_mask(
             plan, d, fringe, mins, keys, g.in_min_static, s.dist_true
         )
@@ -366,7 +457,20 @@ def _step_batch_impl(
             settle = jnp.where(
                 jnp.any(settle, axis=1, keepdims=True), settle, dijk
             )
-        upd = relax(d, settle)
+        # --- in-scan: relax this phase; fused plans also emit the NEXT
+        # phase's in-side keys from the same tile loads
+        next_in = None
+        if in_slots:
+            parts = [
+                C.in_scan_gate_parts(_spec_by_name(plan, nm), status, settle,
+                                     g.in_min_static[None])
+                for nm in plan.in_scan_keys
+            ]
+            upd, next_in = kops.in_scan_relax_keys_batch(
+                d, settle, parts, ell_in, use_pallas=use_pallas
+            )
+        else:
+            upd = relax_plain(d, settle)
         new_d = jnp.minimum(d, upd)
         new_status = jnp.where(
             settle, 2, jnp.where((status == 0) & (upd < INF), 1, status)
@@ -379,6 +483,13 @@ def _step_batch_impl(
         trace = s.settled_trace.at[rows_b, idx].set(
             jnp.where(n_f > 0, n_settled, s.settled_trace[rows_b, idx])
         )
+        crit_keys = s.crit_keys
+        if plan.keys:
+            crit_keys = jnp.stack([
+                keys[k.name] for k in plan.keys
+            ])
+            for j, i in enumerate(in_slots):
+                crit_keys = crit_keys.at[i].set(next_in[j])
         return BatchState(
             dist=new_d,
             status=new_status,
@@ -388,10 +499,8 @@ def _step_batch_impl(
             relax_edges=s.relax_edges
             + jnp.sum(jnp.where(settle, s.out_deg[None], 0), axis=1, dtype=jnp.int32),
             out_deg=s.out_deg,
-            crit_keys=(
-                jnp.stack([keys[k.name] for k in plan.keys])
-                if plan.keys else None
-            ),
+            crit_keys=crit_keys,
+            keys_valid=s.keys_valid,
             dist_true=s.dist_true,
             settled_trace=trace,
             criterion=s.criterion,
@@ -405,7 +514,7 @@ _step_batch = jax.jit(_step_batch_impl, static_argnames=_STEP_STATICS)
 # donating variant: XLA may update the (B, n) state in place instead of
 # copying it per call (no-op on CPU, which ignores donation)
 _step_batch_donate = jax.jit(
-    _step_batch_impl, static_argnames=_STEP_STATICS, donate_argnums=(5,)
+    _step_batch_impl, static_argnames=_STEP_STATICS, donate_argnums=(3,)
 )
 
 
@@ -430,9 +539,11 @@ def step_batch(
     compiled body (stored as static metadata, so each criterion compiles
     once).
 
-    ``ell_out`` optionally passes a precomputed ``to_ell_out(g)``; it is
-    built (and memoised) on demand only when the plan carries OUT-side
-    dynamic keys.
+    ``ell``/``ell_out`` accept the padded ``(cols, ws)`` pair *or* a
+    degree-sliced ``SlicedEll`` (``to_ell_in_sliced``/``to_ell_out_sliced``)
+    — results are bit-identical between layouts. ``ell_out`` is built (and
+    memoised) on demand only when the plan carries OUT-side dynamic keys,
+    matching ``ell``'s layout when it must be derived.
 
     ``donate=True`` donates the input state's buffers so accelerator
     backends update them in place rather than copying ~8·B·n bytes per
@@ -441,17 +552,17 @@ def step_batch(
     """
     if ell is None:
         ell = to_ell_in(g)
-    cols, ws = ell
     plan = C.plan_for(state.criterion)
     if plan.needs_out_adjacency:
         if ell_out is None:
-            ell_out = to_ell_out(g)
-        ocols, ows = ell_out
+            ell_out = (
+                to_ell_out_sliced(g) if hasattr(ell, "slices") else to_ell_out(g)
+            )
     else:
-        ocols = ows = None
+        ell_out = None
     fn = _step_batch_donate if donate else _step_batch
     return fn(
-        g, cols, ws, ocols, ows, state, jnp.int32(k_phases), bool(use_pallas),
+        g, ell, ell_out, state, jnp.int32(k_phases), bool(use_pallas),
         bool(stop_on_lane_finish),
     )
 
@@ -478,6 +589,13 @@ def _reset_lanes_impl(state: BatchState, sources, new_dist_true) -> BatchState:
         crit_keys=(
             None if state.crit_keys is None
             else jnp.where(touch[None, :, None], 0.0, state.crit_keys)
+        ),
+        # a touched lane's in-side key slots no longer match its status;
+        # the next step_batch re-primes them (one composed pass) before
+        # entering the loop
+        keys_valid=(
+            None if state.keys_valid is None
+            else state.keys_valid & ~jnp.any(touch)
         ),
         dist_true=dist_true,
         settled_trace=jnp.where(touch[:, None], 0, state.settled_trace),
@@ -593,6 +711,22 @@ def harvest(state: BatchState) -> BatchedResult:
     )
 
 
+def _resolve_layout(g: Graph, ell, ell_out, layout: str):
+    """Build the requested incoming view when the caller passed none.
+
+    The outgoing view is deliberately NOT built here: only plans with
+    dynamic OUT keys read it, and :func:`step_batch` derives one matching
+    the incoming layout on demand — eagerly building (and memoising) a
+    transpose view the default criterion never touches would double the
+    resident adjacency for nothing.
+    """
+    if layout not in ("padded", "sliced"):
+        raise ValueError(f"layout must be 'padded' or 'sliced'; got {layout!r}")
+    if ell is None:
+        ell = to_ell_in_sliced(g) if layout == "sliced" else to_ell_in(g)
+    return ell, ell_out
+
+
 def run_phased_static(
     g: Graph,
     source: int = 0,
@@ -603,6 +737,7 @@ def run_phased_static(
     dist_true=None,
     trace_len: int | None = None,
     ell_out=None,
+    layout: str = "padded",
 ) -> PhasedResult:
     """Phased SSSP via the Pallas kernels (B=1 stepper), any criterion.
 
@@ -611,9 +746,11 @@ def run_phased_static(
     — every criterion settles >= 1 vertex per phase, so the ring never
     wraps and matches ``run_phased``'s trace exactly. ``dist_true`` is the
     (n,) true-distance row, required iff the criterion includes 'oracle'.
+    ``layout`` selects the ELL views built when none are passed ("sliced"
+    buckets rows by degree — bit-identical results, faster on skewed
+    graphs).
     """
-    if ell is None:
-        ell = to_ell_in(g)
+    ell, ell_out = _resolve_layout(g, ell, ell_out, layout)
     cap = int(max_phases) if max_phases is not None else g.n + 1
     if not 0 <= int(source) < g.n:
         raise ValueError(f"source must be in [0, {g.n}); got {source}")
@@ -654,15 +791,17 @@ def run_phased_static_batch(
     dist_true=None,
     trace_len: int = 1,
     ell_out=None,
+    layout: str = "padded",
 ) -> BatchedResult:
     """Batched phased SSSP: B sources, one graph, one phase loop.
 
     Args:
       g: the shared input graph.
       sources: (B,) int source vertex ids (one SSSP query per row).
-      ell: optional precomputed ``to_ell_in(g)`` — pass it when answering
-        many batches against the same graph so the ELL build is paid once
-        (``to_ell_in`` also memoises per Graph instance).
+      ell: optional precomputed ``to_ell_in(g)`` or ``to_ell_in_sliced(g)``
+        — pass it when answering many batches against the same graph so the
+        ELL build is paid once (both builders also memoise per Graph
+        instance).
       use_pallas: kernels (True) vs ref.py oracles (False); bit-identical.
       max_phases: safety cap on loop trips (default n+1: every live row
         settles >= 1 vertex per phase, so all rows end within n phases).
@@ -671,14 +810,15 @@ def run_phased_static_batch(
       dist_true: (B, n) per-row true distances, required iff the criterion
         includes 'oracle'.
       trace_len: settled-per-phase ring length per row (default 1 = off).
-      ell_out: optional precomputed ``to_ell_out(g)`` for dynamic OUT keys.
+      ell_out: optional precomputed outgoing view for dynamic OUT keys.
+      layout: ELL layout built when none is passed ("padded" | "sliced");
+        bit-identical results either way.
 
     Row ``i`` of the result equals ``run_phased_static(g, sources[i],
     criterion=criterion)`` exactly (same float ops in the same phase
     structure, per-row).
     """
-    if ell is None:
-        ell = to_ell_in(g)
+    ell, ell_out = _resolve_layout(g, ell, ell_out, layout)
     # fail loudly on any invalid id: out-of-range sources would otherwise be
     # silently dropped by the scatter (all-inf row, 0 phases)
     src_np = validate_sources(sources, g.n, 0, f"in [0, {g.n})")

@@ -1,19 +1,31 @@
 """Pallas TPU kernels for the phased-SSSP hot spots (validated in
-interpret mode on CPU; see ref.py for the pure-jnp oracles)."""
+interpret mode on CPU; see ref.py for the pure-jnp oracles). Execution
+policy — interpret vs compiled, tile sizes, scan fusion — resolves through
+``repro.kernels.config``."""
 from repro.kernels.ops import (
     crit_thresholds_batch,
+    gather_min_batch_sliced,
+    in_scan_relax_keys_batch,
     key_min_batch,
+    key_min_batch_any,
+    out_scan_keys_batch,
     relax_settled,
     relax_settled_batch,
+    relax_settled_batch_sliced,
     static_thresholds,
     static_thresholds_batch,
 )
 
 __all__ = [
     "crit_thresholds_batch",
+    "gather_min_batch_sliced",
+    "in_scan_relax_keys_batch",
     "key_min_batch",
+    "key_min_batch_any",
+    "out_scan_keys_batch",
     "relax_settled",
     "relax_settled_batch",
+    "relax_settled_batch_sliced",
     "static_thresholds",
     "static_thresholds_batch",
 ]

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import config as _kcfg
+
 INF = jnp.inf
 
 
@@ -47,9 +49,10 @@ def ell_key_min(
     ws: jax.Array,  # (n, D) f32, +inf padding
     *,
     block_rows: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Returns key (n,) f32 = row-min of gate[cols] + ws."""
+    interpret = _kcfg.resolve_interpret(interpret)
     n, d_pad = cols.shape
     rows_pad = -(-n // block_rows) * block_rows
     if rows_pad != n:
@@ -86,7 +89,7 @@ def ell_key_min_batch(
     ws: jax.Array,  # (n, D) f32
     *,
     block_rows: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Returns key (B, n) f32 = per-lane row-min of gate[b, cols] + ws.
 
@@ -94,6 +97,7 @@ def ell_key_min_batch(
     differs), but the adjacency tile is still loaded once per grid step for
     the whole batch — the same amortisation as ``ell_relax_batch``.
     """
+    interpret = _kcfg.resolve_interpret(interpret)
     b = gate.shape[0]
     n, d_pad = cols.shape
     rows_pad = -(-n // block_rows) * block_rows

@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import config as _kcfg
+
 INF = jnp.inf
 
 
@@ -58,9 +60,10 @@ def ell_relax(
     ws: jax.Array,  # (n, D) f32
     *,
     block_rows: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Returns upd (n,) f32 = row-min of dmask[cols] + ws."""
+    interpret = _kcfg.resolve_interpret(interpret)
     n, d_pad = cols.shape
     rows_pad = -(-n // block_rows) * block_rows
     if rows_pad != n:
@@ -97,9 +100,10 @@ def ell_relax_batch(
     ws: jax.Array,  # (n, D) f32
     *,
     block_rows: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Returns upd (B, n) f32 = per-row row-min of dmask[b, cols] + ws."""
+    interpret = _kcfg.resolve_interpret(interpret)
     b = dmask.shape[0]
     n, d_pad = cols.shape
     rows_pad = -(-n // block_rows) * block_rows

@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import config as _kcfg
+
 INF = jnp.inf
 _LANES = 128
 
@@ -95,7 +97,7 @@ def frontier_crit_lanes_batch(
     keys: jax.Array | None,  # (K, n) shared, (K, B, n) per-lane, or None (K=0)
     *,
     block: int = 2048,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Returns (mins (1+K, B) f32, fringe_count (B,) i32).
 
@@ -103,6 +105,7 @@ def frontier_crit_lanes_batch(
     OUT-family threshold ``min_F (d + keys[k])``. A plan with no OUT members
     passes ``keys=None`` and gets the 1-lane reduction.
     """
+    interpret = _kcfg.resolve_interpret(interpret)
     b, n = d.shape
     n_pad = -(-n // block) * block
     if n_pad != n:
@@ -153,7 +156,7 @@ def frontier_crit_lanes(
     keys: jax.Array | None,  # (K, n) or None
     *,
     block: int = 2048,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """1-D entry point: returns (mins (1+K,) f32, fringe_count i32 scalar)."""
     mins, cnt = frontier_crit_lanes_batch(
@@ -168,7 +171,7 @@ def frontier_crit(
     out_min: jax.Array,  # (n,) f32 static min outgoing weight (+inf if none)
     *,
     block: int = 2048,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Returns (min_fringe_d f32, l_out f32, fringe_count i32) scalars —
     the fixed INSTATIC|OUTSTATIC lane pair."""
@@ -184,7 +187,7 @@ def frontier_crit_batch(
     out_min: jax.Array,  # (n,) f32, shared by every batch row
     *,
     block: int = 2048,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Returns (min_fringe_d (B,) f32, l_out (B,) f32, fringe_count (B,) i32)."""
     mins, cnt = frontier_crit_lanes_batch(

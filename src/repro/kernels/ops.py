@@ -1,10 +1,26 @@
 """Jitted public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (the kernel body then runs as plain
-XLA/CPU for bit-exact validation) and False on TPU (compiled Mosaic).
+Execution policy (interpret-vs-compiled, tile sizes) is resolved by
+``repro.kernels.config``: ``interpret=None`` means "compiled Mosaic on TPU,
+interpret elsewhere, unless ``REPRO_KERNEL_MODE`` overrides", and
+``block_rows=None`` / ``block=None`` consult the tuning ledger before
+falling back to a VMEM-budget default. Explicit arguments always win.
+
+Every wrapper also accepts ``use_pallas``: the False path runs the ref.py
+oracle *through the same padding/masking code* as the kernel path, so the
+two can never drift apart bitwise — engines select the path, never pad
+themselves (this is THE one home of the sentinel/alignment convention).
+
+Adjacency layouts: wrappers taking an ``ell`` argument accept either the
+padded ``(cols, ws)`` pair (``to_ell_in``) or a degree-sliced
+``SlicedEll`` (``to_ell_in_sliced``) — sliced layouts run a one-launch
+variadic megascan under interpret (all buckets + the gather-based
+``merge_idx`` merge inside one kernel) or one tiled call per bucket on
+compiled backends (split heavy rows fold in the merge; f32 min is exact,
+so both layouts return bit-identical results).
 
 The production engines (``repro.core.static_engine`` stepper and everything
-built on it) consume only the batched 2-D entry points; the 1-D
+built on it) consume the batched 2-D entry points; the 1-D
 ``relax_settled``/``static_thresholds`` wrappers are retained as reference
 surfaces — ``tests/test_kernels.py`` pins the 2-D kernels row-for-row
 against them (DESIGN.md Sec. 5), so they must stay bit-consistent.
@@ -14,8 +30,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import config as kcfg
+from repro.kernels import ref as kref
 from repro.kernels.ell_key_min import ell_key_min, ell_key_min_batch
 from repro.kernels.ell_relax import ell_relax, ell_relax_batch
+from repro.kernels.ell_relax_keys import (
+    _merge_parts,
+    ell_gather_min_batch,
+    ell_keys_dep_batch,
+    ell_relax_keys_batch,
+    ell_sliced_gather_min_batch,
+    ell_sliced_keys_dep_batch,
+    ell_sliced_relax_keys_batch,
+)
 from repro.kernels.frontier_crit import (
     frontier_crit,
     frontier_crit_batch,
@@ -25,22 +52,31 @@ from repro.kernels.frontier_crit import (
 INF = jnp.inf
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def _is_sliced(ell) -> bool:
+    """Duck-typed layout test (SlicedEll is a NamedTuple with ``slices``)."""
+    return hasattr(ell, "slices")
 
 
 def pad_lane_batch(x: jax.Array, fill=INF) -> jax.Array:
     """(B, n) -> (B, lane_pad) with ``fill`` beyond column n.
 
-    THE sentinel/alignment convention of every ELL gather kernel: one extra
-    slot for the sentinel neighbour id (index n) plus rounding to the
-    128-lane multiple, all carrying a min-neutral fill. Kernel-path wrappers
-    and the engines' ref-path twins must share this helper so the two paths
-    can never drift apart bitwise.
+    THE sentinel/alignment convention of every single-purpose ELL gather
+    kernel: one extra slot for the sentinel neighbour id (index n) plus
+    rounding to the 128-lane multiple, all carrying a min-neutral fill.
+    Kernel and ref paths share this helper *inside* the wrappers below, so
+    the two paths can never drift apart bitwise. (The fused megakernels own
+    a wider padding — their gather space must also cover the row tiles —
+    inside ``ell_relax_keys.py``.)
     """
     b, n = x.shape
     lane_pad = -(-(n + 1) // 128) * 128
     return jnp.full((b, lane_pad), fill, jnp.float32).at[:, :n].set(x)
+
+
+# The one slice->vertex merge implementation (concat + inf sentinel +
+# take(merge_idx) + min) is ell_relax_keys._merge_parts; the sliced kernel
+# bodies and this host-side path must share it so the merge convention can
+# never diverge between them.
 
 
 def relax_settled(
@@ -49,7 +85,7 @@ def relax_settled(
     ell_cols: jax.Array,  # (n, D) int32 incoming ELL (sentinel id = n)
     ell_ws: jax.Array,  # (n, D) f32
     *,
-    block_rows: int = 256,
+    block_rows: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Candidate-update vector: upd[v] = min over in-edges from settled sources.
@@ -57,9 +93,10 @@ def relax_settled(
     The sentinel slot (index n) and any alignment padding carry +inf, so
     padded ELL entries are neutral.
     """
-    if interpret is None:
-        interpret = _default_interpret()
+    interpret = kcfg.resolve_interpret(interpret)
     n = d.shape[0]
+    if block_rows is None:
+        block_rows = kcfg.resolve_block_rows("relax", n, ell_cols.shape[1])
     lane_pad = -(-(n + 1) // 128) * 128
     dmask = jnp.full((lane_pad,), INF, jnp.float32)
     dmask = dmask.at[:n].set(jnp.where(settle_mask, d, INF))
@@ -71,12 +108,13 @@ def static_thresholds(
     status: jax.Array,
     out_min_static: jax.Array,
     *,
-    block: int = 2048,
+    block: int | None = None,
     interpret: bool | None = None,
 ):
     """(min_F d, L_out, |F|) for the INSTATIC/OUTSTATIC criteria, fused."""
-    if interpret is None:
-        interpret = _default_interpret()
+    interpret = kcfg.resolve_interpret(interpret)
+    if block is None:
+        block = kcfg.resolve_block(d.shape[0])
     return frontier_crit(d, status, out_min_static, block=block, interpret=interpret)
 
 
@@ -86,16 +124,76 @@ def relax_settled_batch(
     ell_cols: jax.Array,  # (n, D) int32 incoming ELL shared by the batch
     ell_ws: jax.Array,  # (n, D) f32
     *,
-    block_rows: int = 256,
+    block_rows: int | None = None,
     interpret: bool | None = None,
+    use_pallas: bool = True,
 ) -> jax.Array:
     """Batched candidate updates (B, n); one adjacency load serves all rows."""
-    if interpret is None:
-        interpret = _default_interpret()
+    interpret = kcfg.resolve_interpret(interpret)
+    b, n = d.shape
     dmask = pad_lane_batch(jnp.where(settle_mask, d, INF))
+    if not use_pallas:
+        return kref.ell_relax_batch_ref(dmask, ell_cols, ell_ws)
+    if block_rows is None:
+        block_rows = kcfg.resolve_block_rows("relax", n, ell_cols.shape[1], b)
     return ell_relax_batch(
         dmask, ell_cols, ell_ws, block_rows=block_rows, interpret=interpret
     )
+
+
+def relax_settled_batch_sliced(
+    d: jax.Array,  # (B, n)
+    settle_mask: jax.Array,  # (B, n)
+    sliced,  # SlicedEll over the incoming adjacency
+    *,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Sliced-layout twin of :func:`relax_settled_batch` (bit-identical)."""
+    dmask = jnp.where(settle_mask, d, INF)
+    return gather_min_batch_sliced(
+        dmask[None], sliced, block_rows=block_rows, interpret=interpret,
+        use_pallas=use_pallas,
+    )[0]
+
+
+def gather_min_batch_sliced(
+    vecs: jax.Array,  # (V, B, n) f32 gather vectors (unpadded)
+    sliced,  # SlicedEll
+    *,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """(V, B, n) per-vector row-mins over a degree-sliced adjacency.
+
+    Interpret runs the one-launch megascan (every bucket + the gather-merge
+    inside a single kernel — launch emulation dominates per-bucket calls
+    there); compiled backends run one tiled multi-vector call per bucket and
+    merge outside. Bit-identical either way.
+    """
+    interpret = kcfg.resolve_interpret(interpret)
+    if use_pallas and interpret:
+        return ell_sliced_gather_min_batch(vecs, sliced, interpret=True)
+    v, b, n = vecs.shape
+    parts = []
+    for s in sliced.slices:
+        if s.rows.shape[0] == 0:
+            continue  # zero rows: contributes nothing to the concat order
+        if not use_pallas:
+            parts.append(kref.ell_gather_min_batch_ref(vecs, s.cols, s.ws))
+            continue
+        br = block_rows
+        if br is None:
+            br = kcfg.resolve_block_rows(
+                "gather_sliced", n, s.cols.shape[1], b, vecs=v, outs=v,
+                n_rows=s.rows.shape[0],
+            )
+        parts.append(ell_gather_min_batch(
+            vecs, s.cols, s.ws, block_rows=br, interpret=interpret
+        ))
+    return _merge_parts(parts, sliced.merge_idx, (v, b))
 
 
 def static_thresholds_batch(
@@ -103,12 +201,13 @@ def static_thresholds_batch(
     status: jax.Array,  # (B, n)
     out_min_static: jax.Array,  # (n,) shared
     *,
-    block: int = 2048,
+    block: int | None = None,
     interpret: bool | None = None,
 ):
     """Per-row (min_F d, L_out, |F|) — each (B,) — in one fused pass."""
-    if interpret is None:
-        interpret = _default_interpret()
+    interpret = kcfg.resolve_interpret(interpret)
+    if block is None:
+        block = kcfg.resolve_block(d.shape[1])
     return frontier_crit_batch(
         d, status, out_min_static, block=block, interpret=interpret
     )
@@ -119,16 +218,20 @@ def crit_thresholds_batch(
     status: jax.Array,  # (B, n)
     keys: jax.Array | None,  # (K, n) shared | (K, B, n) per-lane | None
     *,
-    block: int = 2048,
+    block: int | None = None,
     interpret: bool | None = None,
+    use_pallas: bool = True,
 ):
     """Plan-lane thresholds: (mins (1+K, B), |F| (B,)) in one fused pass.
 
     The criterion-plan generalisation of :func:`static_thresholds_batch`:
     ``mins[0]`` is min_F d, ``mins[1+k]`` the OUT lane for ``keys[k]``.
     """
-    if interpret is None:
-        interpret = _default_interpret()
+    if not use_pallas:
+        return kref.frontier_crit_lanes_batch_ref(d, status, keys)
+    interpret = kcfg.resolve_interpret(interpret)
+    if block is None:
+        block = kcfg.resolve_block(d.shape[1])
     return frontier_crit_lanes_batch(d, status, keys, block=block,
                                      interpret=interpret)
 
@@ -138,18 +241,195 @@ def key_min_batch(
     ell_cols: jax.Array,  # (n, D) int32 adjacency (incoming OR outgoing view)
     ell_ws: jax.Array,  # (n, D) f32
     *,
-    block_rows: int = 256,
+    block_rows: int | None = None,
     interpret: bool | None = None,
+    use_pallas: bool = True,
 ) -> jax.Array:
     """Dynamic criterion key (B, n): per-lane min of gate[neighbour] + w.
 
     Pads the gate to the lane multiple with +inf so the sentinel slot
     (index n) and alignment padding are neutral, mirroring
-    :func:`relax_settled_batch`'s masking convention.
+    :func:`relax_settled_batch`'s masking convention (both paths).
     """
-    if interpret is None:
-        interpret = _default_interpret()
+    interpret = kcfg.resolve_interpret(interpret)
+    padded = pad_lane_batch(gate)
+    if not use_pallas:
+        return kref.ell_key_min_batch_ref(padded, ell_cols, ell_ws)
+    if block_rows is None:
+        block_rows = kcfg.resolve_block_rows(
+            "key_min", gate.shape[1], ell_cols.shape[1], gate.shape[0]
+        )
     return ell_key_min_batch(
-        pad_lane_batch(gate), ell_cols, ell_ws, block_rows=block_rows,
+        padded, ell_cols, ell_ws, block_rows=block_rows, interpret=interpret
+    )
+
+
+def key_min_batch_any(gate, ell, **kw) -> jax.Array:
+    """:func:`key_min_batch` over either adjacency layout."""
+    if _is_sliced(ell):
+        return gather_min_batch_sliced(gate[None], ell, **kw)[0]
+    return key_min_batch(gate, ell[0], ell[1], **kw)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-scan entry points (DESIGN.md Sec. 9)
+# ---------------------------------------------------------------------------
+
+
+def _gather_padded(vecs, cols, ws, kind, block_rows, interpret):
+    """One single-sweep multi-vector gather over a padded ELL."""
+    v, b, _ = vecs.shape
+    if block_rows is None:
+        block_rows = kcfg.resolve_block_rows(
+            kind, vecs.shape[2], cols.shape[1], b, vecs=v, outs=v,
+            n_rows=cols.shape[0],
+        )
+    return ell_gather_min_batch(vecs, cols, ws, block_rows=block_rows,
+                                interpret=interpret)
+
+
+def _use_fused(n: int, n_rows: int, block_rows: int, interpret: bool) -> bool:
+    """Whether a dependent two-reduction scan runs as ONE fused launch.
+
+    Policy (``config.scan_fusion``): ``fused``/``split`` force it; ``auto``
+    fuses on compiled backends (launches cost real time there) and, under
+    interpret, only when the scan is a single tile — the one-tile megakernel
+    body has no predication/dynamic-store machinery, which is what makes
+    fusion win under emulation too (BENCH_fused.json measures all three).
+    """
+    mode = kcfg.scan_fusion()
+    if mode != "auto":
+        return mode == "fused"
+    if not interpret:
+        return True
+    return max(n_rows, n + 1) <= block_rows
+
+
+def in_scan_relax_keys_batch(
+    d: jax.Array,  # (B, n) f32 tentative distances
+    settle_mask: jax.Array,  # (B, n) bool — vertices settled this phase
+    gate_parts,  # tuple of (ga, gb, gc) triples, one per in-scan key
+    ell,  # (cols, ws) padded ELL or SlicedEll — INCOMING adjacency
+    *,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+):
+    """The fused in-scan: ``(upd (B, n), keys (K, B, n))``.
+
+    ``upd`` is this phase's relax update; ``keys[k]`` is the k-th in-side
+    dynamic key evaluated on the *post-phase* status via the gate
+    ``min(ga, gb, gc + fin(upd))`` (``criteria.in_scan_gate_parts``). On the
+    padded layout the scan shape follows ``config.scan_fusion()``: the
+    two-sweep megakernel (one launch, shared tile loads — the compiled-mode
+    shape) or the split decomposition (relax gather -> XLA gate -> key
+    gather; what the interpret machinery prefers). On the sliced layout the
+    cross-slice ``upd`` dependency forces the split shape per bucket. Every
+    combination is bitwise identical.
+    """
+    b, n = d.shape
+    dmask = jnp.where(settle_mask, d, INF)
+    ga = jnp.stack([p[0] for p in gate_parts])
+    gb = jnp.stack([p[1] for p in gate_parts])
+    gc = jnp.stack([p[2] for p in gate_parts])
+    if _is_sliced(ell):
+        if use_pallas and kcfg.resolve_interpret(interpret):
+            return ell_sliced_relax_keys_batch(dmask, ga, gb, gc, ell,
+                                               interpret=True)
+        upd = gather_min_batch_sliced(
+            dmask[None], ell, block_rows=block_rows, interpret=interpret,
+            use_pallas=use_pallas,
+        )[0]
+        fin = jnp.where(upd < INF, 0.0, INF)
+        gates = jnp.minimum(ga, jnp.minimum(gb, gc + fin[None]))
+        keys = gather_min_batch_sliced(
+            gates, ell, block_rows=block_rows, interpret=interpret,
+            use_pallas=use_pallas,
+        )
+        return upd, keys
+    cols, ws = ell
+    if not use_pallas:
+        return kref.ell_relax_keys_batch_ref(dmask, ga, gb, gc, cols, ws)
+    interpret = kcfg.resolve_interpret(interpret)
+    if block_rows is None:
+        block_rows = kcfg.resolve_block_rows(
+            "relax_keys", n, cols.shape[1], b,
+            vecs=1 + 3 * len(gate_parts), outs=1 + len(gate_parts),
+            n_rows=cols.shape[0],
+        )
+    if not _use_fused(n, cols.shape[0], block_rows, interpret):
+        upd = _gather_padded(dmask[None], cols, ws, "relax", block_rows,
+                             interpret)[0]
+        fin = jnp.where(upd < INF, 0.0, INF)
+        gates = jnp.minimum(ga, jnp.minimum(gb, gc + fin[None]))
+        return upd, _gather_padded(gates, cols, ws, "key_min", block_rows,
+                                   interpret)
+    return ell_relax_keys_batch(
+        dmask, ga, gb, gc, cols, ws, block_rows=block_rows,
         interpret=interpret,
     )
+
+
+def out_scan_keys_batch(
+    gates: jax.Array,  # (K0, B, n) f32 independent out-side key gates
+    dep_parts,  # (dga, dgb, dep_idx) for the dependent key, or None
+    ell,  # (cols, ws) padded ELL or SlicedEll — OUTGOING adjacency
+    *,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """The fused out-scan: keys ``(K0 [+1], B, n)``.
+
+    All independent out-side keys ride one multi-vector scan; a dependent
+    key (``out_full``) adds a second sweep inside the same launch on the
+    padded layout, or one more bucket round on the sliced layout.
+    """
+    k0, b, n = gates.shape
+    sliced = _is_sliced(ell)
+    if dep_parts is None:
+        if sliced:
+            return gather_min_batch_sliced(
+                gates, ell, block_rows=block_rows, interpret=interpret,
+                use_pallas=use_pallas,
+            )
+        cols, ws = ell
+        if not use_pallas:
+            return kref.ell_gather_min_batch_ref(gates, cols, ws)
+        interpret = kcfg.resolve_interpret(interpret)
+        return _gather_padded(gates, cols, ws, "out_scan", block_rows,
+                              interpret)
+    dga, dgb, dep_idx = dep_parts
+    if sliced and use_pallas and kcfg.resolve_interpret(interpret):
+        return ell_sliced_keys_dep_batch(gates, dga, dgb, ell,
+                                         dep_idx=dep_idx, interpret=True)
+    if not sliced and not use_pallas:
+        cols, ws = ell
+        return kref.ell_keys_dep_batch_ref(gates, dga, dgb, dep_idx, cols, ws)
+    if not sliced:
+        interpret = kcfg.resolve_interpret(interpret)
+        cols, ws = ell
+        if block_rows is None:
+            block_rows = kcfg.resolve_block_rows(
+                "out_scan_dep", n, cols.shape[1], b, vecs=k0 + 2,
+                outs=k0 + 1, n_rows=cols.shape[0],
+            )
+        if _use_fused(n, cols.shape[0], block_rows, interpret):
+            return ell_keys_dep_batch(
+                gates, dga, dgb, cols, ws, dep_idx=dep_idx,
+                block_rows=block_rows, interpret=interpret,
+            )
+
+    def scan(vs, kind):
+        if sliced:
+            return gather_min_batch_sliced(
+                vs, ell, block_rows=block_rows, interpret=interpret,
+                use_pallas=use_pallas,
+            )
+        return _gather_padded(vs, ell[0], ell[1], kind, block_rows,
+                              kcfg.resolve_interpret(interpret))
+
+    keys0 = scan(gates, "out_scan")
+    gate = jnp.minimum(dga, dgb + keys0[dep_idx])
+    dep_key = scan(gate[None], "key_min")
+    return jnp.concatenate([keys0, dep_key], axis=0)

@@ -49,6 +49,67 @@ def ell_key_min_batch_ref(gate: jax.Array, cols: jax.Array, ws: jax.Array) -> ja
     return jnp.min(jnp.take(gate, cols, axis=1) + ws[None], axis=-1)
 
 
+def _pad_idx_ref(vec: jax.Array, idx_pad: int) -> jax.Array:
+    """THE index-space padding convention of the fused kernels, shared so
+    oracle and kernel paths cannot drift (ell_relax_keys owns it)."""
+    from repro.kernels.ell_relax_keys import _pad_idx
+
+    return _pad_idx(vec, idx_pad) if idx_pad > vec.shape[-1] else vec
+
+
+def ell_gather_min_batch_ref(vecs: jax.Array, cols: jax.Array,
+                             ws: jax.Array) -> jax.Array:
+    """out[v, b, r] = min_j vecs[v, b, cols[r, j]] + ws[r, j] — the composed
+    relax/key-min traffic of the single-sweep multi-vector megakernel.
+
+    Unlike the per-kernel refs above, the megakernel oracles take the
+    UNPADDED (..., n) gather vectors (matching their kernel wrappers, which
+    own the coupled row/index padding) and pad here — the sentinel id ``n``
+    must stay in bounds or ``jnp.take``'s clip mode would silently gather a
+    real vertex.
+    """
+    vecs = _pad_idx_ref(vecs, vecs.shape[-1] + 1)
+    return jnp.min(jnp.take(vecs, cols, axis=2) + ws[None, None], axis=-1)
+
+
+def ell_relax_keys_batch_ref(dmask, ga, gb, gc, cols, ws):
+    """Fused in-scan oracle: (upd (B, n), keys (K, B, n)).
+
+    ``upd`` is ``ell_relax_batch_ref`` on ``dmask``; ``keys[k]`` is
+    ``ell_key_min_batch_ref`` on the post-phase gate
+    ``min(ga[k], gb[k], gc[k] + fin)`` where ``fin`` is 0 on vertices whose
+    update is finite (they join the fringe) and +inf elsewhere — including
+    every padding/sentinel slot, whose upd is +inf by construction.
+    Inputs are unpadded (B, n) / (K, B, n), as for the kernel wrapper.
+    """
+    n_rows = cols.shape[0]
+    idx_pad = dmask.shape[-1] + 1
+    dmask, ga, gb, gc = (_pad_idx_ref(x, idx_pad) for x in (dmask, ga, gb, gc))
+    upd = jnp.min(jnp.take(dmask, cols, axis=1) + ws[None], axis=-1)  # (B, n)
+    fin = jnp.full(dmask.shape, INF, jnp.float32).at[:, :n_rows].set(
+        jnp.where(upd < INF, 0.0, INF)
+    )
+    gate = jnp.minimum(ga, jnp.minimum(gb, gc + fin[None]))
+    keys = jnp.min(jnp.take(gate, cols, axis=2) + ws[None, None], axis=-1)
+    return upd, keys
+
+
+def ell_keys_dep_batch_ref(gates, dga, dgb, dep_idx, cols, ws):
+    """Fused out-scan oracle: keys (K0 + 1, B, n); row K0 is the dependent
+    key reduced through ``min(dga, dgb + keys[dep_idx])``. Inputs unpadded."""
+    n_rows = cols.shape[0]
+    idx_pad = gates.shape[-1] + 1
+    gates = _pad_idx_ref(gates, idx_pad)
+    keys0 = jnp.min(jnp.take(gates, cols, axis=2) + ws[None, None], axis=-1)
+    dep = jnp.full((gates.shape[1], idx_pad), INF, jnp.float32).at[
+        :, :n_rows
+    ].set(keys0[dep_idx])
+    gate = jnp.minimum(_pad_idx_ref(dga, idx_pad),
+                       _pad_idx_ref(dgb, idx_pad) + dep)
+    dep_key = jnp.min(jnp.take(gate, cols, axis=1) + ws[None], axis=-1)
+    return jnp.concatenate([keys0, dep_key[None]], axis=0)
+
+
 def frontier_crit_lanes_batch_ref(d: jax.Array, status: jax.Array,
                                   keys: jax.Array | None):
     """Per-row plan-lane thresholds: (mins (1+K, B), |F| (B,)).

@@ -28,7 +28,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import criteria as C
-from repro.core.graph import Graph, to_ell_in, to_ell_out
+from repro.core.graph import (
+    Graph,
+    to_ell_in,
+    to_ell_in_sliced,
+    to_ell_out,
+    to_ell_out_sliced,
+)
 from repro.core.static_engine import (
     DEFAULT_CRITERION,
     EMPTY_LANE,
@@ -106,14 +112,31 @@ class EngineBackend(Protocol):
 
 
 class StaticBackend:
-    """Adapter over the single-device static-engine stepper."""
+    """Adapter over the single-device static-engine stepper.
+
+    ``layout`` selects the resident adjacency views ("padded" ELL or the
+    degree-sliced "sliced" layout — bit-identical results, the sliced one
+    wins on skewed degree distributions); an explicit ``ell`` overrides it.
+    Execution mode / tile sizes resolve through ``repro.kernels.config``
+    (env overrides + tuning ledger), so a server process tuned at startup
+    serves every later query with the tuned configuration.
+    """
 
     def __init__(self, g: Graph, ell=None, use_pallas: bool = True,
-                 criterion: str = DEFAULT_CRITERION):
+                 criterion: str = DEFAULT_CRITERION, layout: str = "padded"):
         plan = _serving_plan(criterion)
+        if layout not in ("padded", "sliced"):
+            raise ValueError(
+                f"layout must be 'padded' or 'sliced'; got {layout!r}"
+            )
+        sliced = layout == "sliced"
         self.g = g
-        self.ell = to_ell_in(g) if ell is None else ell
-        self.ell_out = to_ell_out(g) if plan.needs_out_adjacency else None
+        if ell is None:
+            ell = to_ell_in_sliced(g) if sliced else to_ell_in(g)
+        self.ell = ell
+        self.ell_out = None
+        if plan.needs_out_adjacency:
+            self.ell_out = to_ell_out_sliced(g) if sliced else to_ell_out(g)
         self.use_pallas = bool(use_pallas)
         self.criterion = plan.criterion
 

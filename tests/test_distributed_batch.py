@@ -125,6 +125,19 @@ for i, s in enumerate(srcs):
     assert int(res_c.relax_edges[i]) == int(solo_c.relax_edges), (crit, int(s))
     # the paper's point, inside the mesh engine: stronger criterion, fewer phases
     assert int(res_c.phases[i]) <= int(res.phases[i]), (crit, int(s))
+
+# --- 6. sharded settled-per-phase trace ring (PR 5 satellite): parity with
+# the reference engine's trace, and the honesty rule (trace off -> None)
+from repro.core.phased import run_phased
+res_t = run_sharded_batch(g, mesh, AXES, srcs, criterion="in|out",
+                          trace_len=g.n + 1)
+for i, s in enumerate(srcs):
+    gen = run_phased(g, int(s), "in|out", trace_len=g.n + 1)
+    p = int(gen.phases)
+    np.testing.assert_array_equal(
+        np.asarray(res_t.settled_per_phase[i])[:p],
+        np.asarray(gen.settled_per_phase)[:p], err_msg=f"trace:{s}")
+assert res_c.settled_per_phase is None  # trace_len=1 reads as "not traced"
 print("DISTRIBUTED-BATCH-PASS")
 """
 

@@ -1,0 +1,147 @@
+"""Degree-sliced ELL acceptance: any bucket boundaries / split thresholds
+produce bit-identical engine results to the padded layout (f32 min is exact,
+so slicing is a pure layout decision), plus the builders' structural
+invariants and the memoisation satellites."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import run_phased
+from repro.core.graph import (
+    default_slice_boundaries,
+    from_coo,
+    out_degrees,
+    to_ell_in,
+    to_ell_in_sliced,
+    to_ell_out_sliced,
+)
+from repro.core.static_engine import (
+    harvest,
+    init_batch_state,
+    lanes_active,
+    reset_lanes,
+    run_phased_static_batch,
+    step_batch,
+)
+from repro.graphs import grid_road, kronecker, uniform_gnp
+
+# the "property" sweep: bucket boundaries x split thresholds, including
+# degenerate single-bucket and aggressive row-splitting configurations
+LAYOUT_CASES = [
+    (None, None),  # auto boundaries from the degree distribution
+    ((8,), 8),  # single narrow bucket: every hub row splits
+    ((8, 16), 16),
+    ((8, 64), None),
+    ((24,), 48),  # split wider than the bucket
+]
+
+
+@pytest.mark.parametrize("boundaries,split", LAYOUT_CASES)
+@pytest.mark.parametrize("crit", ["instatic|outstatic", "in|out"])
+def test_sliced_layouts_bit_identical_to_padded(boundaries, split, crit):
+    g = kronecker(7, seed=21)  # skewed: splits actually happen
+    srcs = np.asarray([0, 5, g.n - 1], np.int32)
+    want = run_phased_static_batch(g, srcs, criterion=crit)
+    ell = to_ell_in_sliced(g, boundaries=boundaries, split=split)
+    ell_out = to_ell_out_sliced(g, boundaries=boundaries, split=split)
+    got = run_phased_static_batch(g, srcs, criterion=crit, ell=ell,
+                                  ell_out=ell_out)
+    np.testing.assert_array_equal(np.asarray(got.dist), np.asarray(want.dist))
+    np.testing.assert_array_equal(np.asarray(got.status), np.asarray(want.status))
+    np.testing.assert_array_equal(np.asarray(got.phases), np.asarray(want.phases))
+    np.testing.assert_array_equal(np.asarray(got.sum_fringe),
+                                  np.asarray(want.sum_fringe))
+    np.testing.assert_array_equal(np.asarray(got.relax_edges),
+                                  np.asarray(want.relax_edges))
+
+
+def test_sliced_stepper_chunking_and_reset():
+    """The stepper contract survives the sliced layout: chunked stepping,
+    early exit, and lane resets stay invisible, and a reset lane re-primes
+    its carried in-side keys (keys_valid flag) correctly."""
+    g = grid_road(11, 9, seed=55)
+    ell = to_ell_in_sliced(g)
+    ell_out = to_ell_out_sliced(g)
+    srcs = np.asarray([0, g.n - 1, 17], np.int32)
+    full = run_phased_static_batch(g, srcs, criterion="in|out")
+    state = init_batch_state(g, srcs, criterion="in|out")
+    assert bool(state.keys_valid) is False  # admission invalidates carries
+    while lanes_active(state).any():
+        state = step_batch(g, state, 3, ell=ell, ell_out=ell_out,
+                           stop_on_lane_finish=True)
+    assert bool(state.keys_valid) is True
+    res = harvest(state)
+    np.testing.assert_array_equal(np.asarray(res.dist), np.asarray(full.dist))
+    np.testing.assert_array_equal(np.asarray(res.phases), np.asarray(full.phases))
+    state = reset_lanes(state, np.asarray([-2, 40, -1], np.int32))
+    assert bool(state.keys_valid) is False  # reset touched a lane
+    while lanes_active(state).any():
+        state = step_batch(g, state, 7, ell=ell, ell_out=ell_out)
+    after = harvest(state)
+    np.testing.assert_array_equal(np.asarray(after.dist[0]),
+                                  np.asarray(full.dist[0]))
+    gen = run_phased(g, 40, "in|out")
+    np.testing.assert_array_equal(np.asarray(after.dist[1]), np.asarray(gen.dist))
+    assert int(after.phases[1]) == int(gen.phases)
+    assert np.isinf(np.asarray(after.dist[2])).all()
+
+
+def test_static_plan_keeps_keys_valid_none():
+    g = uniform_gnp(64, 0.1, seed=1)
+    state = init_batch_state(g, [0])
+    assert state.keys_valid is None and state.crit_keys is None
+
+
+def test_sliced_builder_structure():
+    g = kronecker(7, seed=21)
+    cols, _ = to_ell_in(g)
+    se = to_ell_in_sliced(g, boundaries=(8,), split=8)
+    deg = np.zeros(g.n, np.int64)
+    dst, w = np.asarray(g.dst), np.asarray(g.w)
+    np.add.at(deg, dst[np.isfinite(w)], 1)
+    rows = np.concatenate([np.asarray(s.rows) for s in se.slices])
+    # every positive-degree vertex appears; zero-degree vertices never do
+    assert set(rows.tolist()) == set(np.nonzero(deg)[0].tolist())
+    # split bookkeeping: vertex v occurs ceil(deg/8) times, slot counts match
+    occ = np.zeros(g.n, np.int64)
+    np.add.at(occ, rows, 1)
+    np.testing.assert_array_equal(occ[deg > 0], -(-deg[deg > 0] // 8))
+    # real (finite) slots equal the real edge count, bucket-wide padding only
+    finite = sum(int(np.isfinite(np.asarray(s.ws)).sum()) for s in se.slices)
+    assert finite == int(np.isfinite(w).sum())
+    # hub graphs shrink: sliced slots well under padded n * D_max
+    assert se.padded_slots < g.n * cols.shape[1]
+    # memoisation: same params hit the cache, new params rebuild
+    assert to_ell_in_sliced(g, boundaries=(8,), split=8) is se
+    assert to_ell_in_sliced(g, boundaries=(8, 16), split=16) is not se
+    with pytest.raises(ValueError, match="split"):
+        to_ell_in_sliced(g, boundaries=(8, 64), split=8)
+
+
+def test_default_boundaries_and_edge_cases():
+    assert default_slice_boundaries(np.array([], np.int64)) == (8,)
+    assert default_slice_boundaries(np.array([0, 0, 0], np.int64)) == (8,)
+    bs = default_slice_boundaries(np.array([1] * 95 + [500] * 5, np.int64))
+    assert bs[0] == 8 and len(bs) <= 4
+    # edgeless graph still yields a well-formed (empty) slice
+    g = from_coo(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                 np.zeros(0, np.float32), n=5)
+    se = to_ell_in_sliced(g)
+    assert len(se.slices) == 1 and se.slices[0].rows.shape == (0,)
+    res = run_phased_static_batch(g, [2], ell=se)
+    assert np.isinf(np.asarray(res.dist)[0, :2]).all()
+    assert float(res.dist[0, 2]) == 0.0
+
+
+def test_out_degrees_memoised():
+    g = uniform_gnp(120, 0.05, seed=3)
+    deg = out_degrees(g)
+    assert out_degrees(g) is deg  # instance cache hit
+    src, w = np.asarray(g.src), np.asarray(g.w)
+    want = np.zeros(g.n, np.int32)
+    np.add.at(want, src[np.isfinite(w)], 1)
+    np.testing.assert_array_equal(np.asarray(deg), want)
+    # the stepper state carries the memoised vector's values (init no longer
+    # recomputes a segment-sum; jit still copies the operand into the state)
+    state = init_batch_state(g, [0, 7])
+    np.testing.assert_array_equal(np.asarray(state.out_deg), want)
