@@ -47,10 +47,12 @@ def _run_fresh(full: bool = False, n_seeds: int = 5, out_json: str | None = None
             ys, ns = [], []
             for g in grid:
                 if family == "uniform":
-                    mk = lambda s, n=g: uniform_gnp(n, 10.0 / n, seed=s, pad_to=bucket_edges(10 * n))
+                    mk = lambda s, n=g: uniform_gnp(
+                        n, 10.0 / n, seed=s, pad_to=bucket_edges(10 * n))
                     n = g
                 else:
-                    mk = lambda s, k=g: kronecker(k, seed=s, pad_to=bucket_edges(int(2.5 ** k)))
+                    mk = lambda s, k=g: kronecker(
+                        k, seed=s, pad_to=bucket_edges(int(2.5 ** k)))
                     n = 2 ** g
                 _, sf = mean_phases(mk, crit, seeds)
                 ys.append(sf)

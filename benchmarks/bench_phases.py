@@ -27,7 +27,8 @@ def run(full: bool = False, n_seeds: int = 5, out_json: str | None = None):
     for crit in CRITERIA:
         ys, sfs = [], []
         for n in uniform_ns:
-            ph, sf = mean_phases(lambda s, n=n: uniform_gnp(n, 10.0 / n, seed=s, pad_to=bucket_edges(10 * n)),
+            ph, sf = mean_phases(lambda s, n=n: uniform_gnp(
+                n, 10.0 / n, seed=s, pad_to=bucket_edges(10 * n)),
                                 crit, seeds)
             ys.append(ph)
             sfs.append(sf)
@@ -44,7 +45,8 @@ def run(full: bool = False, n_seeds: int = 5, out_json: str | None = None):
     for crit in CRITERIA:
         ys, ns, sfs = [], [], []
         for k in kron_ks:
-            ph, sf = mean_phases(lambda s, k=k: kronecker(k, seed=s, pad_to=bucket_edges(int(2.5 ** k))), crit, seeds)
+            ph, sf = mean_phases(lambda s, k=k: kronecker(
+                k, seed=s, pad_to=bucket_edges(int(2.5 ** k))), crit, seeds)
             ys.append(ph)
             ns.append(2 ** k)
             sfs.append(sf)

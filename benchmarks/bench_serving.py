@@ -165,7 +165,8 @@ def run(n: int = 1225, queries: int = 48, lanes: int = 8,
     print(f"{'':>18} {'qps':>8} {'p50 lat':>9} {'p99 lat':>9} {'trips':>6}")
     for name, r in (("static", stat), ("continuous", eng),
                     ("continuous+cache", cont)):
-        print(f"{name:>18} {r['throughput_qps']:>8.2f} {r['latency_p50_s']*1e3:>8.0f}ms "
+        print(f"{name:>18} {r['throughput_qps']:>8.2f} "
+              f"{r['latency_p50_s']*1e3:>8.0f}ms "
               f"{r['latency_p99_s']*1e3:>8.0f}ms {r['engine_trips']:>6}")
     print(f"continuous/static qps: {speedup_engine:.2f}x scheduling only, "
           f"{speedup:.2f}x with cache "

@@ -54,7 +54,8 @@ def bench_graph(name, g, out):
             "dijkstra_time_s": t_seq, "speedup_vs_dijkstra": t_seq / t,
             "phases": int(r.phases), "correct": bool(ok),
         })
-        print(f"speedup,{name},{label},{t*1e3:.1f}ms,x{t_seq/t:.2f},phases={int(r.phases)},ok={ok}")
+        print(f"speedup,{name},{label},{t*1e3:.1f}ms,x{t_seq/t:.2f},"
+              f"phases={int(r.phases)},ok={ok}")
     out.extend(rows)
 
 

@@ -72,6 +72,7 @@ def timed(fn, *args, repeats=3, **kw):
 FAMILIES = {
     "uniform": lambda n: (lambda seed: uniform_gnp(n, 10.0 / n, seed=seed)),
     "kronecker": lambda k: (lambda seed: kronecker(k, seed=seed)),
-    "grid": lambda n: (lambda seed: grid_road(int(np.sqrt(n)), int(np.sqrt(n)), seed=seed)),
+    "grid": lambda n: (
+        lambda seed: grid_road(int(np.sqrt(n)), int(np.sqrt(n)), seed=seed)),
     "web": lambda n: (lambda seed: webgraph(n, 8, seed=seed)),
 }

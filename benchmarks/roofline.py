@@ -32,9 +32,7 @@ import glob
 import json
 import os
 
-import numpy as np
-
-from repro.configs import ALIASES, get_config
+from repro.configs import get_config
 from repro.configs.base import SHAPES, ModelConfig
 
 PEAK_FLOPS = 197e12

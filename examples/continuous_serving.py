@@ -27,7 +27,8 @@ from repro.serving import ContinuousBatcher, DistCache
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=2500, help="~vertex count (grid side is sqrt)")
+    ap.add_argument("--n", type=int, default=2500,
+                    help="~vertex count (grid side is sqrt)")
     ap.add_argument("--lanes", type=int, default=8)
     ap.add_argument("--queries", type=int, default=48)
     ap.add_argument("--phases-per-step", type=int, default=32)

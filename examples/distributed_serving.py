@@ -36,7 +36,8 @@ from repro.serving import ContinuousBatcher, DistCache, ShardedBackend
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=400, help="~vertex count (grid side is sqrt)")
+    ap.add_argument("--n", type=int, default=400,
+                    help="~vertex count (grid side is sqrt)")
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--queries", type=int, default=16)
     ap.add_argument("--phases-per-step", type=int, default=8)

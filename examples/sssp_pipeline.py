@@ -48,8 +48,10 @@ def main():
                 d[fin], ref[fin], rtol=1e-4)
 
         for label, fn in [
-            ("phased INSTATIC|OUTSTATIC", lambda: run_phased(g, 0, "instatic|outstatic")),
-            ("phased static (pallas kernels)", lambda: run_phased_static(g, 0, ell=ell)),
+            ("phased INSTATIC|OUTSTATIC",
+             lambda: run_phased(g, 0, "instatic|outstatic")),
+            ("phased static (pallas kernels)",
+             lambda: run_phased_static(g, 0, ell=ell)),
             ("phased IN|OUT (strong)", lambda: run_phased(g, 0, "in|out")),
             ("delta-stepping", lambda: run_delta_stepping(g, 0)),
         ]:

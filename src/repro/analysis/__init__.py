@@ -1,0 +1,40 @@
+"""Static analysis for the kernel stack: audit, retrace sentinel, lint.
+
+Three passes, one CLI (``python -m repro.analysis``), wired into CI ahead
+of pytest (DESIGN.md Sec. 10):
+
+  * :mod:`repro.analysis.kernel_audit` — abstract-evals every registered
+    kernel contract (``repro.kernels.registry``) and statically checks
+    grid x BlockSpec write coverage (write-write race detector), index-map
+    bounds, dtype discipline (f32-only floats, integer work counters,
+    two-limb cumulative engine counters), VMEM tile budgets, and oracle
+    shape agreement — without compiling or running a single kernel.
+  * :mod:`repro.analysis.trace_guard` — a compile-count sentinel: a
+    context manager asserting steady-state XLA compilation count is zero
+    across serving trips and stepper chunks.
+  * :mod:`repro.analysis.lint` — repo-specific AST rules (RPL001-RPL006)
+    enforcing the layering invariants the runtime tests cannot see.
+"""
+from repro.analysis.kernel_audit import (
+    AuditReport,
+    Finding,
+    audit_contract,
+    audit_engine_counters,
+    audit_registry,
+)
+from repro.analysis.lint import LintFinding, lint_paths, lint_source
+from repro.analysis.trace_guard import RetraceError, TraceGuard, compile_count
+
+__all__ = [
+    "AuditReport",
+    "Finding",
+    "audit_contract",
+    "audit_engine_counters",
+    "audit_registry",
+    "LintFinding",
+    "lint_paths",
+    "lint_source",
+    "RetraceError",
+    "TraceGuard",
+    "compile_count",
+]

@@ -1,0 +1,55 @@
+"""CLI gate: ``python -m repro.analysis`` — lint + kernel audit, exit 1 on
+any finding. CI runs this in the fast lane ahead of pytest.
+
+Flags: ``--no-audit`` / ``--no-lint`` to run one pass alone;
+``--paths P [P ...]`` to lint a different tree (default: the installed
+``repro`` package source).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--no-audit", action="store_true",
+                    help="skip the kernel contract audit")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the AST lint pass")
+    ap.add_argument("--paths", nargs="+", default=None,
+                    help="files/dirs to lint (default: the repro package)")
+    args = ap.parse_args(argv)
+
+    failures = 0
+
+    if not args.no_lint:
+        from repro.analysis.lint import lint_paths
+
+        if args.paths is None:
+            pkg_root = pathlib.Path(__file__).resolve().parent.parent
+            paths = [pkg_root]
+        else:
+            paths = args.paths
+        findings = lint_paths(paths)
+        for f in findings:
+            print(f"lint: {f}")
+        print(f"lint: {len(findings)} finding(s)")
+        failures += len(findings)
+
+    if not args.no_audit:
+        from repro.analysis.kernel_audit import audit_registry
+
+        report = audit_registry()
+        for f in report.findings:
+            print(f"audit: {f}")
+        print(f"audit: {report.kernels} kernels / {report.cases} cases, "
+              f"{len(report.findings)} finding(s)")
+        failures += len(report.findings)
+
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

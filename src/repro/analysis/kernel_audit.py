@@ -1,0 +1,395 @@
+"""Kernel contract auditor: static race/bounds/dtype/VMEM checks.
+
+The auditor never compiles or executes a kernel body. It runs every
+registered wrapper (``repro.kernels.registry``) under ``jax.eval_shape``
+with ``pl.pallas_call`` monkeypatched to a recorder that captures the
+launch geometry (grid, BlockSpecs, operand/output shapes and dtypes) and
+returns dummy outputs of the declared ``out_shape``. The captured geometry
+is then checked purely in python:
+
+  * **coverage/race** — enumerate every grid point, map each output's
+    ``index_map`` over them, and require exactly one writer per output
+    tile plus full-array tile coverage. The VMEM-resident accumulation
+    idiom (a constant index map hit by every grid step — the two-sweep
+    megakernels and the ``pl.when(step == 0)`` lane accumulators) is a
+    deliberate multi-writer pattern: it is legal only for output positions
+    the contract whitelists in ``resident_outputs`` *and* only when the
+    block is the whole array (a partial resident block would alias tiles
+    across steps — precisely the write-write race this pass exists to
+    catch in ``ell_relax_keys``/``ell_keys_dep``).
+  * **bounds** — every index map must keep ``block_index * block_shape``
+    inside the array for every grid point, inputs and outputs alike
+    (degree-sliced ELL edge slices included: their wrappers are registered
+    contracts too, so each bucket's specs are captured and checked).
+  * **dtype** — floats must be exactly f32: the min-neutral ±inf padding
+    convention that every segment-min key lane relies on is defined on f32
+    (a mixed-precision operand would silently reorder ties); integers must
+    be i32/u32/bool (an f64/i64 leak means an accidental x64 dependence);
+    ``counter_outputs`` must be integer (an f32 work counter silently
+    loses counts past 2**24).
+  * **vmem** — the per-grid-step working set (sum of block bytes over all
+    specs) must fit the configured budget
+    (``repro.kernels.config.vmem_budget_bytes``).
+  * **oracle** — ``jax.eval_shape`` of the contract's pure-jnp oracle on
+    the same positional args must agree with the wrapper's output tree
+    (shape and dtype leaf-for-leaf).
+
+:func:`audit_engine_counters` extends the dtype pass across the engine
+boundary: the *cumulative* per-lane work counters in the phase steppers
+(``sum_fringe``/``relax_edges``) must be two-limb (u32 lo + i32 hi) —
+a graph of 2**27 edges overflows a flat i32 counter within ~16 phases of
+batch-32 serving, which is reachable, so a flat i32 there is a finding.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import itertools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import config as kcfg
+from repro.kernels import registry as kreg
+
+# Dtypes the kernel stack may move through VMEM. f32 is the one float
+# (inf-padding discipline); i32/u32 index/count; bool masks.
+ALLOWED_DTYPES = frozenset(
+    np.dtype(t) for t in (np.float32, np.int32, np.uint32, np.bool_)
+)
+
+# Cumulative engine counters and their required high limbs (see module
+# docstring). Per-phase counters may stay i32: they are bounded by n.
+CUMULATIVE_LIMB_COUNTERS = {
+    "sum_fringe": "sum_fringe_hi",
+    "relax_edges": "relax_edges_hi",
+}
+
+# Safety valve for the grid-point enumeration: spec cases are tiny by
+# design (registry fixtures), so hitting this means a broken case.
+MAX_GRID_POINTS = 65536
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    kernel: str
+    case: str
+    check: str  # coverage | race | bounds | dtype | vmem | oracle | capture
+    message: str
+
+    def __str__(self):
+        return f"[{self.check}] {self.kernel}/{self.case}: {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditReport:
+    findings: tuple[Finding, ...]
+    kernels: int
+    cases: int
+    calls: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+@dataclasses.dataclass
+class CapturedCall:
+    grid: tuple[int, ...]
+    in_specs: list
+    out_specs: list
+    operand_shapes: list[tuple[tuple[int, ...], np.dtype]]
+    out_shapes: list[tuple[tuple[int, ...], np.dtype]]
+
+
+def _as_list(x):
+    if x is None:
+        return []
+    return list(x) if isinstance(x, (list, tuple)) else [x]
+
+
+@contextlib.contextmanager
+def capture_pallas_calls(records: list):
+    """Patch ``pallas_call`` to record launch geometry and skip the body.
+
+    The patched call returns dummy zeros of the declared ``out_shape`` —
+    kernel bodies are never traced, so a broken body cannot mask a broken
+    spec (and vice versa). Kernel modules bind ``pl`` to the pallas module
+    object and resolve ``pl.pallas_call`` at call time, so patching the
+    module attribute reaches every call site.
+    """
+    import jax.experimental.pallas as plmod
+
+    orig = plmod.pallas_call
+
+    def patched(kernel, out_shape=None, **kwargs):
+        grid = kwargs.get("grid", ())
+        if isinstance(grid, int):
+            grid = (grid,)
+        in_specs = _as_list(kwargs.get("in_specs"))
+        out_specs = _as_list(kwargs.get("out_specs"))
+        outs = _as_list(out_shape)
+
+        def fake(*operands):
+            records.append(CapturedCall(
+                grid=tuple(int(g) for g in grid),
+                in_specs=in_specs,
+                out_specs=out_specs,
+                operand_shapes=[
+                    (tuple(o.shape), np.dtype(o.dtype)) for o in operands
+                ],
+                out_shapes=[
+                    (tuple(s.shape), np.dtype(s.dtype)) for s in outs
+                ],
+            ))
+            dummy = [jnp.zeros(s.shape, s.dtype) for s in outs]
+            if isinstance(out_shape, (list, tuple)):
+                return tuple(dummy)
+            return dummy[0]
+
+        return fake
+
+    plmod.pallas_call = patched
+    try:
+        yield
+    finally:
+        plmod.pallas_call = orig
+
+
+def _grid_points(grid: tuple[int, ...]):
+    return itertools.product(*(range(g) for g in grid))
+
+
+def _check_spec(emit, call, spec, shape, dtype, *, pos, kind, resident_ok):
+    """Bounds for any spec; exactly-one-writer/coverage for outputs."""
+    block = tuple(int(b) for b in spec.block_shape)
+    if len(block) != len(shape):
+        emit("bounds", f"{kind}[{pos}] block rank {len(block)} != array "
+                       f"rank {len(shape)}")
+        return
+    npoints = math.prod(call.grid) if call.grid else 1
+    if npoints > MAX_GRID_POINTS:
+        emit("bounds", f"grid {call.grid} too large to enumerate")
+        return
+    writers: dict[tuple[int, ...], int] = {}
+    for point in _grid_points(call.grid):
+        idx = spec.index_map(*point)
+        idx = tuple(int(i) for i in (idx if isinstance(idx, tuple) else (idx,)))
+        if len(idx) != len(block):
+            emit("bounds", f"{kind}[{pos}] index map returned rank "
+                           f"{len(idx)} for block rank {len(block)}")
+            return
+        for d, (i, b, s) in enumerate(zip(idx, block, shape)):
+            if i < 0 or i * b + b > s:
+                emit("bounds",
+                     f"{kind}[{pos}] grid point {point} maps dim {d} to "
+                     f"elements [{i * b}, {i * b + b}) outside 0..{s}")
+                return
+        writers[idx] = writers.get(idx, 0) + 1
+    if kind != "out":
+        return
+    # -- write-write race / coverage discipline --
+    multi = {t: c for t, c in writers.items() if c > 1}
+    whole_block = block == tuple(shape)
+    if multi:
+        if not resident_ok:
+            tile, count = next(iter(multi.items()))
+            emit("race",
+                 f"out[{pos}] tile {tile} written by {count} grid "
+                 f"instances but position {pos} is not whitelisted in "
+                 f"resident_outputs — write-write race")
+            return
+        if not whole_block:
+            emit("race",
+                 f"out[{pos}] is resident-whitelisted but its block "
+                 f"{block} is not the whole array {tuple(shape)} — a "
+                 f"partial resident block aliases tiles across grid steps")
+            return
+    per_dim = []
+    for b, s in zip(block, shape):
+        if s % b:
+            emit("coverage",
+                 f"out[{pos}] block {block} does not divide array "
+                 f"{tuple(shape)}")
+            return
+        per_dim.append(s // b)
+    if len(writers) != math.prod(per_dim):
+        emit("coverage",
+             f"out[{pos}] grid writes {len(writers)} distinct tiles of "
+             f"the {math.prod(per_dim)} needed to cover {tuple(shape)}")
+
+
+def _check_dtypes(emit, call, contract):
+    for pos, (shape, dt) in enumerate(call.operand_shapes):
+        if dt not in ALLOWED_DTYPES:
+            emit("dtype", f"operand[{pos}] dtype {dt} outside the allowed "
+                          f"set (f32/i32/u32/bool)")
+    for pos, (shape, dt) in enumerate(call.out_shapes):
+        if dt not in ALLOWED_DTYPES:
+            emit("dtype", f"out[{pos}] dtype {dt} outside the allowed set")
+        if pos in contract.counter_outputs:
+            if dt.kind not in "iu":
+                emit("dtype", f"out[{pos}] is a work counter but has "
+                              f"non-integer dtype {dt}")
+        elif dt.kind == "f" and dt != np.dtype(np.float32):
+            emit("dtype", f"out[{pos}] float dtype {dt} breaks the f32 "
+                          f"±inf min-identity convention")
+
+
+def _check_vmem(emit, call, budget: int):
+    total = 0
+    pairs = list(zip(call.in_specs, call.operand_shapes))
+    pairs += list(zip(call.out_specs, call.out_shapes))
+    for spec, (shape, dt) in pairs:
+        total += math.prod(int(b) for b in spec.block_shape) * dt.itemsize
+    if total > budget:
+        emit("vmem", f"per-step block working set {total} B exceeds the "
+                     f"configured VMEM budget {budget} B")
+
+
+def _tree_leaves(x):
+    return [(tuple(leaf.shape), np.dtype(leaf.dtype))
+            for leaf in jax.tree_util.tree_leaves(x)]
+
+
+def _eval_shape_static(fn, args, kwargs):
+    """``jax.eval_shape`` that leaves non-array leaves (python ints like a
+    nested ``dep_idx``) as static values instead of tracer-izing them —
+    wrappers feed those to jit static arguments."""
+    leaves, treedef = jax.tree_util.tree_flatten((tuple(args), kwargs))
+    is_arr = [hasattr(x, "shape") and hasattr(x, "dtype") for x in leaves]
+    arrays = [x for x, a in zip(leaves, is_arr) if a]
+
+    def call(*arrs):
+        it = iter(arrs)
+        full = [next(it) if a else x for x, a in zip(leaves, is_arr)]
+        args2, kwargs2 = jax.tree_util.tree_unflatten(treedef, full)
+        return fn(*args2, **kwargs2)
+
+    return jax.eval_shape(call, *arrays)
+
+
+def audit_contract(contract: kreg.KernelContract,
+                   *, vmem_budget: int | None = None) -> list[Finding]:
+    """Run every spec case of one contract through all static checks."""
+    findings: list[Finding] = []
+    budget = kcfg.vmem_budget_bytes() if vmem_budget is None else vmem_budget
+    for case in contract.make_cases():
+        def emit(check, message, _case=case.label):
+            findings.append(Finding(contract.name, _case, check, message))
+
+        records: list[CapturedCall] = []
+        # fresh trace caches per case: a shape-identical delegated jit call
+        # warmed by an earlier contract would otherwise skip pallas_call
+        # entirely and the recorder would see nothing
+        jax.clear_caches()
+        try:
+            with capture_pallas_calls(records):
+                out = _eval_shape_static(
+                    contract.wrapper, case.args, case.kwargs
+                )
+        except Exception as e:  # noqa: BLE001 — surface as a finding
+            emit("capture", f"wrapper failed under eval_shape: {e!r}")
+            continue
+        if not records:
+            emit("capture", "no pallas_call captured — the wrapper never "
+                            "reached a kernel launch on this case")
+            continue
+        for call in records:
+            if len(call.in_specs) != len(call.operand_shapes):
+                emit("bounds", f"{len(call.in_specs)} in_specs for "
+                               f"{len(call.operand_shapes)} operands")
+                continue
+            if len(call.out_specs) != len(call.out_shapes):
+                emit("bounds", f"{len(call.out_specs)} out_specs for "
+                               f"{len(call.out_shapes)} outputs")
+                continue
+            for pos, (spec, (shape, dt)) in enumerate(
+                    zip(call.in_specs, call.operand_shapes)):
+                _check_spec(emit, call, spec, shape, dt, pos=pos, kind="in",
+                            resident_ok=False)
+            for pos, (spec, (shape, dt)) in enumerate(
+                    zip(call.out_specs, call.out_shapes)):
+                _check_spec(emit, call, spec, shape, dt, pos=pos,
+                            kind="out",
+                            resident_ok=pos in contract.resident_outputs)
+            _check_dtypes(emit, call, contract)
+            _check_vmem(emit, call, budget)
+        if contract.oracle is not None:
+            try:
+                ref_out = _eval_shape_static(contract.oracle, case.args, {})
+            except Exception as e:  # noqa: BLE001
+                emit("oracle", f"oracle failed under eval_shape: {e!r}")
+                continue
+            got, want = _tree_leaves(out), _tree_leaves(ref_out)
+            if got != want:
+                emit("oracle", f"wrapper outputs {got} != oracle outputs "
+                               f"{want}")
+    return findings
+
+
+def audit_engine_counters() -> list[Finding]:
+    """Check the steppers' cumulative work counters are two-limb u32/i32."""
+    from repro.core import distributed as dist
+    from repro.core import graph as graphlib
+    from repro.core import static_engine as se
+
+    findings: list[Finding] = []
+    src = np.array([0, 1], np.int32)
+    dst = np.array([1, 0], np.int32)
+    w = np.array([1.0, 1.0], np.float32)
+    g = graphlib.from_coo(src, dst, w, 2)
+    states = []
+    st = se.init_batch_state(g, np.array([0], np.int32))
+    states.append(("static_engine.BatchState", st))
+    sg = dist.shard_graph_batch(g, 1)
+    states.append((
+        "distributed.ShardedBatchState",
+        dist.init_sharded_batch_state(sg, np.array([0], np.int32)),
+    ))
+    for label, state in states:
+        for lo_name, hi_name in CUMULATIVE_LIMB_COUNTERS.items():
+            def emit(check, message, _l=label):
+                findings.append(Finding(_l, lo_name, check, message))
+
+            lo = getattr(state, lo_name, None)
+            if lo is None:
+                emit("dtype", f"{label} has no counter {lo_name}")
+                continue
+            if np.dtype(lo.dtype) != np.dtype(np.uint32):
+                emit("dtype",
+                     f"{label}.{lo_name} low limb is {lo.dtype}, not "
+                     f"uint32 — cumulative edge counts overflow int32 on "
+                     f"reachable workloads (2**27-edge graph, ~16 phases)")
+            hi = getattr(state, hi_name, None)
+            if hi is None:
+                emit("dtype",
+                     f"{label} lacks the {hi_name} high limb for "
+                     f"{lo_name} — the counter wraps silently at 2**32")
+            elif np.dtype(hi.dtype) != np.dtype(np.int32):
+                emit("dtype", f"{label}.{hi_name} is {hi.dtype}, not int32")
+    return findings
+
+
+def audit_registry(reg: kreg.KernelRegistry | None = None,
+                   *, engines: bool = True) -> AuditReport:
+    """Audit every registered contract (and the engine counters)."""
+    if reg is None:
+        reg = kreg.collect()
+    findings: list[Finding] = []
+    cases = calls = 0
+    for contract in reg.contracts():
+        contract_cases = contract.make_cases()
+        cases += len(contract_cases)
+        findings.extend(audit_contract(contract))
+    if engines:
+        findings.extend(audit_engine_counters())
+    # calls is informational: re-count by one capture-only sweep would
+    # double tracing cost, so derive it from the case count instead
+    calls = cases
+    return AuditReport(
+        findings=tuple(findings), kernels=len(reg.names()),
+        cases=cases, calls=calls,
+    )

@@ -1,0 +1,215 @@
+"""Repo-specific AST lint: the layering invariants, enforced statically.
+
+Six rules (suppress a line with ``# repro: allow(<rule>)``):
+
+  * ``pallas-call-site`` — ``pl.pallas_call`` may only appear under
+    ``repro/kernels/``: engines and serving go through the ops wrappers,
+    which own padding, masking and config-layer resolution.
+  * ``hardcoded-interpret`` — no ``interpret=True/False`` literals:
+    execution mode resolves through ``kernels.config.resolve_interpret``
+    (env + backend), so a hardcoded literal silently pins one backend.
+    ``kernels/config.py`` itself is exempt (it is the resolver).
+  * ``padding-outside-ops`` — no ``jnp.pad`` in ``repro/core`` or
+    ``repro/serving``: the sentinel/alignment convention lives in the
+    kernels layer (``pad_lane_batch`` and the megakernel ``_pad_*``
+    helpers); ad-hoc padding elsewhere is how the two paths drift.
+  * ``unregistered-kernel-module`` — a module under ``repro/kernels``
+    that launches ``pallas_call`` must define a ``register_kernels`` hook,
+    or its kernels dodge the contract auditor.
+  * ``donate-reuse`` — after a call with a literal ``donate=True``, the
+    bare-name buffers passed to it are dead (XLA may alias them into the
+    outputs); reading such a name later in the same function is
+    use-after-donate.
+  * ``env-outside-config`` — ``REPRO_*`` environment variables are read
+    only by ``kernels/config.py``; scattered ``os.environ`` reads defeat
+    the single-resolution contract (and its tests).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+
+RULES = (
+    "pallas-call-site",
+    "hardcoded-interpret",
+    "padding-outside-ops",
+    "unregistered-kernel-module",
+    "donate-reuse",
+    "env-outside-config",
+)
+
+_PRAGMA_RE = re.compile(r"#\s*repro:\s*allow\(([a-z0-9_,\s\-]+)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _call_target(node: ast.Call) -> str:
+    """Dotted name of a call target: 'pallas_call', 'os.environ.get', ..."""
+    parts: list[str] = []
+    f = node.func
+    while isinstance(f, ast.Attribute):
+        parts.append(f.attr)
+        f = f.value
+    if isinstance(f, ast.Name):
+        parts.append(f.id)
+    return ".".join(reversed(parts))
+
+
+def _is_env_read(node: ast.AST) -> bool:
+    """os.environ[...] / os.environ.get(...) / os.getenv(...)."""
+    if isinstance(node, ast.Subscript):
+        v = node.value
+        return (isinstance(v, ast.Attribute) and v.attr == "environ")
+    if isinstance(node, ast.Call):
+        tgt = _call_target(node)
+        return tgt.endswith("getenv") or tgt.endswith("environ.get")
+    return False
+
+
+def _env_key(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Subscript):
+        s = node.slice
+        if isinstance(s, ast.Constant) and isinstance(s.value, str):
+            return s.value
+    if isinstance(node, ast.Call) and node.args:
+        a = node.args[0]
+        if isinstance(a, ast.Constant) and isinstance(a.value, str):
+            return a.value
+    return None
+
+
+class _Zone:
+    """Which rules apply where, from the repo-relative posix path."""
+
+    def __init__(self, path: str):
+        p = pathlib.PurePosixPath(path.replace("\\", "/"))
+        parts = p.parts
+        self.in_kernels = "kernels" in parts
+        self.is_config = self.in_kernels and p.name == "config.py"
+        self.in_engine = ("core" in parts) or ("serving" in parts)
+
+
+def lint_source(src: str, path: str) -> list[LintFinding]:
+    """Lint one file's source text. ``path`` decides rule applicability."""
+    zone = _Zone(path)
+    lines = src.splitlines()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [LintFinding(path, e.lineno or 0, "pallas-call-site",
+                            f"file does not parse: {e.msg}")]
+
+    findings: list[LintFinding] = []
+
+    def allowed(lineno: int) -> set[str]:
+        text = lines[lineno - 1] if 0 < lineno <= len(lines) else ""
+        m = _PRAGMA_RE.search(text)
+        if not m:
+            return set()
+        return {s.strip() for s in m.group(1).split(",")}
+
+    def emit(lineno: int, rule: str, message: str) -> None:
+        if rule not in allowed(lineno):
+            findings.append(LintFinding(path, lineno, rule, message))
+
+    saw_pallas_call = False
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            tgt = _call_target(node)
+            if tgt.endswith("pallas_call"):
+                saw_pallas_call = True
+                if not zone.in_kernels:
+                    emit(node.lineno, "pallas-call-site",
+                         "pl.pallas_call outside repro/kernels — go "
+                         "through the ops-layer wrappers")
+            for kw in node.keywords:
+                if (kw.arg == "interpret"
+                        and isinstance(kw.value, ast.Constant)
+                        and isinstance(kw.value.value, bool)
+                        and not zone.is_config):
+                    emit(kw.value.lineno, "hardcoded-interpret",
+                         f"interpret={kw.value.value} hardcoded — resolve "
+                         "through kernels.config.resolve_interpret")
+            if tgt.endswith(".pad") and zone.in_engine:
+                emit(node.lineno, "padding-outside-ops",
+                     "jnp.pad in engine/serving code — padding is the "
+                     "kernels layer's job (ops.pad_lane_batch)")
+        if _is_env_read(node):
+            key = _env_key(node)
+            if (key and key.startswith("REPRO_") and not zone.is_config):
+                emit(node.lineno, "env-outside-config",
+                     f"{key} read outside kernels/config.py — all REPRO_* "
+                     "env resolution belongs there")
+
+    if (saw_pallas_call and zone.in_kernels and not any(
+            isinstance(n, ast.FunctionDef) and n.name == "register_kernels"
+            for n in tree.body)):
+        emit(1, "unregistered-kernel-module",
+             "module launches pallas_call but defines no register_kernels "
+             "hook — its kernels dodge the contract auditor")
+
+    for fn in [n for n in ast.walk(tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        _lint_donate_reuse(fn, emit)
+    return findings
+
+
+def _lint_donate_reuse(fn: ast.AST, emit) -> None:
+    loads: list[tuple[int, str]] = []
+    stores: list[tuple[int, str]] = []
+    donating: list[tuple[ast.Call, set[str]]] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name):
+            if isinstance(node.ctx, ast.Load):
+                loads.append((node.lineno, node.id))
+            else:
+                stores.append((node.lineno, node.id))
+        if isinstance(node, ast.Call):
+            donate = any(
+                kw.arg == "donate" and isinstance(kw.value, ast.Constant)
+                and kw.value.value is True for kw in node.keywords
+            )
+            if donate:
+                names = {a.id for a in node.args if isinstance(a, ast.Name)}
+                names |= {kw.value.id for kw in node.keywords
+                          if kw.arg != "donate"
+                          and isinstance(kw.value, ast.Name)}
+                donating.append((node, names))
+    for call, names in donating:
+        end = getattr(call, "end_lineno", call.lineno)
+        for name in sorted(names):
+            rebinds = [ln for ln, nm in stores if nm == name and ln >= end]
+            barrier = min(rebinds) if rebinds else float("inf")
+            for ln, nm in loads:
+                if nm == name and end < ln < barrier:
+                    emit(ln, "donate-reuse",
+                         f"{name!r} was donated on line {call.lineno} — "
+                         "XLA may have aliased its buffer into the "
+                         "outputs; reading it here is use-after-donate")
+                    break
+
+
+def lint_paths(paths) -> list[LintFinding]:
+    """Lint files and/or directory trees (``*.py``, sorted, recursive)."""
+    files: list[pathlib.Path] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    findings: list[LintFinding] = []
+    for f in files:
+        findings.extend(lint_source(f.read_text(), str(f)))
+    return findings

@@ -1,0 +1,102 @@
+"""Retrace sentinel: count XLA compilations, pin steady state to zero.
+
+A serving loop that silently retraces per request — a criterion string,
+layout object or python float leaking into a jit cache key — still returns
+bit-correct answers, just 100x slower. Runtime parity tests cannot see it;
+this sentinel can: ``jax.monitoring`` emits one
+``/jax/core/compile/backend_compile_duration`` event per *actual* backend
+compilation (cache hits emit nothing), so a warmed-up trip loop must count
+zero.
+
+Usage::
+
+    warm_up()                      # pay the one-time compilations
+    with TraceGuard() as tg:       # steady state begins here
+        for _ in range(trips):
+            state = backend.step(state, k)
+    # raises RetraceError on exit if anything compiled inside the block
+
+``jax.monitoring`` has no per-listener unregister, so one module-level
+listener installs lazily on first guard entry and stays for the process
+lifetime; guards snapshot its monotone counter.
+"""
+from __future__ import annotations
+
+import threading
+
+from jax import monitoring
+
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_lock = threading.Lock()
+_compiles = 0
+_installed = False
+
+
+def _listener(event: str, duration: float, **kwargs) -> None:
+    if event == COMPILE_EVENT:
+        global _compiles
+        with _lock:
+            _compiles += 1
+
+
+def _ensure_installed() -> None:
+    global _installed
+    with _lock:
+        if not _installed:
+            monitoring.register_event_duration_secs_listener(_listener)
+            _installed = True
+
+
+def compile_count() -> int:
+    """Process-lifetime count of backend compilations seen so far.
+
+    Only counts events after the first :class:`TraceGuard` (or explicit
+    ``_ensure_installed``) — the listener is installed lazily.
+    """
+    _ensure_installed()
+    with _lock:
+        return _compiles
+
+
+class RetraceError(AssertionError):
+    """Raised when a guarded block compiled more than its budget allows."""
+
+
+class TraceGuard:
+    """Context manager asserting at most ``max_compiles`` compilations.
+
+    The default budget of zero is the steady-state contract: once a
+    serving loop or stepper chunk sequence is warmed up, every further
+    trip must be a pure cache hit. Set ``max_compiles`` for warm-up
+    phases where a known number of compilations is expected.
+    """
+
+    def __init__(self, max_compiles: int = 0, label: str = ""):
+        self.max_compiles = int(max_compiles)
+        self.label = label
+        self._start: int | None = None
+        _ensure_installed()
+
+    @property
+    def compiles(self) -> int:
+        """Compilations observed since entering the guard."""
+        if self._start is None:
+            return 0
+        return compile_count() - self._start
+
+    def __enter__(self) -> "TraceGuard":
+        self._start = compile_count()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            return
+        seen = self.compiles
+        if seen > self.max_compiles:
+            where = f" in {self.label!r}" if self.label else ""
+            raise RetraceError(
+                f"{seen} XLA compilation(s){where} where at most "
+                f"{self.max_compiles} allowed — a static-arg cache key is "
+                f"leaking (criterion string, layout object, python float?)"
+            )

@@ -111,6 +111,7 @@ def runnable_shapes(cfg: ModelConfig) -> dict[str, str]:
         if s.kind == "decode" and cfg.encoder_only:
             reason = "encoder-only arch has no autoregressive decode step"
         elif s.name == "long_500k" and full_attention:
-            reason = "long_500k requires sub-quadratic attention; arch is pure full-attention"
+            reason = ("long_500k requires sub-quadratic attention; "
+                      "arch is pure full-attention")
         out[s.name] = reason
     return out

@@ -67,6 +67,8 @@ from repro.core.static_engine import (
     KEEP_LANE,
     BatchedResult,
     _fresh_rows,
+    _limb_add,
+    combine_limbs,
     validate_sources,
 )
 from repro.sharding.compat import shard_map_compat
@@ -301,7 +303,8 @@ class ShardedBatchGraph:
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["dist", "status", "trips", "phases", "sum_fringe",
-                 "relax_edges", "dist_true", "settled_trace"],
+                 "sum_fringe_hi", "relax_edges", "relax_edges_hi",
+                 "dist_true", "settled_trace"],
     meta_fields=["n", "criterion"],
 )
 @dataclasses.dataclass(frozen=True)
@@ -323,8 +326,11 @@ class ShardedBatchState:
     status: jax.Array  # (B, n_pad) int32 (0=U, 1=F, 2=S)
     trips: jax.Array  # scalar int32 loop trips since init (wrap-safe deltas)
     phases: jax.Array  # (B,) int32 phases each lane's current query was live
-    sum_fringe: jax.Array  # (B,) int32 per-lane sum over live phases of |F|
-    relax_edges: jax.Array  # (B,) int32 per-lane out-edges relaxed
+    sum_fringe: jax.Array  # (B,) uint32 per-lane sum over live phases of |F|
+    #   — low limb of a two-limb counter (see BatchState.sum_fringe)
+    sum_fringe_hi: jax.Array  # (B,) int32 high limb
+    relax_edges: jax.Array  # (B,) uint32 per-lane out-edges relaxed (low limb)
+    relax_edges_hi: jax.Array  # (B,) int32 high limb
     dist_true: jax.Array | None  # (B, n_pad) f32 per-lane true distances
     #   (+inf on padding columns), only when the plan includes 'oracle'
     settled_trace: jax.Array  # (B, trace_len) int32 ring of per-phase settle
@@ -424,8 +430,10 @@ def init_sharded_batch_state(sg: ShardedBatchGraph, sources,
     return ShardedBatchState(
         n=sg.n, dist=d0, status=st0, trips=jnp.int32(0),
         phases=jnp.zeros((b,), jnp.int32),
-        sum_fringe=jnp.zeros((b,), jnp.int32),
-        relax_edges=jnp.zeros((b,), jnp.int32),
+        sum_fringe=jnp.zeros((b,), jnp.uint32),
+        sum_fringe_hi=jnp.zeros((b,), jnp.int32),
+        relax_edges=jnp.zeros((b,), jnp.uint32),
+        relax_edges_hi=jnp.zeros((b,), jnp.int32),
         dist_true=_pad_dist_true(dist_true, plan, b, sg.n, sg.n_pad),
         settled_trace=jnp.zeros((b, int(trace_len)), jnp.int32),
         criterion=plan.criterion,
@@ -492,8 +500,8 @@ def _get_sharded_step(mesh: Mesh, axes, schedule: str,
     rspec = P()
     num_shards = int(np.prod([mesh.shape[a] for a in axes]))
 
-    def spmd(d, status, phases, sum_f, redges, trips, trace,
-             in_min, out_min, out_deg, src_l, dst_g, w,
+    def spmd(d, status, phases, sum_f, sum_f_hi, redges, redges_hi,
+             trips, trace, in_min, out_min, out_deg, src_l, dst_g, w,
              tsrc_l, tdst_g, tw, dist_true, k):
         # shapes inside shard_map: d/status/dist_true (B, n_loc); in_min/
         # out_min/out_deg (n_loc,); edge partitions (1, E_loc); counters and
@@ -559,7 +567,8 @@ def _get_sharded_step(mesh: Mesh, axes, schedule: str,
             return keys
 
         def body(carry):
-            d, status, phases, sum_f, redges, trips, trace, _ = carry
+            (d, status, phases, sum_f, sum_f_hi, redges, redges_hi,
+             trips, trace, _) = carry
             fringe = status == 1
             keys = dyn_keys(status)
             # one fused (L, B) pmin: min fringe distance + the plan's OUT lanes
@@ -618,26 +627,33 @@ def _get_sharded_step(mesh: Mesh, axes, schedule: str,
             new_trace = trace.at[rows_b, idx].set(
                 jnp.where(n_f > 0, n_settled, trace[rows_b, idx])
             )
-            return (new_d, new_status, phases + alive, sum_f + n_f,
-                    redges + d_redges, trips + 1, new_trace, go)
+            # the (4, B) psum stays int32 (per-phase counts are bounded);
+            # only the running totals carry into two uint32/int32 limbs
+            sf_lo, sf_hi = _limb_add(sum_f, sum_f_hi, n_f.astype(jnp.uint32))
+            re_lo, re_hi = _limb_add(
+                redges, redges_hi, d_redges.astype(jnp.uint32)
+            )
+            return (new_d, new_status, phases + alive, sf_lo, sf_hi,
+                    re_lo, re_hi, trips + 1, new_trace, go)
 
         def cond(carry):
             return carry[-1]
 
         go0 = jnp.any(live0) & (k > 0)
-        carry = (d, status, phases, sum_f, redges, trips, trace, go0)
-        d, status, phases, sum_f, redges, trips, trace, _ = jax.lax.while_loop(
-            cond, body, carry
-        )
-        return d, status, phases, sum_f, redges, trips, trace
+        carry = (d, status, phases, sum_f, sum_f_hi, redges, redges_hi,
+                 trips, trace, go0)
+        (d, status, phases, sum_f, sum_f_hi, redges, redges_hi,
+         trips, trace, _) = jax.lax.while_loop(cond, body, carry)
+        return d, status, phases, sum_f, sum_f_hi, redges, redges_hi, trips, trace
 
     mapped = shard_map_compat(
         spmd,
         mesh=mesh,
-        in_specs=(bspec, bspec, rspec, rspec, rspec, rspec, rspec,
-                  vspec, vspec, vspec, espec, espec, espec,
+        in_specs=(bspec, bspec, rspec, rspec, rspec, rspec, rspec, rspec,
+                  rspec, vspec, vspec, vspec, espec, espec, espec,
                   espec, espec, espec, bspec, rspec),
-        out_specs=(bspec, bspec, rspec, rspec, rspec, rspec, rspec),
+        out_specs=(bspec, bspec, rspec, rspec, rspec, rspec, rspec,
+                   rspec, rspec),
     )
 
     def step(state: ShardedBatchState, src_l, dst_g, w, tsrc_l, tdst_g, tw,
@@ -654,15 +670,18 @@ def _get_sharded_step(mesh: Mesh, axes, schedule: str,
         if not needs_o:
             # (B, 0) dummy: sharded to (B, 0) blocks, never read by the body
             dist_true = jnp.zeros((b, 0), jnp.float32)
-        d, status, phases, sum_f, redges, trips, trace = mapped(
+        (d, status, phases, sum_f, sum_f_hi, redges, redges_hi,
+         trips, trace) = mapped(
             state.dist, state.status, state.phases, state.sum_fringe,
-            state.relax_edges, state.trips, state.settled_trace,
+            state.sum_fringe_hi, state.relax_edges, state.relax_edges_hi,
+            state.trips, state.settled_trace,
             in_min, out_min, out_deg, src_l, dst_g, w,
             tsrc_l, tdst_g, tw, dist_true, k,
         )
         return dataclasses.replace(
             state, dist=d, status=status, phases=phases, sum_fringe=sum_f,
-            relax_edges=redges, trips=trips, settled_trace=trace,
+            sum_fringe_hi=sum_f_hi, relax_edges=redges,
+            relax_edges_hi=redges_hi, trips=trips, settled_trace=trace,
         )
 
     fn = jax.jit(step, donate_argnums=(0,) if donate else ())
@@ -732,7 +751,9 @@ def _reset_sharded_impl(state: ShardedBatchState, sources,
         status=jnp.where(touch[:, None], fresh_s, state.status),
         phases=ctr(state.phases),
         sum_fringe=ctr(state.sum_fringe),
+        sum_fringe_hi=ctr(state.sum_fringe_hi),
         relax_edges=ctr(state.relax_edges),
+        relax_edges_hi=ctr(state.relax_edges_hi),
         dist_true=dist_true,
         settled_trace=jnp.where(touch[:, None], 0, state.settled_trace),
     )
@@ -794,8 +815,8 @@ def harvest_sharded(state: ShardedBatchState) -> BatchedResult:
         dist=state.dist[:, : state.n],
         status=state.status[:, : state.n].astype(jnp.int8),
         phases=state.phases,
-        sum_fringe=state.sum_fringe,
-        relax_edges=state.relax_edges,
+        sum_fringe=combine_limbs(state.sum_fringe, state.sum_fringe_hi),
+        relax_edges=combine_limbs(state.relax_edges, state.relax_edges_hi),
         total_phases=state.trips,
         settled_per_phase=trace,
     )

@@ -28,7 +28,8 @@ INF = jnp.inf
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["dist", "status", "phases", "sum_fringe", "settled_per_phase", "relax_edges"],
+    data_fields=["dist", "status", "phases", "sum_fringe", "settled_per_phase",
+                 "relax_edges"],
     meta_fields=[],
 )
 @dataclasses.dataclass(frozen=True)
@@ -36,13 +37,16 @@ class PhasedResult:
     dist: jax.Array  # (n,) f32 final distances (inf = unreachable)
     status: jax.Array  # (n,) int8
     phases: jax.Array  # scalar int32: number of phases executed
-    sum_fringe: jax.Array  # scalar int32: sum over phases of |F| (paper Table 2)
+    sum_fringe: jax.Array  # scalar: sum over phases of |F| (paper Table 2) —
+    #   int32 from this reference engine, int64 host via run_phased_static
+    #   (which folds the stepper's two-limb counters)
     settled_per_phase: jax.Array | None  # (trace_len,) int32 (0 beyond
     #   `phases`), or None when tracing was disabled (trace_len=1: the ring
     #   holds only the last phase, which must never masquerade as a profile).
     #   run_phased_static populates it from the stepper's device-side trace
     #   ring (BatchState.settled_trace), sized to the phase cap by default.
-    relax_edges: jax.Array  # scalar int32: total out-edges relaxed (work)
+    relax_edges: jax.Array  # scalar: total out-edges relaxed (work) — int32
+    #   here, int64 host via run_phased_static (two-limb fold)
 
 
 def _phase_step(g: Graph, names, dist_true, out_deg, state):

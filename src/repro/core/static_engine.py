@@ -103,10 +103,30 @@ KEEP_LANE = -2  # sentinel source id for reset_lanes: leave the lane untouched
 DEFAULT_CRITERION = "instatic|outstatic"  # the paper's parallel implementation
 
 
+def _limb_add(lo, hi, inc):
+    """Add a non-negative uint32 increment to a two-limb (u32, i32) counter.
+
+    Device int64 needs jax_enable_x64 (off in prod), so cumulative work
+    counters accumulate as uint32 low + int32 high limbs; the carry is
+    exact as long as one increment stays below 2^32 (a single phase would
+    have to relax four billion edges to break that).
+    """
+    new_lo = lo + inc
+    return new_lo, hi + (new_lo < lo).astype(jnp.int32)
+
+
+def combine_limbs(lo, hi) -> np.ndarray:
+    """Host-side rebuild of a two-limb counter as int64 (syncs to host)."""
+    lo64 = np.asarray(lo).astype(np.int64)
+    hi64 = np.asarray(hi).astype(np.int64)
+    return (hi64 << np.int64(32)) + lo64
+
+
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=[
-        "dist", "status", "trips", "phases", "sum_fringe", "relax_edges",
+        "dist", "status", "trips", "phases", "sum_fringe", "sum_fringe_hi",
+        "relax_edges", "relax_edges_hi",
         "out_deg", "crit_keys", "keys_valid", "dist_true", "settled_trace",
     ],
     meta_fields=["criterion"],
@@ -128,8 +148,15 @@ class BatchState:
     #   a very-long-lived server; consumers must accumulate wrap-safe deltas,
     #   as ContinuousBatcher does — int64 needs jax_enable_x64, off in prod)
     phases: jax.Array  # (B,) int32: phases each lane's current query was live
-    sum_fringe: jax.Array  # (B,) int32: per-lane sum over live phases of |F|
-    relax_edges: jax.Array  # (B,) int32: per-lane out-edges relaxed
+    sum_fringe: jax.Array  # (B,) uint32: per-lane sum over live phases of |F|
+    #   — LOW limb of a two-limb counter (device int64 needs jax_enable_x64,
+    #   off in prod); ``harvest``/``combine_limbs`` rebuild the int64 total
+    sum_fringe_hi: jax.Array  # (B,) int32: high limb (carries past 2^32)
+    relax_edges: jax.Array  # (B,) uint32: per-lane out-edges relaxed — low
+    #   limb; a flat int32 here overflows on reachable workloads (a 2^27-edge
+    #   graph wraps within ~16 dense phases), the int32 wrap the kernel
+    #   auditor's counter pass exists to flag
+    relax_edges_hi: jax.Array  # (B,) int32: high limb
     out_deg: jax.Array  # (n,) int32: graph out-degrees (carried for counters)
     crit_keys: jax.Array | None  # (K_dyn, B, n) f32 dynamic criterion keys
     #   (ordered like the plan's ``keys``), or None for all-static plans.
@@ -177,8 +204,9 @@ class BatchedResult:
     dist: jax.Array  # (B, n) f32 final distances (inf = unreachable)
     status: jax.Array  # (B, n) int8 (0=U, 1=F, 2=S)
     phases: jax.Array  # (B,) int32: phases each row was live for
-    sum_fringe: jax.Array  # (B,) int32: per-row sum over phases of |F|
-    relax_edges: jax.Array  # (B,) int32: per-row out-edges relaxed
+    sum_fringe: jax.Array  # (B,) int64 host: per-row sum over phases of |F|
+    #   (two-limb device counters combined by ``harvest``)
+    relax_edges: jax.Array  # (B,) int64 host: per-row out-edges relaxed
     total_phases: jax.Array  # scalar int32: loop trips since state init —
     #   equals max over rows for a one-shot batch; cumulative (spans every
     #   query the lanes ever served) when harvested from a resumed state
@@ -239,13 +267,16 @@ def _init_state(g: Graph, out_deg: jax.Array, sources: jax.Array, dist_true,
     b = sources.shape[0]
     d0, status0 = _fresh_rows(sources, n)
     zeros_b = jnp.zeros((b,), jnp.int32)
+    zeros_b_u = jnp.zeros((b,), jnp.uint32)
     return BatchState(
         dist=d0,
         status=status0,
         trips=jnp.int32(0),
         phases=zeros_b,
-        sum_fringe=zeros_b,
-        relax_edges=zeros_b,
+        sum_fringe=zeros_b_u,
+        sum_fringe_hi=zeros_b,
+        relax_edges=zeros_b_u,
+        relax_edges_hi=zeros_b,
         out_deg=out_deg,
         crit_keys=(
             jnp.zeros((len(plan.keys), b, n), jnp.float32) if plan.keys else None
@@ -490,14 +521,28 @@ def _step_batch_impl(
             ])
             for j, i in enumerate(in_slots):
                 crit_keys = crit_keys.at[i].set(next_in[j])
+        # cumulative work counters are two-limb (u32 lo + i32 hi): summing
+        # the per-phase increments in uint32 keeps even a >2^31-edge phase
+        # exact, and the carry extends past 2^32
+        sf_lo, sf_hi = _limb_add(
+            s.sum_fringe, s.sum_fringe_hi, n_f.astype(jnp.uint32)
+        )
+        re_lo, re_hi = _limb_add(
+            s.relax_edges, s.relax_edges_hi,
+            jnp.sum(
+                jnp.where(settle, s.out_deg[None], 0).astype(jnp.uint32),
+                axis=1, dtype=jnp.uint32,
+            ),
+        )
         return BatchState(
             dist=new_d,
             status=new_status,
             trips=s.trips + 1,
             phases=s.phases + live,
-            sum_fringe=s.sum_fringe + n_f,
-            relax_edges=s.relax_edges
-            + jnp.sum(jnp.where(settle, s.out_deg[None], 0), axis=1, dtype=jnp.int32),
+            sum_fringe=sf_lo,
+            sum_fringe_hi=sf_hi,
+            relax_edges=re_lo,
+            relax_edges_hi=re_hi,
             out_deg=s.out_deg,
             crit_keys=crit_keys,
             keys_valid=s.keys_valid,
@@ -584,7 +629,9 @@ def _reset_lanes_impl(state: BatchState, sources, new_dist_true) -> BatchState:
         trips=state.trips,
         phases=ctr(state.phases),
         sum_fringe=ctr(state.sum_fringe),
+        sum_fringe_hi=ctr(state.sum_fringe_hi),
         relax_edges=ctr(state.relax_edges),
+        relax_edges_hi=ctr(state.relax_edges_hi),
         out_deg=state.out_deg,
         crit_keys=(
             None if state.crit_keys is None
@@ -704,8 +751,10 @@ def harvest(state: BatchState) -> BatchedResult:
         dist=state.dist,
         status=state.status.astype(jnp.int8),
         phases=state.phases,
-        sum_fringe=state.sum_fringe,
-        relax_edges=state.relax_edges,
+        # combine the two-limb device counters into host int64 (the same
+        # result-level convention as delta_stepping's DeltaResult)
+        sum_fringe=combine_limbs(state.sum_fringe, state.sum_fringe_hi),
+        relax_edges=combine_limbs(state.relax_edges, state.relax_edges_hi),
         total_phases=state.trips,
         settled_per_phase=trace,
     )
@@ -770,14 +819,14 @@ def run_phased_static(
         dist=state.dist[0],
         status=state.status[0].astype(jnp.int8),
         phases=state.phases[0],
-        sum_fringe=state.sum_fringe[0],
+        sum_fringe=combine_limbs(state.sum_fringe, state.sum_fringe_hi)[0],
         # same honesty rule as harvest(): an explicitly disabled ring
         # (trace_len=1 holds only the last phase) reads as "not traced",
         # never as a one-slot pseudo-profile
         settled_per_phase=(
             state.settled_trace[0] if trace_len > 1 else None
         ),
-        relax_edges=state.relax_edges[0],
+        relax_edges=combine_limbs(state.relax_edges, state.relax_edges_hi)[0],
     )
 
 

@@ -28,7 +28,8 @@ GRAPH500_INITIATOR = 2.5 * np.array([[0.57, 0.19], [0.19, 0.05]])
 
 def _finish(src, dst, n, seed, weights=None, pad_to=None) -> Graph:
     rng = np.random.default_rng(seed + 0x5EED)
-    w = rng.uniform(0.0, 1.0, size=len(src)).astype(np.float32) if weights is None else weights
+    w = (rng.uniform(0.0, 1.0, size=len(src)).astype(np.float32)
+         if weights is None else weights)
     return from_coo(src, dst, w, n, pad_to=pad_to)
 
 
@@ -55,7 +56,8 @@ def kronecker(k: int, seed: int = 0, initiator: np.ndarray | None = None,
     Edge count is ``round((sum initiator)**k)`` in expectation; each edge picks
     a quadrant per level with probability proportional to the initiator.
     """
-    init = GRAPH500_INITIATOR if initiator is None else np.asarray(initiator, np.float64)
+    init = (GRAPH500_INITIATOR if initiator is None
+            else np.asarray(initiator, np.float64))
     n = 2 ** k
     total = init.sum()
     rng = np.random.default_rng(seed)

@@ -118,3 +118,37 @@ def ell_key_min_batch(
         interpret=interpret,
     )(gate, cols, ws)
     return out[:, :n]
+
+
+def register_kernels(reg):
+    """Register this module's kernel contracts (``kernels/registry.py``)."""
+    from repro.kernels import registry as R
+
+    def cases_1d():
+        cols, ws = R.fixture_ell()
+        gate = R.fixture_lane_vec()
+        return (
+            R.SpecCase("multi_tile", (gate, cols, ws),
+                       {"block_rows": R.SMALL_BLOCK_ROWS}),
+            R.SpecCase("one_tile", (gate, cols, ws)),
+        )
+
+    def cases_batch():
+        cols, ws = R.fixture_ell()
+        gate = R.fixture_lane_batch()
+        return (
+            R.SpecCase("multi_tile", (gate, cols, ws),
+                       {"block_rows": R.SMALL_BLOCK_ROWS}),
+            R.SpecCase("one_tile", (gate, cols, ws)),
+        )
+
+    reg.register(R.KernelContract(
+        name="ell_key_min", module=__name__, wrapper=ell_key_min,
+        make_cases=cases_1d,
+        notes="tiled gate gather-min; exactly one writer per output tile",
+    ))
+    reg.register(R.KernelContract(
+        name="ell_key_min_batch", module=__name__, wrapper=ell_key_min_batch,
+        make_cases=cases_batch,
+        notes="batched gate gather-min over a shared adjacency tile",
+    ))

@@ -124,3 +124,37 @@ def ell_relax_batch(
         interpret=interpret,
     )(dmask, cols, ws)
     return out[:, :n]
+
+
+def register_kernels(reg):
+    """Register this module's kernel contracts (``kernels/registry.py``)."""
+    from repro.kernels import registry as R
+
+    def cases_1d():
+        cols, ws = R.fixture_ell()
+        dmask = R.fixture_lane_vec()
+        return (
+            R.SpecCase("multi_tile", (dmask, cols, ws),
+                       {"block_rows": R.SMALL_BLOCK_ROWS}),
+            R.SpecCase("one_tile", (dmask, cols, ws)),
+        )
+
+    def cases_batch():
+        cols, ws = R.fixture_ell()
+        dmask = R.fixture_lane_batch()
+        return (
+            R.SpecCase("multi_tile", (dmask, cols, ws),
+                       {"block_rows": R.SMALL_BLOCK_ROWS}),
+            R.SpecCase("one_tile", (dmask, cols, ws)),
+        )
+
+    reg.register(R.KernelContract(
+        name="ell_relax", module=__name__, wrapper=ell_relax,
+        make_cases=cases_1d,
+        notes="tiled row scan; every output tile has exactly one writer",
+    ))
+    reg.register(R.KernelContract(
+        name="ell_relax_batch", module=__name__, wrapper=ell_relax_batch,
+        make_cases=cases_batch,
+        notes="batched tiled row scan; adjacency tile shared by all lanes",
+    ))

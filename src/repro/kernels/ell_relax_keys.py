@@ -540,3 +540,98 @@ def ell_keys_dep_batch(
         interpret=interpret,
     )(gates, dga, dgb, cols, ws)
     return keys[:, :, :n_rows]
+
+
+def register_kernels(reg):
+    """Register this module's kernel contracts (``kernels/registry.py``)."""
+    from repro.kernels import registry as R
+
+    n, b, k = R.FIXTURE_N, R.FIXTURE_B, R.FIXTURE_K
+
+    def cases_gather():
+        cols, ws = R.fixture_ell()
+        vecs = R.fixture_rows((k, b, n))
+        return (
+            R.SpecCase("multi_tile", (vecs, cols, ws),
+                       {"block_rows": R.SMALL_BLOCK_ROWS}),
+            R.SpecCase("one_tile", (vecs, cols, ws)),
+        )
+
+    def cases_relax_keys():
+        cols, ws = R.fixture_ell()
+        dmask = R.fixture_rows((b, n), seed=6)
+        ga = R.fixture_rows((k, b, n), seed=7)
+        gb = R.fixture_rows((k, b, n), seed=8)
+        gc = R.fixture_rows((k, b, n), seed=9)
+        return (
+            R.SpecCase("two_sweep", (dmask, ga, gb, gc, cols, ws),
+                       {"block_rows": R.SMALL_BLOCK_ROWS}),
+            R.SpecCase("one_tile", (dmask, ga, gb, gc, cols, ws)),
+        )
+
+    def cases_keys_dep():
+        cols, ws = R.fixture_ell()
+        gates = R.fixture_rows((k, b, n), seed=10)
+        dga = R.fixture_rows((b, n), seed=11)
+        dgb = R.fixture_rows((b, n), seed=12)
+        return (
+            R.SpecCase("two_sweep", (gates, dga, dgb, cols, ws),
+                       {"block_rows": R.SMALL_BLOCK_ROWS, "dep_idx": 1}),
+            R.SpecCase("one_tile", (gates, dga, dgb, cols, ws)),
+        )
+
+    def cases_sliced_gather():
+        sl = R.fixture_sliced(side="in")
+        vecs = R.fixture_rows((k, b, n), seed=13)
+        return (R.SpecCase("sliced", (vecs, sl)),)
+
+    def cases_sliced_relax_keys():
+        sl = R.fixture_sliced(side="in")
+        dmask = R.fixture_rows((b, n), seed=14)
+        ga = R.fixture_rows((k, b, n), seed=15)
+        gb = R.fixture_rows((k, b, n), seed=16)
+        gc = R.fixture_rows((k, b, n), seed=17)
+        return (R.SpecCase("sliced", (dmask, ga, gb, gc, sl)),)
+
+    def cases_sliced_keys_dep():
+        sl = R.fixture_sliced(side="out")
+        gates = R.fixture_rows((k, b, n), seed=18)
+        dga = R.fixture_rows((b, n), seed=19)
+        dgb = R.fixture_rows((b, n), seed=20)
+        return (R.SpecCase("sliced", (gates, dga, dgb, sl)),)
+
+    reg.register(R.KernelContract(
+        name="ell_gather_min_batch", module=__name__,
+        wrapper=ell_gather_min_batch, make_cases=cases_gather,
+        notes="stacked multi-vector gather-min; tiled, one writer per tile",
+    ))
+    reg.register(R.KernelContract(
+        name="ell_relax_keys_batch", module=__name__,
+        wrapper=ell_relax_keys_batch, make_cases=cases_relax_keys,
+        resident_outputs=(0, 1),
+        notes="two-sweep fused in-scan: sweep 1 gathers from the resident "
+              "upd output, so both outputs use constant index maps",
+    ))
+    reg.register(R.KernelContract(
+        name="ell_keys_dep_batch", module=__name__,
+        wrapper=ell_keys_dep_batch, make_cases=cases_keys_dep,
+        resident_outputs=(0,),
+        notes="two-sweep fused out-scan: dependent key row reads the "
+              "resident independent rows from sweep 0",
+    ))
+    reg.register(R.KernelContract(
+        name="ell_sliced_gather_min_batch", module=__name__,
+        wrapper=ell_sliced_gather_min_batch, make_cases=cases_sliced_gather,
+        notes="grid=() sliced megascan: single instance, no race surface",
+    ))
+    reg.register(R.KernelContract(
+        name="ell_sliced_relax_keys_batch", module=__name__,
+        wrapper=ell_sliced_relax_keys_batch,
+        make_cases=cases_sliced_relax_keys,
+        notes="grid=() sliced fused in-scan over degree buckets",
+    ))
+    reg.register(R.KernelContract(
+        name="ell_sliced_keys_dep_batch", module=__name__,
+        wrapper=ell_sliced_keys_dep_batch, make_cases=cases_sliced_keys_dep,
+        notes="grid=() sliced fused out-scan over degree buckets",
+    ))

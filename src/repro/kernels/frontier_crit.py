@@ -194,3 +194,58 @@ def frontier_crit_batch(
         d, status, out_min[None], block=block, interpret=interpret
     )
     return mins[0], mins[1], cnt
+
+
+def register_kernels(reg):
+    """Register this module's kernel contracts (``kernels/registry.py``)."""
+    from repro.kernels import registry as R
+
+    n, b, k = R.FIXTURE_N, R.FIXTURE_B, R.FIXTURE_K
+
+    def cases_lanes_batch():
+        d = R.fixture_rows((b, n), seed=21)
+        status = R.fixture_status((b, n))
+        shared = R.fixture_rows((k, n), seed=22)
+        per_lane = R.fixture_rows((k, b, n), seed=23)
+        return (
+            R.SpecCase("nokeys_multi_step", (d, status, None), {"block": 4}),
+            R.SpecCase("shared_keys", (d, status, shared)),
+            R.SpecCase("per_lane_keys", (d, status, per_lane), {"block": 4}),
+        )
+
+    def cases_scalar():
+        d = R.fixture_rows((n,), seed=24)
+        status = R.fixture_status((n,))
+        out_min = R.fixture_rows((n,), seed=25)
+        return (
+            R.SpecCase("multi_step", (d, status, out_min), {"block": 4}),
+            R.SpecCase("one_step", (d, status, out_min)),
+        )
+
+    def cases_batch():
+        d = R.fixture_rows((b, n), seed=26)
+        status = R.fixture_status((b, n))
+        out_min = R.fixture_rows((n,), seed=27)
+        return (
+            R.SpecCase("multi_step", (d, status, out_min), {"block": 4}),
+            R.SpecCase("one_step", (d, status, out_min)),
+        )
+
+    notes = ("grid-step segment-min accumulation: both outputs are "
+             "VMEM-resident lane accumulators (pl.when step==0 init); "
+             "cnt is an int32 fringe work counter")
+    reg.register(R.KernelContract(
+        name="frontier_crit_lanes_batch", module=__name__,
+        wrapper=frontier_crit_lanes_batch, make_cases=cases_lanes_batch,
+        resident_outputs=(0, 1), counter_outputs=(1,), notes=notes,
+    ))
+    reg.register(R.KernelContract(
+        name="frontier_crit", module=__name__, wrapper=frontier_crit,
+        make_cases=cases_scalar,
+        resident_outputs=(0, 1), counter_outputs=(1,), notes=notes,
+    ))
+    reg.register(R.KernelContract(
+        name="frontier_crit_batch", module=__name__,
+        wrapper=frontier_crit_batch, make_cases=cases_batch,
+        resident_outputs=(0, 1), counter_outputs=(1,), notes=notes,
+    ))

@@ -127,3 +127,92 @@ def frontier_crit_lanes_batch_ref(d: jax.Array, status: jax.Array,
             rows.append(jnp.min(jnp.where(fringe, term, INF), axis=1))
     n_f = jnp.sum(fringe, axis=1, dtype=jnp.int32)
     return jnp.stack(rows), n_f
+
+
+def ell_sliced_gather_min_batch_ref(vecs, sliced):
+    """Sliced multi-vector gather-min oracle: per-bucket refs + the shared
+    gather-merge plan (``_merge_parts`` is the one merge implementation)."""
+    from repro.kernels.ell_relax_keys import _merge_parts
+
+    parts = [
+        ell_gather_min_batch_ref(vecs, s.cols, s.ws)
+        for s in sliced.slices
+        if s.rows.shape[0]
+    ]
+    return _merge_parts(parts, sliced.merge_idx, vecs.shape[:-1])
+
+
+def ell_sliced_relax_keys_batch_ref(dmask, ga, gb, gc, sliced):
+    """Sliced fused in-scan oracle (bitwise the split decomposition)."""
+    upd = ell_sliced_gather_min_batch_ref(dmask[None], sliced)[0]
+    fin = jnp.where(upd < INF, 0.0, INF)
+    gates = jnp.minimum(ga, jnp.minimum(gb, gc + fin[None]))
+    return upd, ell_sliced_gather_min_batch_ref(gates, sliced)
+
+
+def ell_sliced_keys_dep_batch_ref(gates, dga, dgb, sliced, *, dep_idx=0):
+    """Sliced fused out-scan oracle: independent rows then the dependent
+    key reduced through ``min(dga, dgb + keys[dep_idx])``."""
+    keys0 = ell_sliced_gather_min_batch_ref(gates, sliced)
+    gate = jnp.minimum(dga, dgb + keys0[dep_idx])
+    dep = ell_sliced_gather_min_batch_ref(gate[None], sliced)
+    return jnp.concatenate([keys0, dep], axis=0)
+
+
+def register_kernels(reg):
+    """Bind the oracle onto every registered contract.
+
+    This module is last in ``registry.KERNEL_MODULES``, so every contract
+    already exists; ``collect()`` then refuses any that slipped through
+    unbound. Oracles are called with each spec case's POSITIONAL args only
+    (the auditor drops wrapper-tuning kwargs like ``block_rows``), so they
+    must agree with the wrapper on output shapes/dtypes for the defaults.
+    """
+    import functools
+
+    from repro.kernels import ops
+
+    def relax_settled_ref(d, settle_mask, cols, ws):
+        n = d.shape[0]
+        lane_pad = -(-(n + 1) // 128) * 128
+        dmask = jnp.full((lane_pad,), INF, jnp.float32)
+        dmask = dmask.at[:n].set(jnp.where(settle_mask, d, INF))
+        return ell_relax_ref(dmask, cols, ws)
+
+    def keys_dep_ref(gates, dga, dgb, cols, ws):
+        return ell_keys_dep_batch_ref(gates, dga, dgb, 0, cols, ws)
+
+    no_pallas = functools.partial
+    for name, oracle in (
+        ("ell_relax", ell_relax_ref),
+        ("ell_relax_batch", ell_relax_batch_ref),
+        ("ell_key_min", ell_key_min_ref),
+        ("ell_key_min_batch", ell_key_min_batch_ref),
+        ("ell_gather_min_batch", ell_gather_min_batch_ref),
+        ("ell_relax_keys_batch", ell_relax_keys_batch_ref),
+        ("ell_keys_dep_batch", keys_dep_ref),
+        ("ell_sliced_gather_min_batch", ell_sliced_gather_min_batch_ref),
+        ("ell_sliced_relax_keys_batch", ell_sliced_relax_keys_batch_ref),
+        ("ell_sliced_keys_dep_batch", ell_sliced_keys_dep_batch_ref),
+        ("frontier_crit", frontier_crit_ref),
+        ("frontier_crit_batch", frontier_crit_batch_ref),
+        ("frontier_crit_lanes_batch", frontier_crit_lanes_batch_ref),
+        ("relax_settled", relax_settled_ref),
+        ("static_thresholds", frontier_crit_ref),
+        ("relax_settled_batch",
+         no_pallas(ops.relax_settled_batch, use_pallas=False)),
+        ("relax_settled_batch_sliced",
+         no_pallas(ops.relax_settled_batch_sliced, use_pallas=False)),
+        ("gather_min_batch_sliced",
+         no_pallas(ops.gather_min_batch_sliced, use_pallas=False)),
+        ("static_thresholds_batch", frontier_crit_batch_ref),
+        ("crit_thresholds_batch", frontier_crit_lanes_batch_ref),
+        ("key_min_batch", no_pallas(ops.key_min_batch, use_pallas=False)),
+        ("key_min_batch_any",
+         no_pallas(ops.key_min_batch_any, use_pallas=False)),
+        ("in_scan_relax_keys_batch",
+         no_pallas(ops.in_scan_relax_keys_batch, use_pallas=False)),
+        ("out_scan_keys_batch",
+         no_pallas(ops.out_scan_keys_batch, use_pallas=False)),
+    ):
+        reg.bind_oracle(name, oracle)

@@ -1,0 +1,205 @@
+"""Kernel contract registry: the machine-checkable inventory of kernels.
+
+Every Pallas wrapper in ``repro.kernels`` registers a
+:class:`KernelContract` here — its callable, a pure-jnp oracle (bound by
+``ref.py``, the one oracle authority), a spec-shape generator producing
+small representative calls, and the contract's *static invariants* (which
+output positions may use the VMEM-resident constant-index-map accumulation
+idiom, which outputs are integer work counters). The static analyser
+(``repro.analysis.kernel_audit``) abstract-evals every contract over its
+spec shapes and checks grid x BlockSpec coverage, index-map bounds, dtype
+discipline and VMEM tile budgets — so a new kernel is *born audited*: the
+lint gate (``repro.analysis.lint`` rule ``unregistered-kernel-module``)
+refuses kernel modules that do not register, and the auditor refuses
+contracts without oracles.
+
+Registration is pull-based: :func:`collect` imports each module in
+:data:`KERNEL_MODULES` and invokes its ``register_kernels(registry)``
+hook. Modules never import the registry at module scope, so the kernel
+package stays importable (and jit-traceable) without the analysis layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+# The six kernel modules, in dependency order. ``ref`` goes last: it binds
+# the oracles onto contracts the earlier hooks registered.
+KERNEL_MODULES = (
+    "repro.kernels.ell_relax",
+    "repro.kernels.ell_key_min",
+    "repro.kernels.ell_relax_keys",
+    "repro.kernels.frontier_crit",
+    "repro.kernels.ops",
+    "repro.kernels.ref",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecCase:
+    """One representative call of a kernel wrapper.
+
+    ``args``/``kwargs`` are concrete (small!) operands — the auditor runs
+    the wrapper under ``jax.eval_shape`` only, so cases cost tracing, never
+    compilation or kernel execution. Cases should cover every structural
+    branch of the wrapper: one-tile vs multi-tile grids, shared vs per-lane
+    key stacks, padded vs sliced layouts.
+    """
+
+    label: str
+    args: tuple
+    kwargs: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContract:
+    """The auditable contract of one kernel wrapper.
+
+    ``resident_outputs`` whitelists output positions that may use the
+    constant-index-map VMEM-resident idiom (grid-step accumulators and the
+    two-sweep megakernel outputs that sweep 1 gathers from). Any *other*
+    output written by more than one grid instance is a write-write race and
+    fails the audit. ``counter_outputs`` marks integer work counters, which
+    must never accumulate in a float dtype (f32 silently loses counts past
+    2^24 — DESIGN.md Sec. 4).
+    """
+
+    name: str
+    module: str
+    wrapper: Callable
+    make_cases: Callable[[], tuple[SpecCase, ...]]
+    oracle: Callable | None = None
+    resident_outputs: tuple[int, ...] = ()
+    counter_outputs: tuple[int, ...] = ()
+    notes: str = ""
+
+
+class KernelRegistry:
+    """Name -> :class:`KernelContract` map with one-shot oracle binding."""
+
+    def __init__(self):
+        self._contracts: dict[str, KernelContract] = {}
+
+    def register(self, contract: KernelContract) -> None:
+        if contract.name in self._contracts:
+            raise ValueError(f"kernel {contract.name!r} registered twice")
+        self._contracts[contract.name] = contract
+
+    def bind_oracle(self, name: str, oracle: Callable) -> None:
+        """Attach the pure-jnp oracle to an already-registered contract."""
+        hit = self._contracts.get(name)
+        if hit is None:
+            raise KeyError(
+                f"cannot bind oracle for unregistered kernel {name!r}"
+            )
+        if hit.oracle is not None:
+            raise ValueError(f"kernel {name!r} already has an oracle")
+        self._contracts[name] = dataclasses.replace(hit, oracle=oracle)
+
+    def get(self, name: str) -> KernelContract:
+        return self._contracts[name]
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self._contracts))
+
+    def contracts(self) -> tuple[KernelContract, ...]:
+        return tuple(self._contracts[k] for k in self.names())
+
+    def modules(self) -> tuple[str, ...]:
+        return tuple(sorted({c.module for c in self._contracts.values()}))
+
+
+def collect() -> KernelRegistry:
+    """Build the full registry by running every module's registration hook.
+
+    Raises if any :data:`KERNEL_MODULES` entry lacks a ``register_kernels``
+    hook or any registered contract ends up without an oracle — an
+    unregistered kernel or an oracle-less contract is an audit failure, not
+    a silent gap.
+    """
+    reg = KernelRegistry()
+    for modname in KERNEL_MODULES:
+        mod = importlib.import_module(modname)
+        hook = getattr(mod, "register_kernels", None)
+        if hook is None:
+            raise RuntimeError(
+                f"kernel module {modname} defines no register_kernels hook"
+            )
+        hook(reg)
+    missing = [c.name for c in reg.contracts() if c.oracle is None]
+    if missing:
+        raise RuntimeError(f"kernels registered without oracles: {missing}")
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# Shared spec-shape fixtures (small, deterministic, concrete)
+# ---------------------------------------------------------------------------
+
+FIXTURE_N = 10  # vertices in the fixture adjacency
+FIXTURE_D = 3  # padded max degree
+FIXTURE_B = 3  # batch lanes
+FIXTURE_K = 2  # dynamic key stack depth
+SMALL_BLOCK_ROWS = 4  # forces a multi-tile grid over FIXTURE_N rows
+
+
+def fixture_ell(n: int = FIXTURE_N, d: int = FIXTURE_D, seed: int = 0):
+    """(cols, ws) padded-ELL fixture; sentinel id ``n`` appears in cols."""
+    rng = np.random.default_rng(seed)
+    cols = rng.integers(0, n + 1, size=(n, d)).astype(np.int32)
+    ws = rng.random((n, d)).astype(np.float32)
+    ws = np.where(rng.random((n, d)) < 0.85, ws, np.inf).astype(np.float32)
+    return jnp.asarray(cols), jnp.asarray(ws)
+
+
+def fixture_lane_vec(n: int = FIXTURE_N, seed: int = 1):
+    """(lane_pad,) f32 gather vector with +inf padding past column n."""
+    rng = np.random.default_rng(seed)
+    lane_pad = -(-(n + 1) // 128) * 128
+    v = np.full(lane_pad, np.inf, np.float32)
+    v[:n] = rng.random(n).astype(np.float32)
+    return jnp.asarray(v)
+
+
+def fixture_lane_batch(b: int = FIXTURE_B, n: int = FIXTURE_N, seed: int = 2):
+    """(B, lane_pad) f32 per-lane gather vectors, +inf padding."""
+    rng = np.random.default_rng(seed)
+    lane_pad = -(-(n + 1) // 128) * 128
+    v = np.full((b, lane_pad), np.inf, np.float32)
+    v[:, :n] = rng.random((b, n)).astype(np.float32)
+    return jnp.asarray(v)
+
+
+def fixture_rows(shape, seed: int = 3, inf_frac: float = 0.2):
+    """f32 array of ``shape`` with a sprinkle of +inf (gate-like values)."""
+    rng = np.random.default_rng(seed)
+    v = rng.random(shape).astype(np.float32)
+    return jnp.asarray(
+        np.where(rng.random(shape) < inf_frac, np.inf, v).astype(np.float32)
+    )
+
+
+def fixture_status(shape, seed: int = 4):
+    """int32 status array over {0=U, 1=F, 2=S}."""
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 3, size=shape).astype(np.int32))
+
+
+def fixture_sliced(n: int = FIXTURE_N, seed: int = 5, side: str = "in"):
+    """A small multi-bucket :class:`~repro.core.graph.SlicedEll` fixture."""
+    from repro.core.graph import from_coo, to_ell_in_sliced, to_ell_out_sliced
+
+    rng = np.random.default_rng(seed)
+    m = 3 * n
+    src = rng.integers(0, n, size=m).astype(np.int32)
+    dst = rng.integers(0, n, size=m).astype(np.int32)
+    # one hub so the widest bucket (and row splitting) is exercised
+    dst[: n // 2] = 0
+    w = rng.random(m).astype(np.float32)
+    g = from_coo(src, dst, w, n)
+    build = to_ell_in_sliced if side == "in" else to_ell_out_sliced
+    return build(g, pad_multiple=2, boundaries=(2, 4), split=4)

@@ -5,7 +5,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 production meshes and extract memory/cost/collective statistics.
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+      --shape train_4k --mesh pod
   PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
   PYTHONPATH=src python -m repro.launch.dryrun --workload sssp --mesh multipod
 
@@ -22,9 +23,9 @@ import traceback
 import jax
 import numpy as np
 
-from repro.configs import ARCHS, ALIASES, SHAPES, get_config, runnable_shapes
+from repro.configs import ALIASES, SHAPES, get_config, runnable_shapes
 from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import build_cell, data_axes
+from repro.launch.steps import build_cell
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -142,7 +143,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, remat: bool = True,
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
     rec: dict = {
         "arch": cfg.name, "shape": shape, "mesh": mesh_kind,
-        "mesh_shape": dict(zip(mesh.axis_names, np.asarray(mesh.devices.shape).tolist())),
+        "mesh_shape": dict(zip(mesh.axis_names,
+                               np.asarray(mesh.devices.shape).tolist())),
         "chips": int(np.prod(mesh.devices.shape)),
     }
     skip = runnable_shapes(cfg)[shape]
@@ -174,7 +176,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, remat: bool = True,
                 "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
                 "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
                 "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
-                "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+                "generated_code_bytes": int(
+                    getattr(mem, "generated_code_size_in_bytes", 0)),
             },
         )
         if probe:

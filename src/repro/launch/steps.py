@@ -61,7 +61,8 @@ def abstract_batch(cfg: ModelConfig, spec: ShapeSpec, with_labels: bool):
     else:
         batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
     if cfg.n_vision_tokens:
-        batch["vision"] = jax.ShapeDtypeStruct((B, cfg.n_vision_tokens, cfg.d_model), BF16)
+        batch["vision"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vision_tokens, cfg.d_model), BF16)
     if with_labels:
         batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
     return batch
@@ -213,7 +214,8 @@ def build_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh,
     tshape = jax.ShapeDtypeStruct((spec.global_batch, 1), jnp.int32)
     cshape = abstract_cache(cfg, spec.global_batch, spec.seq_len)
     cshard = to_shardings(mesh, cache_specs(cfg, cshape, dp, mesh))
-    tshard = to_shardings(mesh, batch_specs(cfg, {"tokens": tshape}, dp, mesh))["tokens"]
+    tshard = to_shardings(mesh,
+                          batch_specs(cfg, {"tokens": tshape}, dp, mesh))["tokens"]
 
     def serve_step(params, tokens, cache, pos):
         return decode_step(cfg, params, tokens, cache, pos, shd)

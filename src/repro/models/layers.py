@@ -188,8 +188,10 @@ def apply_attention_decode(cfg, p, x, cache, pos):
     pos_arr = pos[None] if pos.ndim == 0 else pos
     q = rope(q, pos_arr, cfg.rope_theta)
     k_new = rope(k_new, pos_arr, cfg.rope_theta)
-    ck = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
     smax = ck.shape[1]
     K = cfg.n_kv
     G = cfg.n_heads // K
@@ -214,7 +216,8 @@ def apply_cross_attention_decode(cfg, p, x, cache):
     s = jnp.einsum("bckgd,btkd->bkgct", qg, cache["xk"]).astype(jnp.float32)
     s = s / np.sqrt(cfg.d_head)
     a = jax.nn.softmax(s, axis=-1).astype(cache["xv"].dtype)
-    o = jnp.einsum("bkgct,btkd->bckgd", a, cache["xv"]).reshape(B, 1, cfg.n_heads * cfg.d_head)
+    o = jnp.einsum("bkgct,btkd->bckgd", a, cache["xv"])
+    o = o.reshape(B, 1, cfg.n_heads * cfg.d_head)
     return jnp.einsum("bsh,hd->bsd", o, p["wo"]), cache
 
 
@@ -486,12 +489,15 @@ def apply_mamba(cfg: ModelConfig, p, u):
     # and its cotangent becomes inf*0=NaN in the backward pass otherwise
     dif = jnp.where(mask[None, None, :, :, None], dif, -1e30)
     dec = jnp.exp(dif)
-    scores = jnp.einsum("bcihn,bcjhn->bcijh", cq.astype(jnp.float32), bq.astype(jnp.float32))
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", cq.astype(jnp.float32),
+                        bq.astype(jnp.float32))
     y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores * dec, xq.astype(jnp.float32))
 
     # --- chunk states: S_c = sum_j exp(tot - cum_j) B_j x_j^T  (H, N, P)
     wj = jnp.exp(tot[:, :, None, :] - cum)  # (B,nc,Q,H)
-    st = jnp.einsum("bcjhn,bcjhp->bchnp", (bq.astype(jnp.float32) * wj[..., None]), xq.astype(jnp.float32))
+    st = jnp.einsum("bcjhn,bcjhp->bchnp",
+                    (bq.astype(jnp.float32) * wj[..., None]),
+                    xq.astype(jnp.float32))
 
     # --- inter-chunk associative scan over running states
     def combine(a, b):
@@ -505,7 +511,8 @@ def apply_mamba(cfg: ModelConfig, p, u):
     s_in = jnp.concatenate(
         [jnp.zeros_like(sscan[:, :1]), sscan[:, :-1]], axis=1
     )  # (B,nc,H,N,P)
-    y_inter = jnp.einsum("bcihn,bchnp->bcihp", cq.astype(jnp.float32) * jnp.exp(cum)[..., None], s_in)
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp",
+                         cq.astype(jnp.float32) * jnp.exp(cum)[..., None], s_in)
 
     y = (y_intra + y_inter).reshape(B, S, H, Pd)
     y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
@@ -539,9 +546,12 @@ def apply_mamba_decode(cfg: ModelConfig, p, u, state):
     H, Pd, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
     d_in = cfg.d_inner
     z, x0, B0, C0, dt = _mamba_project(cfg, p, u)  # (B,1,*)
-    x1, new_cx = _conv_step(x0, state["convx"], p["conv_wx"], p["conv_bx"], cfg.ssm_conv)
-    B1, new_cb = _conv_step(B0, state["convb"], p["conv_wb"], p["conv_bb"], cfg.ssm_conv)
-    C1, new_cc = _conv_step(C0, state["convc"], p["conv_wc"], p["conv_bc"], cfg.ssm_conv)
+    x1, new_cx = _conv_step(x0, state["convx"], p["conv_wx"], p["conv_bx"],
+                            cfg.ssm_conv)
+    B1, new_cb = _conv_step(B0, state["convb"], p["conv_wb"], p["conv_bb"],
+                            cfg.ssm_conv)
+    C1, new_cc = _conv_step(C0, state["convc"], p["conv_wc"], p["conv_bc"],
+                            cfg.ssm_conv)
 
     x = x1.reshape(B, H, Pd)
     Bm = B1.reshape(B, G, N)

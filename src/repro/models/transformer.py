@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
-from repro.models.layers import ShardingCtx, cshard
+from repro.models.layers import ShardingCtx
 
 Params = dict[str, Any]
 
@@ -348,8 +348,10 @@ def init_cache(cfg: ModelConfig, batch: int, prefix_len: int, dtype=jnp.bfloat16
             }
         elif mixer == "xattn":
             caches[f"l{j}"] = {
-                "xk": jnp.zeros((U, batch, cfg.n_vision_tokens, cfg.n_kv, cfg.d_head), dtype),
-                "xv": jnp.zeros((U, batch, cfg.n_vision_tokens, cfg.n_kv, cfg.d_head), dtype),
+                "xk": jnp.zeros(
+                    (U, batch, cfg.n_vision_tokens, cfg.n_kv, cfg.d_head), dtype),
+                "xv": jnp.zeros(
+                    (U, batch, cfg.n_vision_tokens, cfg.n_kv, cfg.d_head), dtype),
             }
         elif mixer == "mamba":
             k = cfg.ssm_conv - 1
@@ -396,7 +398,8 @@ def decode_step(cfg: ModelConfig, params: Params, tokens, cache, pos,
                 elif ffn == "moe":
                     f = L.apply_moe(cfg, lp["moe"], h2, shd)
                 else:
-                    f = L.apply_moe(cfg, lp["moe"], h2, shd) + L.apply_mlp(lp["dense"], h2)
+                    f = (L.apply_moe(cfg, lp["moe"], h2, shd)
+                         + L.apply_mlp(lp["dense"], h2))
                 y = y + f
         return y, new_uc
 

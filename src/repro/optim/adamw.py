@@ -16,7 +16,6 @@ analysis):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

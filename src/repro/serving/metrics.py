@@ -87,15 +87,18 @@ class ServingMetrics:
             "queries_completed": self.completed,
             "cache_hits": self.cache_hits,
             "coalesced": self.coalesced,
-            "cache_hit_rate": self.cache_hits / self.completed if self.completed else 0.0,
+            "cache_hit_rate": (self.cache_hits / self.completed
+                               if self.completed else 0.0),
             "throughput_qps": self.completed / span if span > 0 else 0.0,
             "latency_p50_s": _pct(self._latencies, 50),
             "latency_p99_s": _pct(self._latencies, 99),
-            "latency_mean_s": float(np.mean(self._latencies)) if self._latencies else 0.0,
+            "latency_mean_s": (float(np.mean(self._latencies))
+                               if self._latencies else 0.0),
             "latency_max_s": float(max(self._latencies)) if self._latencies else 0.0,
             "queue_wait_p50_s": _pct(self._queue_waits, 50),
             "queue_wait_p99_s": _pct(self._queue_waits, 99),
-            "phases_per_query_mean": float(np.mean(self._phases)) if self._phases else 0.0,
+            "phases_per_query_mean": (float(np.mean(self._phases))
+                                      if self._phases else 0.0),
             "phases_per_query_max": int(max(self._phases)) if self._phases else 0,
             "lane_occupancy": occ,
             "steps": self.steps,

@@ -62,7 +62,8 @@ class ArrivalQueue:
         self.total_enqueued = 0
 
     def push(self, source: int, t_arrival: float) -> Request:
-        req = Request(req_id=self._next_id, source=int(source), t_arrival=float(t_arrival))
+        req = Request(req_id=self._next_id, source=int(source),
+                      t_arrival=float(t_arrival))
         self._next_id += 1
         self.total_enqueued += 1
         self._q.append(req)

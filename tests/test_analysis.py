@@ -1,0 +1,337 @@
+"""Tests for the static-analysis layer (``repro.analysis``).
+
+Three surfaces:
+
+  * the kernel-contract auditor — clean on every shipped kernel, and
+    each check (race / bounds / coverage / dtype / vmem / oracle /
+    capture) demonstrated on a deliberately-broken fixture kernel;
+  * the AST lint — each rule on synthetic sources, pragma suppression,
+    and the shipped tree lint-clean;
+  * the retrace sentinel — zero steady-state compiles pinned across a
+    warmed ContinuousBatcher trip loop and warmed stepper chunks, with a
+    positive control proving the counter actually sees compilations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.kernel_audit import (
+    audit_contract,
+    audit_engine_counters,
+    audit_registry,
+)
+from repro.analysis.lint import lint_paths, lint_source
+from repro.analysis.trace_guard import RetraceError, TraceGuard
+from repro.graphs import uniform_gnp
+from repro.kernels.registry import (
+    KERNEL_MODULES,
+    KernelContract,
+    SpecCase,
+    collect,
+)
+from repro.serving import ContinuousBatcher
+
+# ---------------------------------------------------------------------------
+# auditor: shipped kernels
+# ---------------------------------------------------------------------------
+
+
+def test_shipped_kernels_audit_clean():
+    reg = collect()
+    report = audit_registry(reg)
+    assert report.ok, "\n".join(str(f) for f in report.findings)
+    assert report.kernels == len(reg.names())
+    assert report.cases >= report.kernels  # every contract has >= 1 case
+    # the registry spans every kernel module: nothing dodges the audit
+    assert {c.module for c in reg.contracts()} == set(KERNEL_MODULES[:-1])
+
+
+def test_engine_counters_audit_clean():
+    assert audit_engine_counters() == []
+
+
+# ---------------------------------------------------------------------------
+# auditor: deliberately-broken fixture kernels
+# ---------------------------------------------------------------------------
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _contract(wrapper, *, oracle=None, resident_outputs=(),
+              counter_outputs=(), arg=None):
+    x = jnp.zeros((8,), jnp.float32) if arg is None else arg
+    if oracle is None:
+        oracle = lambda v: v
+    return KernelContract(
+        name="fixture", module="tests.fixture", wrapper=wrapper,
+        make_cases=lambda: (SpecCase("case", (x,)),),
+        oracle=oracle, resident_outputs=resident_outputs,
+        counter_outputs=counter_outputs,
+    )
+
+
+def _checks(findings):
+    return {f.check for f in findings}
+
+
+def test_overlapping_output_map_is_a_race():
+    """The seeded acceptance fixture: a constant output index map over a
+    multi-step grid, *not* whitelisted as resident, is a write-write race."""
+    import jax.experimental.pallas as pl
+
+    def racy(x):
+        return pl.pallas_call(
+            _copy_kernel, grid=(2,),
+            in_specs=[pl.BlockSpec((4,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((8,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+        )(x)
+
+    findings = audit_contract(_contract(racy))
+    assert "race" in _checks(findings), findings
+    # the same geometry whitelisted as a resident accumulator is legal
+    assert audit_contract(_contract(racy, resident_outputs=(0,))) == []
+
+
+def test_partial_resident_block_still_races():
+    import jax.experimental.pallas as pl
+
+    def partial_resident(x):
+        return pl.pallas_call(
+            _copy_kernel, grid=(2,),
+            in_specs=[pl.BlockSpec((4,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((4,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+        )(x)
+
+    findings = audit_contract(
+        _contract(partial_resident, resident_outputs=(0,)))
+    assert "race" in _checks(findings), findings
+
+
+def test_out_of_bounds_index_map():
+    import jax.experimental.pallas as pl
+
+    def oob(x):
+        return pl.pallas_call(
+            _copy_kernel, grid=(2,),
+            in_specs=[pl.BlockSpec((4,), lambda i: (i + 1,))],
+            out_specs=pl.BlockSpec((4,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+        )(x)
+
+    findings = audit_contract(_contract(oob))
+    assert "bounds" in _checks(findings), findings
+
+
+def test_uncovered_output_tiles():
+    import jax.experimental.pallas as pl
+
+    def half(x):
+        return pl.pallas_call(
+            _copy_kernel, grid=(1,),
+            in_specs=[pl.BlockSpec((8,), lambda i: (0,))],
+            out_specs=pl.BlockSpec((4,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+        )(x)
+
+    findings = audit_contract(_contract(half))
+    assert "coverage" in _checks(findings), findings
+
+
+def _one_tile(x, out_dtype=jnp.float32):
+    import jax.experimental.pallas as pl
+
+    return pl.pallas_call(
+        _copy_kernel, grid=(1,),
+        in_specs=[pl.BlockSpec(x.shape, lambda i: (0,))],
+        out_specs=pl.BlockSpec(x.shape, lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, out_dtype),
+    )(x)
+
+
+def test_disallowed_operand_dtype():
+    x16 = jnp.zeros((8,), jnp.float16)
+    findings = audit_contract(
+        _contract(_one_tile, arg=x16,
+                  oracle=lambda v: jnp.zeros(v.shape, jnp.float32)))
+    assert "dtype" in _checks(findings), findings
+
+
+def test_float_work_counter_flagged():
+    findings = audit_contract(
+        _contract(_one_tile, counter_outputs=(0,)))
+    msgs = [f.message for f in findings if f.check == "dtype"]
+    assert any("work counter" in m for m in msgs), findings
+
+
+def test_vmem_budget_exceeded():
+    findings = audit_contract(_contract(_one_tile), vmem_budget=16)
+    assert "vmem" in _checks(findings), findings
+
+
+def test_oracle_shape_mismatch():
+    findings = audit_contract(
+        _contract(_one_tile, oracle=lambda v: jnp.zeros((4,), jnp.float32)))
+    assert "oracle" in _checks(findings), findings
+
+
+def test_wrapper_without_kernel_launch():
+    findings = audit_contract(_contract(lambda x: x + 1))
+    assert "capture" in _checks(findings), findings
+
+
+# ---------------------------------------------------------------------------
+# lint
+# ---------------------------------------------------------------------------
+
+
+def test_lint_pallas_call_site():
+    src = ("import jax.experimental.pallas as pl\n"
+           "def f(x):\n"
+           "    return pl.pallas_call(k)(x)\n")
+    bad = lint_source(src, "src/repro/core/foo.py")
+    assert [f.rule for f in bad] == ["pallas-call-site"]
+    # the same call inside the kernels layer is fine once registered
+    good = lint_source(src + "def register_kernels(reg):\n    pass\n",
+                       "src/repro/kernels/foo.py")
+    assert good == []
+
+
+def test_lint_unregistered_kernel_module():
+    src = ("import jax.experimental.pallas as pl\n"
+           "def f(x):\n"
+           "    return pl.pallas_call(k)(x)\n")
+    bad = lint_source(src, "src/repro/kernels/foo.py")
+    assert [f.rule for f in bad] == ["unregistered-kernel-module"]
+
+
+def test_lint_hardcoded_interpret_and_pragma():
+    src = "def f(x):\n    return g(x, interpret=True)\n"
+    bad = lint_source(src, "src/repro/core/foo.py")
+    assert [f.rule for f in bad] == ["hardcoded-interpret"]
+    # config.py is the resolver and exempt
+    assert lint_source(src, "src/repro/kernels/config.py") == []
+    # pragma on the offending line suppresses
+    src_ok = ("def f(x):\n"
+              "    return g(x, interpret=True)"
+              "  # repro: allow(hardcoded-interpret)\n")
+    assert lint_source(src_ok, "src/repro/core/foo.py") == []
+
+
+def test_lint_padding_outside_ops():
+    src = "import jax.numpy as jnp\ndef f(x):\n    return jnp.pad(x, 3)\n"
+    assert [f.rule for f in lint_source(src, "src/repro/serving/foo.py")] \
+        == ["padding-outside-ops"]
+    assert lint_source(src, "src/repro/kernels/foo.py") == []
+
+
+def test_lint_env_outside_config():
+    src = "import os\nMODE = os.environ.get('REPRO_KERNEL_MODE')\n"
+    assert [f.rule for f in lint_source(src, "src/repro/core/foo.py")] \
+        == ["env-outside-config"]
+    assert lint_source(src, "src/repro/kernels/config.py") == []
+    # non-REPRO env reads are out of scope
+    other = "import os\nHOME = os.environ['HOME']\n"
+    assert lint_source(other, "src/repro/core/foo.py") == []
+
+
+def test_lint_donate_reuse():
+    src = ("def f(state, fn):\n"
+           "    out = fn(state, donate=True)\n"
+           "    return state.dist\n")
+    bad = lint_source(src, "src/repro/serving/foo.py")
+    assert [f.rule for f in bad] == ["donate-reuse"]
+    # rebinding first makes the later read safe
+    ok = ("def f(state, fn):\n"
+          "    state = fn(state, donate=True)\n"
+          "    return state.dist\n")
+    assert lint_source(ok, "src/repro/serving/foo.py") == []
+
+
+def test_shipped_tree_is_lint_clean():
+    import pathlib
+
+    import repro
+
+    pkg = pathlib.Path(list(repro.__path__)[0])  # namespace pkg: no __file__
+    assert lint_paths([pkg]) == []
+
+
+def test_cli_gate_exit_codes(tmp_path):
+    from repro.analysis.__main__ import main
+
+    bad_dir = tmp_path / "bad"
+    bad_dir.mkdir()
+    (bad_dir / "engine.py").write_text(
+        "def f(x):\n    return g(x, interpret=False)\n")
+    assert main(["--no-audit", "--paths", str(bad_dir)]) == 1
+
+    ok_dir = tmp_path / "ok"
+    ok_dir.mkdir()
+    (ok_dir / "engine.py").write_text("def f(x):\n    return x\n")
+    assert main(["--no-audit", "--paths", str(ok_dir)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# retrace sentinel
+# ---------------------------------------------------------------------------
+
+
+def test_trace_guard_warmed_loop_is_quiet():
+    f = jax.jit(lambda x: x * 2.0 + 0.5)
+    f(jnp.arange(6.0)).block_until_ready()
+    with TraceGuard(label="warmed loop") as tg:
+        for _ in range(5):
+            f(jnp.arange(6.0)).block_until_ready()
+    assert tg.compiles == 0
+
+
+def test_trace_guard_positive_control():
+    """A fresh program inside the guard must be seen and must raise."""
+    with pytest.raises(RetraceError, match="cache key"):
+        with TraceGuard(label="positive control"):
+            jax.jit(lambda x: x * 3.14159 + 42.0)(
+                jnp.arange(7.0)).block_until_ready()
+
+
+def test_trace_guard_does_not_mask_exceptions():
+    with pytest.raises(KeyError):
+        with TraceGuard():
+            jax.jit(lambda x: x - 2.71828)(
+                jnp.arange(3.0)).block_until_ready()
+            raise KeyError("boom")
+
+
+def test_serving_trip_loop_steady_state_compiles_zero():
+    """The acceptance pin: a warmed ContinuousBatcher trip loop — new
+    sources, admission, chunk stepping, harvest, lane parking — is pure
+    cache hits. One compile here means a static-arg key is leaking."""
+    g = uniform_gnp(64, 6 / 64, seed=9)
+    server = ContinuousBatcher(g, lanes=2, phases_per_step=4)
+    for s in (1, 5, 9, 13):  # warm-up traffic pays every compilation
+        server.submit(s)
+    done = server.drain(max_steps=500)
+    assert len(done) == 4
+    with TraceGuard(label="serving trip loop") as tg:
+        for s in (2, 6, 10, 14):  # fresh sources, same shapes
+            server.submit(s)
+        done = server.drain(max_steps=500)
+    assert len(done) == 4
+    assert tg.compiles == 0
+
+
+def test_stepper_chunks_steady_state_compiles_zero():
+    from repro.core.static_engine import init_batch_state, step_batch
+
+    g = uniform_gnp(80, 8 / 80, seed=4)
+    st = init_batch_state(g, [0, 3])
+    st = step_batch(g, st, 4)  # warm chunk
+    with TraceGuard(label="stepper chunks") as tg:
+        for _ in range(3):
+            st = step_batch(g, st, 4)
+        jax.block_until_ready(st.dist)
+    assert tg.compiles == 0

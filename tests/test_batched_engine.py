@@ -84,10 +84,14 @@ def test_counters_are_integer_dtype(graph):
     name, g = graph
     res = run_phased_static_batch(g, [0, 1])
     assert res.phases.dtype == np.int32
-    assert res.sum_fringe.dtype == np.int32
+    # counters fold the device-side two-limb (u32 lo + i32 hi) accumulators
+    # into int64 on the host, so long solves can't wrap at 2^31
+    assert res.sum_fringe.dtype == np.int64
+    assert res.relax_edges.dtype == np.int64
     assert res.total_phases.dtype == np.int32
     single = run_phased_static(g, 0)
-    assert single.sum_fringe.dtype == np.int32
+    assert single.sum_fringe.dtype == np.int64
+    assert single.relax_edges.dtype == np.int64
 
 
 def test_duplicate_and_scalar_sources():
@@ -125,3 +129,38 @@ def test_max_phases_cap_respected():
     g = grid_road(10, 10, seed=1)
     res = run_phased_static_batch(g, [0, g.n - 1], max_phases=3)
     assert int(res.total_phases) <= 3
+
+
+def test_counters_survive_uint32_wrap():
+    """Regression: sum_fringe/relax_edges were single int32 accumulators and
+    wrapped (silently went negative) past 2^31 phases-of-work. The stepper now
+    carries uint32 low + int32 high limbs; seeding the low limb just below
+    2^32 and running a solve must carry into the high limb, and harvest must
+    fold both limbs into the exact int64 total.
+    """
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core.static_engine import harvest, init_batch_state, step_batch
+
+    g = uniform_gnp(60, 8 / 60, seed=3)
+    st = init_batch_state(g, [0, 1])
+    st = step_batch(g, st, 64)
+    base = harvest(st)
+
+    near_wrap = np.uint32(2**32 - 2)
+    st2 = init_batch_state(g, [0, 1])
+    st2 = dataclasses.replace(
+        st2,
+        sum_fringe=jnp.full_like(st2.sum_fringe, near_wrap),
+        relax_edges=jnp.full_like(st2.relax_edges, near_wrap),
+    )
+    st2 = step_batch(g, st2, 64)
+    res = harvest(st2)
+    assert res.sum_fringe.dtype == np.int64
+    want_sf = int(near_wrap) + np.asarray(base.sum_fringe, np.int64)
+    want_re = int(near_wrap) + np.asarray(base.relax_edges, np.int64)
+    np.testing.assert_array_equal(np.asarray(res.sum_fringe), want_sf)
+    np.testing.assert_array_equal(np.asarray(res.relax_edges), want_re)
+    assert (np.asarray(res.sum_fringe) > 2**32).all()  # actually crossed

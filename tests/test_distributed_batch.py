@@ -138,6 +138,28 @@ for i, s in enumerate(srcs):
         np.asarray(res_t.settled_per_phase[i])[:p],
         np.asarray(gen.settled_per_phase)[:p], err_msg=f"trace:{s}")
 assert res_c.settled_per_phase is None  # trace_len=1 reads as "not traced"
+
+# --- 7. counter wrap regression: the sharded stepper carries the same
+# two-limb (u32 lo + i32 hi) counters as the static engine; seeding the low
+# limb just below 2^32 must carry into the high limb and harvest to the
+# exact int64 total instead of wrapping negative
+import dataclasses
+assert res.sum_fringe.dtype == np.int64 and res.relax_edges.dtype == np.int64
+near = np.uint32(2**32 - 2)
+stw = init_sharded_batch_state(sg, srcs)
+stw = dataclasses.replace(
+    stw,
+    sum_fringe=jnp.full_like(stw.sum_fringe, near),
+    relax_edges=jnp.full_like(stw.relax_edges, near),
+)
+while sharded_lanes_active(stw).any():
+    stw = step_sharded_batch(sg, stw, mesh, AXES, 7)
+hw = harvest_sharded(stw)
+np.testing.assert_array_equal(
+    np.asarray(hw.sum_fringe), int(near) + np.asarray(res.sum_fringe))
+np.testing.assert_array_equal(
+    np.asarray(hw.relax_edges), int(near) + np.asarray(res.relax_edges))
+assert (np.asarray(hw.sum_fringe) > 2**32).all()
 print("DISTRIBUTED-BATCH-PASS")
 """
 

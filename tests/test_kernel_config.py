@@ -1,0 +1,189 @@
+"""Error-path and edge tests for the kernel execution config layer
+(``repro.kernels.config``): env-var validation, ledger corruption and
+persistence, VMEM-budget feasibility edges, and tile-size resolution.
+"""
+import json
+
+import pytest
+
+from repro.kernels import config as kcfg
+
+
+@pytest.fixture(autouse=True)
+def _isolated_ledger():
+    """Every test sees a fresh process ledger and leaves none behind."""
+    kcfg.reset_global_ledger()
+    yield
+    kcfg.reset_global_ledger()
+
+
+# ---------------------------------------------------------------------------
+# env-var resolution
+# ---------------------------------------------------------------------------
+
+
+def test_bad_kernel_mode_rejected(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "hardware")
+    with pytest.raises(ValueError, match="REPRO_KERNEL_MODE"):
+        kcfg.kernel_mode()
+
+
+def test_kernel_mode_resolution(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "compiled")
+    assert kcfg.kernel_mode() == "compiled"
+    assert kcfg.resolve_interpret(None) is False
+    assert kcfg.resolve_interpret(True) is True  # explicit arg wins
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    assert kcfg.resolve_interpret(None) is True
+    assert kcfg.resolve_interpret(False) is False
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "  Interpret ")  # normalised
+    assert kcfg.kernel_mode() == "interpret"
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "auto")
+    assert kcfg.kernel_mode() in ("interpret", "compiled")
+
+
+def test_bad_scan_fusion_rejected(monkeypatch):
+    monkeypatch.setenv("REPRO_SCAN_FUSION", "mega")
+    with pytest.raises(ValueError, match="REPRO_SCAN_FUSION"):
+        kcfg.scan_fusion()
+    for ok in ("auto", "fused", "split", " FUSED "):
+        monkeypatch.setenv("REPRO_SCAN_FUSION", ok)
+        assert kcfg.scan_fusion() == ok.strip().lower()
+
+
+def test_vmem_budget_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_VMEM_BUDGET_BYTES", "12345")
+    assert kcfg.vmem_budget_bytes() == 12345
+    monkeypatch.delenv("REPRO_VMEM_BUDGET_BYTES")
+    assert kcfg.vmem_budget_bytes() == kcfg.DEFAULT_VMEM_BUDGET
+
+
+# ---------------------------------------------------------------------------
+# tuning ledger: corruption, partial data, persistence
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_corrupted_json_raises(tmp_path):
+    p = tmp_path / "ledger.json"
+    p.write_text("{not json")
+    with pytest.raises(ValueError):  # JSONDecodeError is a ValueError
+        kcfg.TuningLedger(str(p))
+
+
+def test_ledger_malformed_structure_raises(tmp_path):
+    for payload in ('[1, 2, 3]', '{"k": 512}', '{"k": [1]}'):
+        p = tmp_path / "ledger.json"
+        p.write_text(payload)
+        with pytest.raises(ValueError, match="malformed tuning ledger"):
+            kcfg.TuningLedger(str(p))
+
+
+def test_ledger_partial_entries_load(tmp_path):
+    """A ledger holding only some shapes is fine: misses resolve to the
+    VMEM-fit default, hits are honoured."""
+    key = kcfg.ledger_key("relax", 1000, 4, 2)
+    p = tmp_path / "ledger.json"
+    p.write_text(json.dumps({key: {"block_rows": 1024}}))
+    led = kcfg.TuningLedger(str(p))
+    assert led.get(key) == {"block_rows": 1024}
+    assert led.get(kcfg.ledger_key("relax", 999, 4, 2)) is None
+
+
+def test_ledger_save_without_path_raises():
+    led = kcfg.TuningLedger()
+    led.put("k", {"block_rows": 128})
+    with pytest.raises(ValueError, match="no ledger path"):
+        led.save()
+
+
+def test_ledger_roundtrip_remembers_path(tmp_path):
+    p = tmp_path / "ledger.json"
+    led = kcfg.TuningLedger()
+    led.put("a", {"block_rows": 512, "wall_s": 1e-4})
+    assert led.save(str(p)) == str(p)
+    led.put("b", {"boundaries": [8, 32], "split": 128})
+    led.save()  # remembered path
+    back = kcfg.TuningLedger(str(p))
+    assert back.get("a") == {"block_rows": 512, "wall_s": 1e-4}
+    assert back.get("b") == {"boundaries": [8, 32], "split": 128}
+
+
+def test_global_ledger_autoloads_env(tmp_path, monkeypatch):
+    key = kcfg.ledger_key("relax", 500, 8, 1)
+    p = tmp_path / "ledger.json"
+    p.write_text(json.dumps({key: {"block_rows": 2048}}))
+    monkeypatch.setenv("REPRO_TUNING_LEDGER", str(p))
+    kcfg.reset_global_ledger()
+    assert kcfg.global_ledger().get(key) == {"block_rows": 2048}
+    assert kcfg.resolve_block_rows("relax", 500, 8, 1) == 2048
+
+
+# ---------------------------------------------------------------------------
+# VMEM feasibility and tile resolution edges
+# ---------------------------------------------------------------------------
+
+
+def test_scan_vmem_bytes_monotone_in_block_rows():
+    sizes = [kcfg.scan_vmem_bytes(4096, 8, 4, r)
+             for r in kcfg.BLOCK_ROWS_CANDIDATES]
+    assert sizes == sorted(sizes) and sizes[0] < sizes[-1]
+
+
+def test_feasible_block_rows_never_empty():
+    # a budget smaller than any candidate's working set still returns the
+    # smallest candidate (sharding is a partitioning decision, not tiling)
+    feas = kcfg.feasible_block_rows(1 << 20, 64, 32, budget=1)
+    assert feas == kcfg.BLOCK_ROWS_CANDIDATES[:1]
+
+
+def test_feasible_block_rows_budget_filter():
+    huge = kcfg.feasible_block_rows(256, 4, 1, budget=1 << 40)
+    assert huge == kcfg.BLOCK_ROWS_CANDIDATES
+    # a budget between candidates keeps exactly the fitting prefix
+    mid = kcfg.scan_vmem_bytes(4096, 8, 4, 512)
+    feas = kcfg.feasible_block_rows(4096, 8, 4, budget=mid)
+    assert feas and feas[-1] == 512
+    assert all(kcfg.scan_vmem_bytes(4096, 8, 4, r) <= mid for r in feas)
+
+
+def test_feasible_block_rows_interpret_ignores_budget(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    # interpret mode has no VMEM: every candidate unless a budget is forced
+    assert kcfg.feasible_block_rows(1 << 22, 128, 64) \
+        == kcfg.BLOCK_ROWS_CANDIDATES
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "compiled")
+    monkeypatch.setenv("REPRO_VMEM_BUDGET_BYTES", "1")
+    assert kcfg.feasible_block_rows(1 << 22, 128, 64) \
+        == kcfg.BLOCK_ROWS_CANDIDATES[:1]
+
+
+def test_resolve_block_rows_prefers_one_step_cover(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    # smallest candidate covering all rows in one grid step
+    assert kcfg.resolve_block_rows("relax", 100, 4) == 128
+    assert kcfg.resolve_block_rows("relax", 300, 4) == 512  # n+1 rows > 256
+    # nothing covers: largest feasible
+    assert kcfg.resolve_block_rows("relax", 1 << 20, 4) \
+        == kcfg.BLOCK_ROWS_CANDIDATES[-1]
+
+
+def test_resolve_block_rows_ledger_hit_wins(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    kcfg.global_ledger().put(
+        kcfg.ledger_key("relax", 100, 4, 1), {"block_rows": 4096})
+    assert kcfg.resolve_block_rows("relax", 100, 4) == 4096
+
+
+def test_resolve_block_bounds():
+    assert kcfg.resolve_block(1) == 128  # floor: one lane-aligned tile
+    assert kcfg.resolve_block(200) == 256  # rounded up to 128 multiple
+    assert kcfg.resolve_block(10**6) == kcfg.DEFAULT_BLOCK  # capped
+
+
+def test_resolve_slice_boundaries_padded_winner_maps_to_none():
+    key = kcfg.slicing_ledger_key("in", 777)
+    kcfg.global_ledger().put(key, {"boundaries": None, "wall_s": 1e-4})
+    assert kcfg.resolve_slice_boundaries("in", 777) is None
+    kcfg.global_ledger().put(key, {"boundaries": [8, 32], "wall_s": 1e-4})
+    assert kcfg.resolve_slice_boundaries("in", 777) == (8, 32)
+    assert kcfg.resolve_slice_boundaries("out", 777) is None  # other side

@@ -7,7 +7,7 @@ import pytest
 
 from repro.core import to_ell_in
 from repro.graphs import uniform_gnp
-from repro.kernels import relax_settled, relax_settled_batch, static_thresholds
+from repro.kernels import relax_settled, relax_settled_batch
 from repro.kernels.ell_relax import ell_relax, ell_relax_batch
 from repro.kernels.frontier_crit import frontier_crit, frontier_crit_batch
 from repro.kernels.ref import (

@@ -2,7 +2,6 @@
 produce bit-identical engine results to the padded layout (f32 min is exact,
 so slicing is a pure layout decision), plus the builders' structural
 invariants and the memoisation satellites."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -11,6 +11,7 @@ import pytest
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_smoke
 from repro.data.pipeline import DataConfig, batch_for
+from repro.launch.steps import abstract_params
 from repro.optim.adamw import (
     OptConfig,
     apply_updates,
@@ -21,7 +22,6 @@ from repro.optim.adamw import (
 )
 from repro.runtime.elastic import plan_mesh
 from repro.sharding.partition import add_fsdp, param_specs
-from repro.launch.steps import abstract_params
 
 
 # ---------------- optimizer ----------------
