@@ -34,7 +34,6 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 
 import argparse
 import json
-import time
 
 import jax
 import numpy as np
@@ -47,6 +46,7 @@ from repro.core.distributed import (
     step_sharded_batch,
 )
 from repro.graphs import grid_road
+from repro.obs.timer import now
 
 SCHEDULES = ("allreduce", "reduce_scatter")
 
@@ -60,7 +60,7 @@ def _drain(sg, state, mesh, axes, schedule, cap):
 def run_batched(sg, mesh, axes, schedule, sources, b, cap):
     """Serve `sources` in groups of `b` lanes; returns (wall_s, trips)."""
     trips = 0
-    t0 = time.perf_counter()
+    t0 = now()
     for lo in range(0, len(sources), b):
         batch = np.full(b, -1, np.int32)  # ragged tail rides as empty lanes
         batch[: len(sources[lo:lo + b])] = sources[lo:lo + b]
@@ -68,7 +68,7 @@ def run_batched(sg, mesh, axes, schedule, sources, b, cap):
         state = _drain(sg, state, mesh, axes, schedule, cap)
         assert not sharded_lanes_active(state).any()
         trips += int(state.trips)
-    return time.perf_counter() - t0, trips
+    return now() - t0, trips
 
 
 def run(n: int = 1024, queries: int = 16, lanes=(1, 4, 8), seed: int = 0,

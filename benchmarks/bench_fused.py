@@ -42,11 +42,12 @@ import json
 import os
 import subprocess
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.timer import now
 
 from repro.core import criteria as C
 from repro.core import run_phased
@@ -107,9 +108,9 @@ def _pp(g, ell, ell_out, crit, srcs, reps):
         ph = int(solve().phases)  # also compiles
         walls = []
         for _ in range(reps):
-            t0 = time.perf_counter()
+            t0 = now()
             jax.block_until_ready(solve().dist)
-            walls.append(time.perf_counter() - t0)
+            walls.append(now() - t0)
         pps.append(float(np.median(walls)) / ph)
     return float(np.median(pps))
 
@@ -157,9 +158,9 @@ def _kernel_micro(g, reps):
         jax.block_until_ready(fn()[0])
         walls = []
         for _ in range(reps):
-            t0 = time.perf_counter()
+            t0 = now()
             jax.block_until_ready(fn()[0])
-            walls.append(time.perf_counter() - t0)
+            walls.append(now() - t0)
         return float(np.median(walls))
 
     return {"fused_s": med(fused), "composed_s": med(composed)}

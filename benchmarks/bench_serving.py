@@ -35,7 +35,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import numpy as np
@@ -43,21 +42,22 @@ import numpy as np
 from repro.core import to_ell_in
 from repro.core.static_engine import run_phased_static_batch
 from repro.graphs import grid_road
+from repro.obs.timer import now
 from repro.serving import ContinuousBatcher, DistCache
 
 
 class SimClock:
-    """Wall-rate clock with fast-forward: sim_t = perf_counter() + offset."""
+    """Wall-rate clock with fast-forward: sim_t = obs now() + offset."""
 
     def __init__(self):
-        self._offset = -time.perf_counter()  # start at t = 0
+        self._offset = -now()  # start at t = 0
 
     def __call__(self) -> float:
-        return time.perf_counter() + self._offset
+        return now() + self._offset
 
     def jump_to(self, t: float) -> None:
         """Fast-forward across an idle gap (never rewinds)."""
-        self._offset = max(self._offset, t - time.perf_counter())
+        self._offset = max(self._offset, t - now())
 
 
 def poisson_trace(queries: int, rate_qps: float, n: int, seed: int,

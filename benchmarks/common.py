@@ -9,12 +9,16 @@ not the methodology.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.core import dijkstra_numpy, run_phased
 from repro.graphs import grid_road, kronecker, uniform_gnp, webgraph
+from repro.obs.timer import timed
+
+__all__ = [
+    "CRITERIA", "FAMILIES", "bucket_edges", "fit_log", "fit_power",
+    "mean_phases", "timed",
+]
 
 
 def bucket_edges(expected_m: int) -> int:
@@ -59,15 +63,8 @@ def fit_log(ns, ys):
     return float(np.sum(ys * np.log2(ns)) / np.sum(np.log2(ns) ** 2))
 
 
-def timed(fn, *args, repeats=3, **kw):
-    """Median wall time (s) + last result."""
-    ts, out = [], None
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        out = fn(*args, **kw)
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts)), out
-
+# `timed` is re-exported from repro.obs.timer (same signature this module
+# historically defined): one clock policy for every benchmark.
 
 FAMILIES = {
     "uniform": lambda n: (lambda seed: uniform_gnp(n, 10.0 / n, seed=seed)),

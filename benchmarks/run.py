@@ -12,7 +12,8 @@ from __future__ import annotations
 import argparse
 import os
 import sys
-import time
+
+from repro.obs.timer import Stopwatch
 
 
 def main() -> None:
@@ -22,7 +23,7 @@ def main() -> None:
     args = ap.parse_args()
 
     os.makedirs("results", exist_ok=True)
-    t0 = time.time()
+    sw = Stopwatch().__enter__()
 
     from benchmarks import bench_fringe, bench_phases, bench_snap, bench_speedup
 
@@ -44,7 +45,7 @@ def main() -> None:
     else:
         print("# (no results/dryrun directory — run repro.launch.dryrun for "
               "the roofline section)")
-    print(f"# total benchmark wall time: {time.time()-t0:.1f}s")
+    print(f"# total benchmark wall time: {sw.elapsed:.1f}s")
 
 
 if __name__ == "__main__":

@@ -13,13 +13,13 @@ sequential Dijkstra.
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
 from repro.core import dijkstra_numpy, to_ell_in
 from repro.core.static_engine import run_phased_static_batch
 from repro.graphs import grid_road
+from repro.obs.timer import now
 
 
 class SSSPServer:
@@ -54,9 +54,9 @@ def main():
     total_q, total_t = 0, 0.0
     for r in range(args.requests):
         sources = rng.integers(0, g.n, args.batch)
-        t0 = time.perf_counter()
+        t0 = now()
         dist, res = server.answer(sources)
-        dt = time.perf_counter() - t0
+        dt = now() - t0
         total_q += len(sources)
         total_t += dt
         # validate a spot-check row per request against sequential Dijkstra

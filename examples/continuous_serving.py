@@ -11,6 +11,13 @@ report (throughput, latency percentiles, lane occupancy, phases/query).
 
     PYTHONPATH=src python examples/continuous_serving.py [--n 2500]
         [--lanes 8] [--queries 48] [--phases-per-step 8] [--seed 0]
+        [--trace serving_trace.json] [--report serving_report.json]
+
+``--trace PATH`` turns on the observability layer: the run additionally
+writes a Chrome trace-event file (open in Perfetto — one timeline row per
+lane, queue-depth counter track) and prints the metrics-registry dashboard.
+``python -m repro.obs validate PATH`` checks the exported file; CI does
+exactly that as the obs smoke test.
 
 CI runs this with tiny arguments as a smoke test of the serving subsystem.
 """
@@ -22,6 +29,7 @@ import numpy as np
 
 from repro.core.static_engine import run_phased_static
 from repro.graphs import grid_road
+from repro.obs import Observability
 from repro.serving import ContinuousBatcher, DistCache
 
 
@@ -35,6 +43,12 @@ def main():
     ap.add_argument("--hot-frac", type=float, default=0.25,
                     help="fraction of queries drawn from a small popular set")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="capture a Chrome trace-event file here (also "
+                         "enables the metrics registry + dashboard)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write the registry snapshot JSON here "
+                         "(with --trace)")
     args = ap.parse_args()
 
     side = max(2, int(np.sqrt(args.n)))
@@ -43,9 +57,10 @@ def main():
           f"m={int(np.isfinite(np.asarray(g.w)).sum())}, "
           f"lanes={args.lanes}, k={args.phases_per_step}")
 
+    obs = Observability.enabled() if args.trace else None
     server = ContinuousBatcher(
         g, lanes=args.lanes, phases_per_step=args.phases_per_step,
-        cache=DistCache(capacity=256),
+        cache=DistCache(capacity=256), obs=obs,
     )
 
     # Arrival trace: mostly-unique sources plus a hot set that exercises the
@@ -86,6 +101,22 @@ def main():
 
     print(f"\nall {validated} answers bit-exact vs run_phased_static")
     print(server.metrics.to_json(indent=1))
+
+    if obs is not None:
+        from repro.obs.__main__ import render_dashboard
+        from repro.obs.tracer import validate_events
+
+        errors = validate_events(obs.tracer.events())
+        assert not errors, "\n".join(errors)
+        obs.tracer.export(args.trace)
+        print(f"\ntrace: {len(obs.tracer.events())} events -> {args.trace} "
+              f"(open in https://ui.perfetto.dev)")
+        if args.report:
+            with open(args.report, "w") as f:
+                f.write(obs.registry.to_json())
+            print(f"report: {args.report}")
+        print()
+        render_dashboard(obs.registry.snapshot())
 
 
 if __name__ == "__main__":

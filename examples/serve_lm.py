@@ -5,13 +5,13 @@ greedy-decode continuations through the KV/SSM cache.
         --prompt-len 64 --gen 32
 """
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke
 from repro.models import decode_step, init_params, prefill
+from repro.obs.timer import now
 
 
 def main():
@@ -34,21 +34,21 @@ def main():
         batch["vision"] = 0.02 * jax.random.normal(
             rng, (args.batch, cfg.n_vision_tokens, cfg.d_model))
 
-    t0 = time.perf_counter()
+    t0 = now()
     logits, cache, pos = prefill(cfg, params, batch)
     logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
+    t_prefill = now() - t0
 
     step = jax.jit(lambda t, c, p: decode_step(cfg, params, t, c, p))
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     outs = [tok]
-    t0 = time.perf_counter()
+    t0 = now()
     for _ in range(args.gen - 1):
         logits, cache, pos = step(tok, cache, pos)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         outs.append(tok)
     jax.block_until_ready(outs[-1])
-    t_decode = time.perf_counter() - t0
+    t_decode = now() - t0
 
     gen = jnp.concatenate(outs, axis=1)
     print(f"{cfg.name}: prefill {args.batch}x{args.prompt_len} in "

@@ -6,7 +6,6 @@ phases/work/time — the full Sec. 4 + Sec. 6 pipeline in one run.
     PYTHONPATH=src python examples/sssp_pipeline.py [--n 50000] [--deg 10]
 """
 import argparse
-import time
 
 import numpy as np
 
@@ -18,6 +17,7 @@ from repro.core import (
 )
 from repro.core.static_engine import run_phased_static
 from repro.graphs import grid_road, kronecker, uniform_gnp, webgraph
+from repro.obs.timer import now
 
 
 def main():
@@ -35,9 +35,9 @@ def main():
     }
     for name, g in graphs.items():
         m = int(np.isfinite(np.asarray(g.w)).sum())
-        t0 = time.perf_counter()
+        t0 = now()
         ref = dijkstra_numpy(g, 0)
-        t_seq = time.perf_counter() - t0
+        t_seq = now() - t0
         print(f"\n== {name}: n={g.n} m={m} (sequential Dijkstra {t_seq*1e3:.0f} ms)")
         ell = to_ell_in(g)
 
@@ -56,10 +56,10 @@ def main():
             ("delta-stepping", lambda: run_delta_stepping(g, 0)),
         ]:
             fn()  # compile
-            t0 = time.perf_counter()
+            t0 = now()
             r = fn()
             np.asarray(r.dist)
-            t = time.perf_counter() - t0
+            t = now() - t0
             print(f"  {label:34s} phases={int(r.phases):6d} "
                   f"time={t*1e3:7.1f} ms  speedup-vs-seq=x{t_seq/t:5.2f} "
                   f"correct={check(r.dist)}")

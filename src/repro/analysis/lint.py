@@ -23,6 +23,12 @@ Six rules (suppress a line with ``# repro: allow(<rule>)``):
   * ``env-outside-config`` — ``REPRO_*`` environment variables are read
     only by ``kernels/config.py``; scattered ``os.environ`` reads defeat
     the single-resolution contract (and its tests).
+  * ``raw-timer`` — no direct ``perf_counter`` calls outside
+    ``repro/obs/``: wall-clock measurement goes through the obs timer API
+    (``repro.obs.timer.now`` / ``Stopwatch`` / ``timed``), so every
+    benchmark and engine measurement shares one clock discipline and can
+    feed the metrics registry. ``# repro: allow(raw-timer)`` opts a line
+    out.
 """
 from __future__ import annotations
 
@@ -38,6 +44,7 @@ RULES = (
     "unregistered-kernel-module",
     "donate-reuse",
     "env-outside-config",
+    "raw-timer",
 )
 
 _PRAGMA_RE = re.compile(r"#\s*repro:\s*allow\(([a-z0-9_,\s\-]+)\)")
@@ -98,6 +105,7 @@ class _Zone:
         self.in_kernels = "kernels" in parts
         self.is_config = self.in_kernels and p.name == "config.py"
         self.in_engine = ("core" in parts) or ("serving" in parts)
+        self.in_obs = "obs" in parts
 
 
 def lint_source(src: str, path: str) -> list[LintFinding]:
@@ -145,6 +153,12 @@ def lint_source(src: str, path: str) -> list[LintFinding]:
                 emit(node.lineno, "padding-outside-ops",
                      "jnp.pad in engine/serving code — padding is the "
                      "kernels layer's job (ops.pad_lane_batch)")
+            if (tgt == "perf_counter" or tgt.endswith(".perf_counter")) \
+                    and not zone.in_obs:
+                emit(node.lineno, "raw-timer",
+                     "direct perf_counter call outside repro/obs — use "
+                     "repro.obs.timer (now/Stopwatch/timed) so timing "
+                     "shares one clock discipline")
         if _is_env_read(node):
             key = _env_key(node)
             if (key and key.startswith("REPRO_") and not zone.is_config):

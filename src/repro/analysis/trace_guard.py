@@ -26,6 +26,8 @@ import threading
 
 from jax import monitoring
 
+from repro.obs.registry import default_registry
+
 COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
 
 _lock = threading.Lock()
@@ -38,6 +40,12 @@ def _listener(event: str, duration: float, **kwargs) -> None:
         global _compiles
         with _lock:
             _compiles += 1
+        # mirror into the shared obs registry so dashboards see compile
+        # pressure alongside serving metrics (counter: monotone, like the
+        # module counter, but resettable per registry swap in tests)
+        default_registry().counter(
+            "jax.backend_compiles", "XLA backend compilations observed"
+        ).inc()
 
 
 def _ensure_installed() -> None:
@@ -95,6 +103,10 @@ class TraceGuard:
         seen = self.compiles
         if seen > self.max_compiles:
             where = f" in {self.label!r}" if self.label else ""
+            default_registry().counter(
+                "trace_guard.retrace_errors",
+                "TraceGuard budget violations raised",
+            ).inc()
             raise RetraceError(
                 f"{seen} XLA compilation(s){where} where at most "
                 f"{self.max_compiles} allowed — a static-arg cache key is "

@@ -457,6 +457,54 @@ def dep_gate_parts(spec: KeySpec, status: jax.Array):
     return dga, dgb
 
 
+def attribution_terms(plan: CritPlan) -> tuple[str, ...]:
+    """Names of the plan's settle-attribution slots, in recorded order.
+
+    One slot per criterion member, ordered like :func:`plan_term_masks`
+    returns their masks (canonical name order: IN family, OUT family,
+    oracle), plus a trailing ``"dijk_fallback"`` slot for bare-oracle plans
+    whose engines materialise the progress guard. The telemetry layer
+    (``repro.obs``) credits each settled vertex to exactly one slot — the
+    first whose mask proves it — so slot counts partition the settled set.
+    """
+    terms = [nm for nm in plan.names if nm in _IN_TERM]
+    terms += [nm for nm in plan.names if nm in _OUT_TERM]
+    if plan.needs_oracle:
+        terms.append("oracle")
+    if plan.needs_fallback:
+        terms.append("dijk_fallback")
+    return tuple(terms)
+
+
+def plan_term_masks(plan: CritPlan, d: jax.Array, fringe: jax.Array,
+                    mins: jax.Array, keys: dict, in_min_static: jax.Array,
+                    dist_true: jax.Array | None) -> list[jax.Array]:
+    """Per-member settle masks (each already restricted to the fringe), one
+    per criterion member in :func:`attribution_terms` order (minus the
+    fallback slot, which only an engine can decide).
+
+    Each mask is the bit-exact transcription of that member's comparison —
+    the same float ops ``evaluate`` runs — so OR-ing them reproduces
+    :func:`plan_union_mask` exactly; the telemetry layer additionally uses
+    them individually for per-criterion settle attribution.
+    """
+    min_fd = mins[0][:, None]
+    masks: list[jax.Array] = []
+    for t in plan.in_terms:
+        if t == "zero":  # DIJK, Eq. d <= min_F d
+            masks.append(fringe & (d <= min_fd))
+        elif t == "static":  # INSTATIC, Eq. 4
+            masks.append(fringe & (d - in_min_static <= min_fd))
+        else:  # INSIMPLE / IN via the dynamic key
+            masks.append(fringe & (d - keys[t] <= min_fd))
+    for i in range(len(plan.out_terms)):  # OUT family: d <= L_k
+        masks.append(fringe & (d <= mins[1 + i][:, None]))
+    if plan.needs_oracle:
+        tol = 1e-6 + 1e-6 * jnp.abs(dist_true)
+        masks.append(fringe & (d <= dist_true + tol))
+    return masks
+
+
 def plan_union_mask(plan: CritPlan, d: jax.Array, fringe: jax.Array,
                     mins: jax.Array, keys: dict, in_min_static: jax.Array,
                     dist_true: jax.Array | None) -> jax.Array:
@@ -468,27 +516,18 @@ def plan_union_mask(plan: CritPlan, d: jax.Array, fringe: jax.Array,
     names to ``(B, V)`` arrays; ``in_min_static`` is ``(V,)``; ``dist_true``
     is ``(B, V)`` iff the plan needs the oracle. V is n on the static engine
     and n_loc inside a shard — the comparisons are all elementwise, which is
-    what makes the same lowering correct in both places. Bit-exact
-    transcription of each registered criterion's comparison (the same float
-    ops ``evaluate`` runs), so the union equals ``evaluate``'s mask whenever
-    the fallback does not fire — and the fallback provably cannot fire for
-    non-oracle members (see :func:`plan_for`).
+    what makes the same lowering correct in both places. The union of
+    :func:`plan_term_masks` (booleans, so the restructuring is exact): it
+    equals ``evaluate``'s mask whenever the fallback does not fire — and the
+    fallback provably cannot fire for non-oracle members (see
+    :func:`plan_for`).
     """
-    min_fd = mins[0][:, None]
+    masks = plan_term_masks(plan, d, fringe, mins, keys, in_min_static,
+                            dist_true)
     settle = jnp.zeros_like(fringe)
-    for t in plan.in_terms:
-        if t == "zero":  # DIJK, Eq. d <= min_F d
-            settle = settle | (d <= min_fd)
-        elif t == "static":  # INSTATIC, Eq. 4
-            settle = settle | (d - in_min_static <= min_fd)
-        else:  # INSIMPLE / IN via the dynamic key
-            settle = settle | (d - keys[t] <= min_fd)
-    for i in range(len(plan.out_terms)):  # OUT family: d <= L_k
-        settle = settle | (d <= mins[1 + i][:, None])
-    if plan.needs_oracle:
-        tol = 1e-6 + 1e-6 * jnp.abs(dist_true)
-        settle = settle | (d <= dist_true + tol)
-    return settle & fringe
+    for m in masks:
+        settle = settle | m
+    return settle
 
 
 def evaluate(names: tuple[str, ...], ctx: CritContext) -> jax.Array:

@@ -128,6 +128,7 @@ def combine_limbs(lo, hi) -> np.ndarray:
         "dist", "status", "trips", "phases", "sum_fringe", "sum_fringe_hi",
         "relax_edges", "relax_edges_hi",
         "out_deg", "crit_keys", "keys_valid", "dist_true", "settled_trace",
+        "fringe_trace", "relax_trace", "attr_trace",
     ],
     meta_fields=["criterion"],
 )
@@ -174,6 +175,18 @@ class BatchState:
     settled_trace: jax.Array  # (B, trace_len) int32 ring of per-phase settle
     #   counts: phase p of a lane's current query lands in slot p % trace_len
     #   (size the ring >= expected phases for a full profile; 1 = cheap off)
+    fringe_trace: jax.Array | None  # (B, trace_len) int32 ring of per-phase
+    #   |F| at phase entry, or None unless init'd with telemetry=True —
+    #   together with relax_trace/attr_trace these are the extended
+    #   telemetry rings repro.obs.phase_telemetry decodes
+    relax_trace: jax.Array | None  # (B, trace_len) int32 ring of per-phase
+    #   out-edges relaxed (per-phase counts are bounded by m, so int32 is
+    #   safe where the *cumulative* counter above needs two limbs)
+    attr_trace: jax.Array | None  # (B, trace_len, T) int32 ring of
+    #   per-criterion settle attribution: slot [., p, k] counts vertices
+    #   this phase settled that criteria.attribution_terms(plan)[k] proved
+    #   FIRST (first-true in canonical member order) — a partition of the
+    #   settled set, so summing over k reproduces settled_trace exactly
     criterion: str  # canonical criterion string; static: selects the plan
 
     @property
@@ -193,7 +206,8 @@ class BatchState:
     jax.tree_util.register_dataclass,
     data_fields=[
         "dist", "status", "phases", "sum_fringe", "relax_edges", "total_phases",
-        "settled_per_phase",
+        "settled_per_phase", "fringe_per_phase", "relax_per_phase",
+        "settle_attribution",
     ],
     meta_fields=[],
 )
@@ -213,6 +227,13 @@ class BatchedResult:
     settled_per_phase: jax.Array | None = None  # (B, trace_len) int32 ring of
     #   per-phase settle counts (see BatchState.settled_trace), or None when
     #   the producing engine carries no trace (the sharded stepper)
+    fringe_per_phase: jax.Array | None = None  # (B, trace_len) int32 ring of
+    #   per-phase fringe sizes, only from telemetry-enabled stepper states
+    relax_per_phase: jax.Array | None = None  # (B, trace_len) int32 ring of
+    #   per-phase relaxed out-edges, only with telemetry
+    settle_attribution: jax.Array | None = None  # (B, trace_len, T) int32
+    #   per-criterion settle attribution ring (BatchState.attr_trace), only
+    #   with telemetry; T indexes criteria.attribution_terms(plan)
 
 
 def validate_sources(sources, n: int, lo: int, range_desc: str,
@@ -259,15 +280,18 @@ def _fresh_rows(sources, n: int):
     return d, status
 
 
-@partial(jax.jit, static_argnames=("criterion", "trace_len"))
+@partial(jax.jit, static_argnames=("criterion", "trace_len", "telemetry"))
 def _init_state(g: Graph, out_deg: jax.Array, sources: jax.Array, dist_true,
-                criterion: str, trace_len: int) -> BatchState:
+                criterion: str, trace_len: int,
+                telemetry: bool = False) -> BatchState:
     plan = C.plan_for(criterion)
     n = g.n
     b = sources.shape[0]
     d0, status0 = _fresh_rows(sources, n)
     zeros_b = jnp.zeros((b,), jnp.int32)
     zeros_b_u = jnp.zeros((b,), jnp.uint32)
+    ring = jnp.zeros((b, trace_len), jnp.int32)
+    n_terms = len(C.attribution_terms(plan))
     return BatchState(
         dist=d0,
         status=status0,
@@ -285,7 +309,13 @@ def _init_state(g: Graph, out_deg: jax.Array, sources: jax.Array, dist_true,
             jnp.asarray(False) if plan.in_scan_keys else None
         ),
         dist_true=dist_true,
-        settled_trace=jnp.zeros((b, trace_len), jnp.int32),
+        settled_trace=ring,
+        fringe_trace=ring if telemetry else None,
+        relax_trace=ring if telemetry else None,
+        attr_trace=(
+            jnp.zeros((b, trace_len, n_terms), jnp.int32) if telemetry
+            else None
+        ),
         criterion=criterion,
     )
 
@@ -318,6 +348,7 @@ def init_batch_state(
     criterion: str = DEFAULT_CRITERION,
     dist_true=None,
     trace_len: int = 1,
+    telemetry: bool = False,
 ) -> BatchState:
     """Fresh ``(B, n)`` stepper state for B lanes over one shared graph.
 
@@ -331,6 +362,12 @@ def init_batch_state(
     ``dist_true`` rows ``(B, n)``. ``trace_len`` sizes the per-lane
     settled-per-phase ring (``>=`` expected phases records the full profile;
     the default 1 keeps the state small).
+
+    ``telemetry=True`` additionally allocates the fringe/relax rings and the
+    ``(B, trace_len, T)`` per-criterion settle-attribution ring that
+    :func:`repro.obs.telemetry.phase_telemetry` decodes. Off by default: the
+    extra rings change the pytree structure (one recompile) and add scatter
+    writes per phase.
     """
     plan = C.plan_for(criterion)
     src_np = validate_sources(
@@ -343,7 +380,7 @@ def init_batch_state(
     # per query in serving, the segment-sum it used to pay does not
     return _init_state(
         g, out_degrees(g), jnp.asarray(src_np), dt, plan.criterion,
-        int(trace_len)
+        int(trace_len), bool(telemetry)
     )
 
 
@@ -477,9 +514,22 @@ def _step_batch_impl(
             d, status, _threshold_keys(plan, g, keys, b),
             use_pallas=use_pallas,
         )
-        settle = C.plan_union_mask(
-            plan, d, fringe, mins, keys, g.in_min_static, s.dist_true
-        )
+        term_masks = None
+        if s.attr_trace is not None:
+            # telemetry path: materialise each member's settle mask so the
+            # attribution ring can credit every settled vertex to the first
+            # member that proved it; the union is boolean-identical to
+            # plan_union_mask (same masks, OR'd)
+            term_masks = C.plan_term_masks(
+                plan, d, fringe, mins, keys, g.in_min_static, s.dist_true
+            )
+            settle = term_masks[0]
+            for m in term_masks[1:]:
+                settle = settle | m
+        else:
+            settle = C.plan_union_mask(
+                plan, d, fringe, mins, keys, g.in_min_static, s.dist_true
+            )
         if plan.needs_fallback:
             # bare-oracle plans can produce an empty mask on a non-empty
             # fringe (f32-vs-f64 tolerance); reproduce evaluate()'s DIJK
@@ -511,9 +561,41 @@ def _step_batch_impl(
         # not write (their stuck slot may hold a wrapped live entry)
         idx = s.phases % trace_len
         n_settled = jnp.sum(settle, axis=1, dtype=jnp.int32)
+        lane_on = n_f > 0
         trace = s.settled_trace.at[rows_b, idx].set(
-            jnp.where(n_f > 0, n_settled, s.settled_trace[rows_b, idx])
+            jnp.where(lane_on, n_settled, s.settled_trace[rows_b, idx])
         )
+        relax_inc = jnp.sum(
+            jnp.where(settle, s.out_deg[None], 0).astype(jnp.uint32),
+            axis=1, dtype=jnp.uint32,
+        )
+        fringe_trace, relax_trace, attr_trace = (
+            s.fringe_trace, s.relax_trace, s.attr_trace
+        )
+        if attr_trace is not None:
+            fringe_trace = fringe_trace.at[rows_b, idx].set(
+                jnp.where(lane_on, n_f, fringe_trace[rows_b, idx])
+            )
+            relax_trace = relax_trace.at[rows_b, idx].set(
+                jnp.where(lane_on, relax_inc.astype(jnp.int32),
+                          relax_trace[rows_b, idx])
+            )
+            # first-true claiming partitions the settled set over the plan's
+            # members in canonical order; a vertex proven by several members
+            # counts once, so per-term counts sum exactly to n_settled
+            claimed = jnp.zeros_like(settle)
+            attr_counts = []
+            for m in term_masks:
+                take = m & settle & ~claimed
+                attr_counts.append(jnp.sum(take, axis=1, dtype=jnp.int32))
+                claimed = claimed | take
+            if plan.needs_fallback:
+                # residual slot: vertices the DIJK progress guard settled
+                attr_counts.append(n_settled - sum(attr_counts))
+            counts = jnp.stack(attr_counts, axis=1)  # (B, T)
+            attr_trace = attr_trace.at[rows_b, idx].set(
+                jnp.where(lane_on[:, None], counts, attr_trace[rows_b, idx])
+            )
         crit_keys = s.crit_keys
         if plan.keys:
             crit_keys = jnp.stack([
@@ -527,13 +609,7 @@ def _step_batch_impl(
         sf_lo, sf_hi = _limb_add(
             s.sum_fringe, s.sum_fringe_hi, n_f.astype(jnp.uint32)
         )
-        re_lo, re_hi = _limb_add(
-            s.relax_edges, s.relax_edges_hi,
-            jnp.sum(
-                jnp.where(settle, s.out_deg[None], 0).astype(jnp.uint32),
-                axis=1, dtype=jnp.uint32,
-            ),
-        )
+        re_lo, re_hi = _limb_add(s.relax_edges, s.relax_edges_hi, relax_inc)
         return BatchState(
             dist=new_d,
             status=new_status,
@@ -548,6 +624,9 @@ def _step_batch_impl(
             keys_valid=s.keys_valid,
             dist_true=s.dist_true,
             settled_trace=trace,
+            fringe_trace=fringe_trace,
+            relax_trace=relax_trace,
+            attr_trace=attr_trace,
             criterion=s.criterion,
         )
 
@@ -646,6 +725,18 @@ def _reset_lanes_impl(state: BatchState, sources, new_dist_true) -> BatchState:
         ),
         dist_true=dist_true,
         settled_trace=jnp.where(touch[:, None], 0, state.settled_trace),
+        fringe_trace=(
+            None if state.fringe_trace is None
+            else jnp.where(touch[:, None], 0, state.fringe_trace)
+        ),
+        relax_trace=(
+            None if state.relax_trace is None
+            else jnp.where(touch[:, None], 0, state.relax_trace)
+        ),
+        attr_trace=(
+            None if state.attr_trace is None
+            else jnp.where(touch[:, None, None], 0, state.attr_trace)
+        ),
         criterion=state.criterion,
     )
 
@@ -746,7 +837,14 @@ def harvest(state: BatchState) -> BatchedResult:
     last phase's count, and handing that out as "the trace" is exactly the
     plausible-but-fake-profile hazard PR 3 removed — so it maps to None.
     """
-    trace = state.settled_trace if state.settled_trace.shape[1] > 1 else None
+    traced = state.settled_trace.shape[1] > 1
+    trace = state.settled_trace if traced else None
+
+    def ring(x):
+        # same honesty rule for the telemetry rings: a trace_len=1 ring
+        # holds only the last phase and must not read as a profile
+        return x if traced and x is not None else None
+
     return BatchedResult(
         dist=state.dist,
         status=state.status.astype(jnp.int8),
@@ -757,6 +855,9 @@ def harvest(state: BatchState) -> BatchedResult:
         relax_edges=combine_limbs(state.relax_edges, state.relax_edges_hi),
         total_phases=state.trips,
         settled_per_phase=trace,
+        fringe_per_phase=ring(state.fringe_trace),
+        relax_per_phase=ring(state.relax_trace),
+        settle_attribution=ring(state.attr_trace),
     )
 
 
@@ -841,6 +942,7 @@ def run_phased_static_batch(
     trace_len: int = 1,
     ell_out=None,
     layout: str = "padded",
+    telemetry: bool = False,
 ) -> BatchedResult:
     """Batched phased SSSP: B sources, one graph, one phase loop.
 
@@ -862,6 +964,9 @@ def run_phased_static_batch(
       ell_out: optional precomputed outgoing view for dynamic OUT keys.
       layout: ELL layout built when none is passed ("padded" | "sliced");
         bit-identical results either way.
+      telemetry: also record fringe/relax-edge rings and per-criterion
+        settle attribution (exposed on the result when ``trace_len > 1``);
+        see :mod:`repro.obs.telemetry` for the decoder.
 
     Row ``i`` of the result equals ``run_phased_static(g, sources[i],
     criterion=criterion)`` exactly (same float ops in the same phase
@@ -874,7 +979,7 @@ def run_phased_static_batch(
     cap = int(max_phases) if max_phases is not None else g.n + 1
     state = init_batch_state(
         g, src_np, criterion=criterion, dist_true=dist_true,
-        trace_len=trace_len,
+        trace_len=trace_len, telemetry=telemetry,
     )
     state = step_batch(
         g, state, cap, ell=ell, use_pallas=use_pallas, ell_out=ell_out

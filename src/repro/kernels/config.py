@@ -19,6 +19,10 @@ place that decides how a kernel actually executes:
     once per resident graph shape and every later engine build reads the
     ledger. :func:`autotune_slicing` does the same for degree-sliced ELL
     bucket boundaries (see ``repro.core.graph.to_ell_in_sliced``).
+  * **launch timing** — :func:`measure_launch` is the one timed-kernel-call
+    primitive: every measured repetition lands in the default metrics
+    registry (``kernel.launch.<kind>`` histograms, see ``repro.obs``) as
+    well as feeding the ledger entries the autotuner writes.
 
 Tuning changes only *how* a reduction is tiled, never its value: f32
 min-reductions are exact for any association order, so every choice this
@@ -30,10 +34,12 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
 from typing import Callable
 
 import jax
+
+from repro.obs import timer as obs_timer
+from repro.obs.registry import default_registry
 
 # Candidate row-tile sizes. All are multiples of the 128-lane TPU vector
 # width, which the fused two-sweep kernels additionally rely on to keep the
@@ -260,15 +266,35 @@ def resolve_block(n: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _time_call(fn: Callable[[], jax.Array], reps: int) -> float:
+def measure_launch(kind: str, fn: Callable[[], jax.Array],
+                   reps: int = 3) -> float:
+    """Time one warmed kernel call and publish every repetition.
+
+    Returns the median wall seconds of ``reps`` blocked executions of
+    ``fn`` (first call warms/compiles, untimed). Each repetition is
+    observed into the default registry's ``kernel.launch.<kind>``
+    histogram — the continuous launch-latency view the obs dashboard
+    renders — so both the autotuner's ledger entries *and* ad-hoc
+    measurement share one sink.
+    """
     jax.block_until_ready(fn())  # compile / warm
+    hist = default_registry().histogram(
+        f"kernel.launch.{kind}", f"wall seconds per {kind!r} kernel launch"
+    )
     walls = []
     for _ in range(reps):
-        t0 = time.perf_counter()
+        t0 = obs_timer.now()
         jax.block_until_ready(fn())
-        walls.append(time.perf_counter() - t0)
+        wall = obs_timer.now() - t0
+        walls.append(wall)
+        hist.observe(wall)
     walls.sort()
     return walls[len(walls) // 2]
+
+
+def _time_call(fn: Callable[[], jax.Array], reps: int,
+               kind: str = "untagged") -> float:
+    return measure_launch(kind, fn, reps)
 
 
 def autotune_block_rows(
@@ -297,7 +323,7 @@ def autotune_block_rows(
     best: tuple[float, int] | None = None
     measured = {}
     for r in feasible_block_rows(n, d_pad, b, vecs, outs):
-        wall = _time_call(make_call(r), reps)
+        wall = _time_call(make_call(r), reps, kind=kind)
         measured[str(r)] = wall
         if best is None or wall < best[0]:
             best = (wall, r)
@@ -329,7 +355,7 @@ def autotune_slicing(
     best: tuple[float, tuple[int, ...] | None] | None = None
     measured = {}
     for bset in boundary_sets:
-        wall = _time_call(make_call(bset), reps)
+        wall = _time_call(make_call(bset), reps, kind=f"slicing.{side}")
         measured["padded" if bset is None else str(list(bset))] = wall
         if best is None or wall < best[0]:
             best = (wall, bset)

@@ -7,7 +7,6 @@ device mesh (vertex-partitioned, INSTATIC|OUTSTATIC criteria).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -16,6 +15,7 @@ from repro.core import dijkstra_numpy
 from repro.core.distributed import run_distributed
 from repro.graphs import uniform_gnp
 from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.obs.timer import Stopwatch
 
 
 def main():
@@ -33,10 +33,10 @@ def main():
     mesh = make_production_mesh() if ndev >= 256 else make_host_mesh(tp=1)
     axes = tuple(mesh.axis_names)
     print(f"mesh {dict(mesh.shape)}; schedule={args.schedule}")
-    t0 = time.perf_counter()
-    dist, phases = run_distributed(g, mesh, axes, 0, schedule=args.schedule)
-    np.asarray(dist)
-    print(f"n={g.n}: {int(phases)} phases in {time.perf_counter()-t0:.2f}s "
+    with Stopwatch() as sw:
+        dist, phases = run_distributed(g, mesh, axes, 0, schedule=args.schedule)
+        np.asarray(dist)
+    print(f"n={g.n}: {int(phases)} phases in {sw.elapsed:.2f}s "
           f"(incl. compile)")
     if args.verify:
         ref = dijkstra_numpy(g, 0)

@@ -1,0 +1,94 @@
+"""Unified observability layer: metrics registry, span tracer, timer.
+
+One substrate for every measurement the repo makes (DESIGN.md Sec. 11):
+
+  * :mod:`repro.obs.registry` — counters / gauges / histograms with exact
+    lifetime aggregates plus bounded percentile windows; JSON snapshots and
+    Prometheus text exposition.
+  * :mod:`repro.obs.tracer` — span tracer emitting Chrome trace-event JSON
+    (open a captured file in Perfetto); near-zero cost when disabled.
+  * :mod:`repro.obs.timer` — the single blessed wall-clock API (the
+    ``raw-timer`` lint rule keeps ``perf_counter`` calls from creeping back
+    into benchmarks and engines).
+  * :mod:`repro.obs.telemetry` — decode the steppers' device-side trace
+    rings into per-phase :class:`PhaseTelemetry` records with
+    per-criterion settle attribution.
+
+``python -m repro.obs`` validates/normalises trace files and renders a
+text dashboard from a captured registry snapshot.
+
+:class:`Observability` is the handle the serving layer takes: a registry +
+tracer pair. ``Observability.disabled()`` is safe to plumb through hot
+loops — every recording call no-ops on one attribute check.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.obs import timer
+from repro.obs.registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_registry,
+    set_default_registry,
+)
+from repro.obs.telemetry import (
+    PhaseTelemetry,
+    attribution_terms,
+    phase_telemetry,
+    publish_phase_telemetry,
+    trace_phase_telemetry,
+)
+from repro.obs.tracer import (
+    NULL_TRACER,
+    Tracer,
+    load_trace,
+    validate_events,
+    validate_trace_file,
+)
+
+
+@dataclasses.dataclass
+class Observability:
+    """Registry + tracer bundle, the injection point for instrumented code."""
+
+    registry: MetricsRegistry
+    tracer: Tracer
+
+    @classmethod
+    def enabled(cls, clock=timer.now, max_events: int | None = None,
+                registry: MetricsRegistry | None = None) -> "Observability":
+        return cls(
+            registry=MetricsRegistry() if registry is None else registry,
+            tracer=Tracer(enabled=True, clock=clock, max_events=max_events),
+        )
+
+    @classmethod
+    def disabled(cls) -> "Observability":
+        """A no-op bundle: metrics land in a throwaway registry, the tracer
+        records nothing — the shape hot loops can keep plumbed through."""
+        return cls(registry=MetricsRegistry(), tracer=NULL_TRACER)
+
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_TRACER",
+    "Observability",
+    "PhaseTelemetry",
+    "Tracer",
+    "attribution_terms",
+    "default_registry",
+    "load_trace",
+    "phase_telemetry",
+    "publish_phase_telemetry",
+    "set_default_registry",
+    "timer",
+    "trace_phase_telemetry",
+    "validate_events",
+    "validate_trace_file",
+]

@@ -1,0 +1,156 @@
+"""Per-phase engine telemetry harvested from device-side trace rings.
+
+The stepper's trace rings (``BatchState.settled_trace`` and — with
+``telemetry=True`` — ``fringe_trace`` / ``relax_trace`` / ``attr_trace``)
+are written *on device*, one slot per phase, with no host sync in the loop;
+this module is the host-side decoder that turns a harvested state into
+:class:`PhaseTelemetry` records and publishes them into a registry/tracer.
+
+Attribution semantics: each settled vertex is credited to exactly **one**
+member of the criterion plan — the first member, in the plan's canonical
+term order (:func:`attribution_terms`), whose settle mask proves it. A
+vertex proven by both ``in`` and ``out`` therefore counts once, toward
+``in``: attribution is a partition of the settled set, so the per-term
+counts sum *exactly* to ``settled_per_phase`` — the reconciliation
+invariant ``benchmarks/bench_obs.py`` asserts bit-exactly. Bare-``oracle``
+plans carry one extra ``dijk_fallback`` slot for vertices settled by the
+f32-tolerance progress guard.
+
+This is what makes the paper's phase-count wins *explainable*: for
+``in|out`` vs ``instatic|outstatic`` you can now see per phase which side
+of the disjunction did the settling, not just that phases got fewer.
+
+(Imports of ``repro.core`` are deferred into the functions: the kernels
+config layer imports ``repro.obs`` while ``repro.core.static_engine`` is
+itself mid-import, so a module-level core import here would be a cycle.)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseTelemetry:
+    """One engine phase of one lane, fully decoded.
+
+    ``attribution`` maps criterion member name -> vertices that member
+    settled this phase (empty dict when the state carried no attribution
+    ring); its values always sum to ``settled``.
+    """
+
+    lane: int
+    phase: int  # 0-based phase index within the lane's current query
+    fringe: int  # |F| at phase entry
+    settled: int  # vertices settled this phase
+    relax_edges: int  # out-edges relaxed this phase (settled out-degrees)
+    attribution: dict[str, int]
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def attribution_terms(criterion: str) -> tuple[str, ...]:
+    """The criterion's attribution slot names, in recorded order."""
+    from repro.core import criteria as C
+
+    return C.attribution_terms(C.plan_for(criterion))
+
+
+def _ring_rows(state) -> tuple[np.ndarray, np.ndarray, int]:
+    phases = np.asarray(state.phases)
+    settled = np.asarray(state.settled_trace)
+    trace_len = settled.shape[1]
+    return phases, settled, trace_len
+
+
+def phase_telemetry(state, lanes=None) -> list[PhaseTelemetry]:
+    """Decode a telemetry-enabled ``BatchState`` into per-phase records.
+
+    Requires a state built with ``init_batch_state(..., telemetry=True)``
+    and a ring long enough that no live lane wrapped it (``trace_len >=``
+    the lane's phase count) — a wrapped ring has overwritten the early
+    phases, and decoding it as a profile would be the fake-profile hazard
+    the ``trace_len=1 -> None`` convention exists to prevent. ``lanes``
+    restricts decoding to a subset (default: all).
+    """
+    if getattr(state, "attr_trace", None) is None:
+        raise ValueError(
+            "state carries no telemetry rings — build it with "
+            "init_batch_state(..., telemetry=True, trace_len>=expected phases)"
+        )
+    phases, settled, trace_len = _ring_rows(state)
+    fringe = np.asarray(state.fringe_trace)
+    relax = np.asarray(state.relax_trace)
+    attr = np.asarray(state.attr_trace)  # (B, trace_len, T)
+    terms = attribution_terms(state.criterion)
+    out: list[PhaseTelemetry] = []
+    for lane in range(phases.shape[0]) if lanes is None else lanes:
+        p = int(phases[lane])
+        if p > trace_len:
+            raise ValueError(
+                f"lane {lane} ran {p} phases but the ring holds only "
+                f"{trace_len} — early phases were overwritten; re-run with "
+                f"trace_len >= {p}"
+            )
+        for ph in range(p):
+            out.append(PhaseTelemetry(
+                lane=lane,
+                phase=ph,
+                fringe=int(fringe[lane, ph]),
+                settled=int(settled[lane, ph]),
+                relax_edges=int(relax[lane, ph]),
+                attribution={
+                    t: int(attr[lane, ph, k]) for k, t in enumerate(terms)
+                },
+            ))
+    return out
+
+
+def publish_phase_telemetry(records, registry, prefix: str = "engine") -> None:
+    """Fold phase records into a registry: per-phase histograms
+    (``engine.phase.fringe`` / ``.settled`` / ``.relax_edges``), the total
+    phase counter, and one counter per attribution term
+    (``engine.settled.<term>``) — the continuous view the ROADMAP's
+    portfolio selector will consult."""
+    h_fringe = registry.histogram(f"{prefix}.phase.fringe",
+                                  "fringe size |F| per phase")
+    h_settled = registry.histogram(f"{prefix}.phase.settled",
+                                   "vertices settled per phase")
+    h_relax = registry.histogram(f"{prefix}.phase.relax_edges",
+                                 "out-edges relaxed per phase")
+    c_phases = registry.counter(f"{prefix}.phases", "engine phases executed")
+    for rec in records:
+        h_fringe.observe(rec.fringe)
+        h_settled.observe(rec.settled)
+        h_relax.observe(rec.relax_edges)
+        c_phases.inc()
+        for term, count in rec.attribution.items():
+            registry.counter(
+                f"{prefix}.settled.{term}",
+                f"vertices settled by criterion member {term!r}",
+            ).inc(count)
+
+
+def trace_phase_telemetry(records, tracer, lane_prefix: str = "engine lane",
+                          us_per_phase: float = 1000.0) -> None:
+    """Render phase records as synthetic trace spans (one row per lane,
+    one fixed-width slice per phase, counters for fringe/settled) so a
+    harvested profile can be eyeballed in Perfetto even though the device
+    loop has no per-phase host timestamps."""
+    if not tracer.enabled:
+        return
+    for rec in records:
+        tid = f"lane {rec.lane}"
+        tracer.name_thread(tid, f"{lane_prefix} {rec.lane}")
+        t0 = rec.phase * us_per_phase
+        ev = {
+            "ph": "X", "name": f"phase {rec.phase}", "cat": "phase",
+            "pid": tracer.pid, "tid": tid, "ts": t0, "dur": us_per_phase,
+            "args": {
+                "fringe": rec.fringe, "settled": rec.settled,
+                "relax_edges": rec.relax_edges, **rec.attribution,
+            },
+        }
+        tracer._emit(ev)  # synthetic timestamps bypass the wall clock

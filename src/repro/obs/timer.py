@@ -1,0 +1,72 @@
+"""The repo's one wall-clock API: every timing measurement funnels here.
+
+Scattered ``time.perf_counter()`` pairs are how benchmark timing drifts —
+warm-up policy, repeat count, and median-vs-mean end up differing per file
+until two "wall_s" numbers stop being comparable. This module is the single
+blessed raw-timer site (the ``repro.analysis`` lint's ``raw-timer`` rule
+flags ``perf_counter`` calls anywhere outside ``repro/obs/``), so every
+benchmark, autotuner measurement, and serving timestamp reports through one
+code path with one policy.
+
+``timed`` keeps the exact signature the benchmarks historically shared
+(median wall over ``repeats`` + last result); :class:`Stopwatch` covers the
+start/stop sites; :func:`now` is the raw monotonic clock for code that
+stamps events (the serving scheduler's injectable default).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def now() -> float:
+    """Monotonic wall-clock timestamp in seconds (``perf_counter``)."""
+    return time.perf_counter()
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """Median wall time (s) over ``repeats`` calls + last result.
+
+    No implicit warm-up: callers that need a compile paid before measuring
+    (kernel autotuning) run one call themselves — see
+    ``repro.kernels.config.measure_launch``.
+    """
+    ts, out = [], None
+    for _ in range(repeats):
+        t0 = now()
+        out = fn(*args, **kw)
+        ts.append(now() - t0)
+    return float(np.median(ts)), out
+
+
+class Stopwatch:
+    """Context manager measuring one block: ``elapsed`` in seconds.
+
+    ::
+
+        with Stopwatch() as sw:
+            work()
+        print(sw.elapsed)
+
+    Readable mid-block too (``sw.elapsed`` before exit returns the running
+    elapsed time), which is what the benchmark drive loops use for their
+    progress lines.
+    """
+
+    def __init__(self):
+        self._t0: float | None = None
+        self._t1: float | None = None
+
+    def __enter__(self) -> "Stopwatch":
+        self._t0 = now()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._t1 = now()
+
+    @property
+    def elapsed(self) -> float:
+        if self._t0 is None:
+            return 0.0
+        return (now() if self._t1 is None else self._t1) - self._t0

@@ -7,8 +7,18 @@ per-step occupancy samples (how many of the B lanes held a query while the
 engine advanced). ``report()`` distils both into a flat JSON-serialisable
 dict — the artifact the benchmarks persist and dashboards would scrape.
 
-Counters that are *counts* stay ints and latencies stay floats end to end;
-percentiles come from numpy over the retained per-request records.
+Exactness discipline (the bug class PR 7 closed): every *aggregate* the
+report exposes — counts, rates, means, maxima — is maintained exactly for
+the lifetime of the instance; the bounded deques exist **only** to serve
+percentiles, and anything computed from them says so in its name. A
+windowed deque that wraps forgets the true max, and a rate whose
+denominator mixes populations (cache hits vs coalesced followers vs
+engine-served queries) reports a number that answers no question.
+
+Pass ``registry=`` (a :class:`repro.obs.MetricsRegistry`) to additionally
+stream every event into the shared observability registry
+(``serving.latency_s`` histograms, ``serving.completed`` counters, ...) so
+a live dashboard and the end-of-run report read the same data.
 """
 from __future__ import annotations
 
@@ -29,23 +39,57 @@ def _pct(xs, q) -> float:
 class ServingMetrics:
     """Aggregates completion and occupancy events into a serving report."""
 
-    def __init__(self, lanes: int, window: int = 65536):
+    def __init__(self, lanes: int, window: int = 65536, registry=None):
         self.lanes = int(lanes)
         self.completed = 0
         self.cache_hits = 0
         self.coalesced = 0
+        self.engine_served = 0  # completions that ran on an engine lane
         self.total_phases = 0  # engine phases attributed to completed queries
         self.steps = 0
         self.engine_trips = 0  # loop trips actually executed across steps
         self._busy_lane_trips = 0
         self._lane_trips = 0
+        # exact lifetime aggregates: a wrapped window must never change
+        # what the report calls a mean or a max
+        self._phases_max = 0
+        self._latency_sum = 0.0
+        self._latency_max = 0.0
+        self._queue_wait_sum = 0.0
+        self._queue_wait_max = 0.0
         # percentile windows are bounded so a long-lived server cannot grow
-        # host memory per request; aggregates above stay exact forever
+        # host memory per request; they serve ONLY the _p50/_p99 keys
         self._latencies: deque[float] = deque(maxlen=window)
         self._queue_waits: deque[float] = deque(maxlen=window)
         self._phases: deque[int] = deque(maxlen=window)  # engine-served only
         self._t_first_arrival: float | None = None
         self._t_last_completion: float | None = None
+        self._registry = registry
+        if registry is not None:
+            self._h_latency = registry.histogram(
+                "serving.latency_s", "request latency, arrival to completion"
+            )
+            self._h_wait = registry.histogram(
+                "serving.queue_wait_s", "queue wait before a lane was assigned"
+            )
+            self._h_phases = registry.histogram(
+                "serving.phases_per_query", "engine phases per served query"
+            )
+            self._c_done = registry.counter(
+                "serving.completed", "requests completed (all paths)"
+            )
+            self._c_hits = registry.counter(
+                "serving.cache_hits", "requests answered from the result cache"
+            )
+            self._c_coal = registry.counter(
+                "serving.coalesced", "requests coalesced onto an in-flight query"
+            )
+            self._c_trips = registry.counter(
+                "serving.engine_trips", "engine loop trips executed"
+            )
+            self._g_busy = registry.gauge(
+                "serving.busy_lanes", "lanes holding a live query at last step"
+            )
 
     def record_completion(self, req: Request) -> None:
         self.completed += 1
@@ -54,14 +98,31 @@ class ServingMetrics:
         elif req.coalesced:
             self.coalesced += 1
         else:
-            self._phases.append(int(req.phases or 0))
-            self.total_phases += int(req.phases or 0)
+            self.engine_served += 1
+            phases = int(req.phases or 0)
+            self._phases.append(phases)
+            self.total_phases += phases
+            self._phases_max = max(self._phases_max, phases)
+            if self._registry is not None:
+                self._h_phases.observe(phases)
         self._latencies.append(req.latency)
+        self._latency_sum += req.latency
+        self._latency_max = max(self._latency_max, req.latency)
         self._queue_waits.append(req.queue_wait)
+        self._queue_wait_sum += req.queue_wait
+        self._queue_wait_max = max(self._queue_wait_max, req.queue_wait)
         if self._t_first_arrival is None or req.t_arrival < self._t_first_arrival:
             self._t_first_arrival = req.t_arrival
         if self._t_last_completion is None or req.t_completed > self._t_last_completion:
             self._t_last_completion = req.t_completed
+        if self._registry is not None:
+            self._c_done.inc()
+            if req.cache_hit:
+                self._c_hits.inc()
+            elif req.coalesced:
+                self._c_coal.inc()
+            self._h_latency.observe(req.latency)
+            self._h_wait.observe(req.queue_wait)
 
     def record_step(self, busy_lanes: int, trips_advanced: int) -> None:
         # occupancy is trip-weighted: a 1-trip chunk (early lane finish) must
@@ -70,6 +131,9 @@ class ServingMetrics:
         self.engine_trips += int(trips_advanced)
         self._busy_lane_trips += int(busy_lanes) * int(trips_advanced)
         self._lane_trips += self.lanes * int(trips_advanced)
+        if self._registry is not None:
+            self._c_trips.inc(int(trips_advanced))
+            self._g_busy.set(int(busy_lanes))
 
     @property
     def wall_span(self) -> float:
@@ -79,27 +143,42 @@ class ServingMetrics:
         return self._t_last_completion - self._t_first_arrival
 
     def report(self) -> dict:
-        """Flat JSON-serialisable summary of the serving run so far."""
+        """Flat JSON-serialisable summary of the serving run so far.
+
+        Rates partition cleanly: ``cache_hit_rate`` is cache hits over the
+        requests that *could* have hit the cache (hits + engine-served —
+        a coalesced follower never consulted it, it attached to a query
+        already in flight), and ``coalesce_rate`` is followers over all
+        completions. Means and maxima are exact over the full lifetime;
+        only the ``_p50``/``_p99`` keys read the bounded windows.
+        """
         span = self.wall_span
         occ = self._busy_lane_trips / self._lane_trips if self._lane_trips else 0.0
+        cacheable = self.cache_hits + self.engine_served
         return {
             "lanes": self.lanes,
             "queries_completed": self.completed,
             "cache_hits": self.cache_hits,
             "coalesced": self.coalesced,
-            "cache_hit_rate": (self.cache_hits / self.completed
-                               if self.completed else 0.0),
+            "engine_served": self.engine_served,
+            "cache_hit_rate": (self.cache_hits / cacheable
+                               if cacheable else 0.0),
+            "coalesce_rate": (self.coalesced / self.completed
+                              if self.completed else 0.0),
             "throughput_qps": self.completed / span if span > 0 else 0.0,
             "latency_p50_s": _pct(self._latencies, 50),
             "latency_p99_s": _pct(self._latencies, 99),
-            "latency_mean_s": (float(np.mean(self._latencies))
-                               if self._latencies else 0.0),
-            "latency_max_s": float(max(self._latencies)) if self._latencies else 0.0,
+            "latency_mean_s": (self._latency_sum / self.completed
+                               if self.completed else 0.0),
+            "latency_max_s": self._latency_max,
             "queue_wait_p50_s": _pct(self._queue_waits, 50),
             "queue_wait_p99_s": _pct(self._queue_waits, 99),
-            "phases_per_query_mean": (float(np.mean(self._phases))
-                                      if self._phases else 0.0),
-            "phases_per_query_max": int(max(self._phases)) if self._phases else 0,
+            "queue_wait_mean_s": (self._queue_wait_sum / self.completed
+                                  if self.completed else 0.0),
+            "queue_wait_max_s": self._queue_wait_max,
+            "phases_per_query_mean": (self.total_phases / self.engine_served
+                                      if self.engine_served else 0.0),
+            "phases_per_query_max": self._phases_max,
             "lane_occupancy": occ,
             "steps": self.steps,
             "engine_trips": self.engine_trips,

@@ -32,7 +32,6 @@ interleave (pinned by ``tests/test_serving.py``).
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 
 import jax
@@ -40,6 +39,7 @@ import numpy as np
 
 from repro.core.graph import Graph
 from repro.core.static_engine import KEEP_LANE
+from repro.obs import NULL_TRACER, Observability, timer
 from repro.serving.backends import EngineBackend, StaticBackend
 from repro.serving.cache import DistCache, graph_key
 from repro.serving.metrics import ServingMetrics
@@ -95,6 +95,14 @@ class ContinuousBatcher:
       donate: buffer-donation override. Default (None) donates on
         accelerator backends only (CPU ignores donation); tests force True
         to pin the copy-before-donate discipline.
+      obs: optional :class:`repro.obs.Observability` bundle. When given,
+        serving metrics additionally stream into its registry
+        (``serving.*`` counters/gauges/histograms) and its tracer records
+        the serving timeline: one thread row per lane carrying each
+        query's occupancy span (B/E), per-round ``step`` spans, admission
+        instants, and queue-depth/busy-lane counter tracks — export with
+        ``obs.tracer.export(path)`` and open in Perfetto. Default None:
+        no tracer, no registry traffic, byte-identical scheduling.
     """
 
     def __init__(
@@ -105,11 +113,12 @@ class ContinuousBatcher:
         ell=None,
         use_pallas: bool = True,
         cache: DistCache | None = None,
-        clock=time.perf_counter,
+        clock=timer.now,
         retain_completed: int | None = 1024,
         backend: EngineBackend | None = None,
         donate: bool | None = None,
         criterion: str | None = None,
+        obs: Observability | None = None,
     ):
         if lanes < 1:
             raise ValueError(f"lanes must be >= 1; got {lanes}")
@@ -139,7 +148,16 @@ class ContinuousBatcher:
         self._gkey = graph_key(g) if cache is not None else None
         self.clock = clock
         self.queue = ArrivalQueue()
-        self.metrics = ServingMetrics(lanes)
+        self.obs = obs
+        self._tracer = NULL_TRACER if obs is None else obs.tracer
+        self.metrics = ServingMetrics(
+            lanes, registry=None if obs is None else obs.registry
+        )
+        self._g_queue = (
+            None if obs is None
+            else obs.registry.gauge("serving.queue_depth",
+                                    "engine-bound requests waiting for a lane")
+        )
         self.state = backend.init(self.lanes)
         # the scheduler is the sole owner of the engine state (harvested rows
         # are copied to host before the next engine call), so donation is
@@ -228,6 +246,8 @@ class ContinuousBatcher:
                 self.completed.append(req)
                 self.metrics.record_completion(req)
                 served.append(req)
+                self._tracer.instant(f"cache hit src {req.source}",
+                                     cat="request", tid="scheduler")
                 continue
             if self.cache is not None and req.source in self._inflight:
                 # a lane is already solving this source: ride along instead
@@ -252,6 +272,11 @@ class ContinuousBatcher:
                 req.t_admitted = now
                 req.lane = lane
                 self._lane_req[lane] = req
+                if self._tracer.enabled:
+                    tid = f"lane {lane}"
+                    self._tracer.name_thread(tid, f"serving lane {lane}")
+                    self._tracer.begin(f"src {req.source}", cat="request",
+                                       tid=tid, source=req.source)
                 if self.cache is not None:
                     # _inflight backs coalescing, which needs the cache's
                     # source-per-lane uniqueness invariant — without a cache
@@ -291,6 +316,12 @@ class ContinuousBatcher:
         """
         done = self._admit()
         busy = self.busy_lanes
+        if self._tracer.enabled:
+            self._tracer.counter("scheduler load", {
+                "queue_depth": self.pending, "busy_lanes": busy,
+            })
+        if self._g_queue is not None:
+            self._g_queue.set(self.pending)
         if not busy:
             # cache-hit-only round (or empty server): no live lanes means
             # the engine would execute zero trips — skip the dispatch and
@@ -298,11 +329,12 @@ class ContinuousBatcher:
             self.metrics.record_step(0, 0)
             return done
         trips_before = self._trips
-        self.state = self.backend.step(
-            self.state, self.phases_per_step, stop_on_lane_finish=True,
-            donate=self._donate,
-        )
-        trips, active, phases = self.backend.peek(self.state)  # one host sync
+        with self._tracer.span("step", cat="step", tid="scheduler", busy=busy):
+            self.state = self.backend.step(
+                self.state, self.phases_per_step, stop_on_lane_finish=True,
+                donate=self._donate,
+            )
+            trips, active, phases = self.backend.peek(self.state)  # host sync
         self._trips += (trips - self._trips_dev) % (1 << 32)  # wrap-safe
         self._trips_dev = trips
         finished = [
@@ -327,6 +359,8 @@ class ContinuousBatcher:
                 self.completed.append(req)
                 self.metrics.record_completion(req)
                 done.append(req)
+                self._tracer.end(f"src {req.source}", cat="request",
+                                 tid=f"lane {lane}", phases=int(phases[lane]))
                 for f in self._followers.pop(lane, ()):
                     f.t_completed = now
                     f.phases = 0

@@ -252,6 +252,27 @@ def test_lint_donate_reuse():
     assert lint_source(ok, "src/repro/serving/foo.py") == []
 
 
+def test_lint_raw_timer():
+    src = ("import time\n"
+           "def f():\n"
+           "    t0 = time.perf_counter()\n"
+           "    return time.perf_counter() - t0\n")
+    bad = lint_source(src, "benchmarks/foo.py")
+    assert [f.rule for f in bad] == ["raw-timer", "raw-timer"]
+    # the obs package is the one blessed raw-timer site
+    assert lint_source(src, "src/repro/obs/timer.py") == []
+    # bare-name calls (from time import perf_counter) are caught too
+    bare = ("from time import perf_counter\n"
+            "def f():\n"
+            "    return perf_counter()\n")
+    assert [f.rule for f in lint_source(bare, "src/repro/core/foo.py")] \
+        == ["raw-timer"]
+    # pragma opt-out
+    ok = ("import time\n"
+          "t = time.perf_counter()  # repro: allow(raw-timer)\n")
+    assert lint_source(ok, "benchmarks/foo.py") == []
+
+
 def test_shipped_tree_is_lint_clean():
     import pathlib
 
