@@ -3,7 +3,12 @@ criteria (Kainer & Traeff 2019 / Crauser et al. 1998), plus the Delta-stepping
 baseline and reference oracles."""
 from repro.core.criteria import REGISTRY as CRITERIA
 from repro.core.criteria import CritPlan, canonical, plan_for
-from repro.core.delta_stepping import DeltaResult, default_delta, run_delta_stepping
+from repro.core.delta_stepping import (
+    DeltaResult,
+    default_delta,
+    run_delta,
+    run_delta_stepping,
+)
 from repro.core.graph import (
     Graph,
     from_coo,
@@ -14,6 +19,13 @@ from repro.core.graph import (
 )
 from repro.core.oracle import bellman_ford_jnp, dijkstra_numpy
 from repro.core.phased import PhasedResult, run_phased
+from repro.core.policies import (
+    CriterionPolicy,
+    DeltaPolicy,
+    PhasePolicy,
+    canonical_spec,
+    policy_for,
+)
 from repro.core.static_engine import (
     DEFAULT_CRITERION,
     EMPTY_LANE,
@@ -35,6 +47,11 @@ __all__ = [
     "CritPlan",
     "plan_for",
     "canonical",
+    "PhasePolicy",
+    "CriterionPolicy",
+    "DeltaPolicy",
+    "policy_for",
+    "canonical_spec",
     "DEFAULT_CRITERION",
     "to_ell_out",
     "Graph",
@@ -57,6 +74,7 @@ __all__ = [
     "lanes_active",
     "harvest",
     "run_delta_stepping",
+    "run_delta",
     "DeltaResult",
     "default_delta",
     "dijkstra_numpy",

@@ -141,10 +141,35 @@ def _run(g: Graph, source, delta, max_phases: int):
 def run_delta_stepping(
     g: Graph, source: int = 0, delta: float | None = None, max_phases: int | None = None
 ) -> DeltaResult:
+    """Solve one SSSP query by host-scheduled delta-stepping.
+
+    Validation mirrors :func:`run_phased_static`: graphs built outside
+    :func:`~repro.core.graph.from_coo` can smuggle NaN/-inf weights or
+    negative costs, which would silently poison the min-plus reductions,
+    and a bad source would read as an all-inf solve rather than an error.
+    """
+    w = np.asarray(g.w)
+    if np.any(w < 0):
+        raise ValueError("edge costs must be non-negative")
+    if np.any(~np.isfinite(w) & ~(w == np.inf)):
+        raise ValueError(
+            "edge costs must be finite (or +inf for padding); got NaN/-inf"
+        )
+    if not 0 <= int(source) < g.n:
+        raise ValueError(f"source must be in [0, {g.n}); got {source}")
     if delta is None:
         delta = default_delta(g)
+    if not (np.isfinite(delta) and delta > 0):
+        raise ValueError(
+            f"delta must be a positive finite bucket width; got {delta}"
+        )
     cap = int(max_phases) if max_phases is not None else 4 * g.n + 16
     tent, phases, buckets, w_lo, w_hi = _run(
         g, jnp.int32(source), jnp.float32(delta), cap
     )
     return DeltaResult(tent, phases, buckets, _combine_work(w_lo, w_hi))
+
+
+# canonical short name (matches the ``"delta"`` policy spec); the long name
+# stays for existing callers
+run_delta = run_delta_stepping

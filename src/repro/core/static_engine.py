@@ -84,6 +84,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import criteria as C
+from repro.core import policies as P
 from repro.core.graph import (
     Graph,
     out_degrees,
@@ -93,7 +94,6 @@ from repro.core.graph import (
     to_ell_out_sliced,
 )
 from repro.core.phased import PhasedResult
-from repro.kernels import ops as kops
 
 INF = jnp.inf
 
@@ -128,7 +128,7 @@ def combine_limbs(lo, hi) -> np.ndarray:
         "dist", "status", "trips", "phases", "sum_fringe", "sum_fringe_hi",
         "relax_edges", "relax_edges_hi",
         "out_deg", "crit_keys", "keys_valid", "dist_true", "settled_trace",
-        "fringe_trace", "relax_trace", "attr_trace",
+        "fringe_trace", "relax_trace", "attr_trace", "delta",
     ],
     meta_fields=["criterion"],
 )
@@ -159,13 +159,15 @@ class BatchState:
     #   auditor's counter pass exists to flag
     relax_edges_hi: jax.Array  # (B,) int32: high limb
     out_deg: jax.Array  # (n,) int32: graph out-degrees (carried for counters)
-    crit_keys: jax.Array | None  # (K_dyn, B, n) f32 dynamic criterion keys
-    #   (ordered like the plan's ``keys``), or None for all-static plans.
-    #   Out-side slots hold the last executed phase's values (recomputed
-    #   in-phase, never read stale); in-side slots hold the keys for the
-    #   CURRENT status — emitted by the previous phase's fused in-scan, or
-    #   re-primed by step_batch when ``keys_valid`` is False (bitwise equal
-    #   either way: f32 min is exact).
+    crit_keys: jax.Array | None  # (K, B, n) f32 policy-owned carried stack,
+    #   or None when the policy carries none. CriterionPolicy: the plan's
+    #   dynamic keys (ordered like ``plan.keys``) — out-side slots hold the
+    #   last executed phase's values (recomputed in-phase, never read
+    #   stale); in-side slots hold the keys for the CURRENT status —
+    #   emitted by the previous phase's fused in-scan, or re-primed by
+    #   step_batch when ``keys_valid`` is False (bitwise equal either way:
+    #   f32 min is exact). DeltaPolicy: slot 0 = last_processed tentative,
+    #   slot 1 = removed-from-bucket flag (see repro.core.policies).
     keys_valid: jax.Array | None  # scalar bool: in-side slots of crit_keys
     #   match the current status. False after init/reset (admission touches
     #   status without scanning the adjacency); None when the plan carries
@@ -187,7 +189,12 @@ class BatchState:
     #   this phase settled that criteria.attribution_terms(plan)[k] proved
     #   FIRST (first-true in canonical member order) — a partition of the
     #   settled set, so summing over k reproduces settled_trace exactly
-    criterion: str  # canonical criterion string; static: selects the plan
+    delta: jax.Array | None  # scalar f32 bucket width, only on DeltaPolicy
+    #   states (pure data: every bucket width shares one compiled program);
+    #   None on criterion-policy states
+    criterion: str  # canonical policy spec; static: selects the compiled
+    #   phase policy (criterion string -> CriterionPolicy, "delta" ->
+    #   DeltaPolicy — see repro.core.policies)
 
     @property
     def num_lanes(self) -> int:
@@ -198,7 +205,12 @@ class BatchState:
         return self.dist.shape[1]
 
     @property
+    def policy(self) -> P.PhasePolicy:
+        return P.policy_for(self.criterion)
+
+    @property
     def plan(self) -> C.CritPlan:
+        """The compiled criterion plan (criterion-policy states only)."""
         return C.plan_for(self.criterion)
 
 
@@ -282,16 +294,16 @@ def _fresh_rows(sources, n: int):
 
 @partial(jax.jit, static_argnames=("criterion", "trace_len", "telemetry"))
 def _init_state(g: Graph, out_deg: jax.Array, sources: jax.Array, dist_true,
-                criterion: str, trace_len: int,
+                delta, criterion: str, trace_len: int,
                 telemetry: bool = False) -> BatchState:
-    plan = C.plan_for(criterion)
+    policy = P.policy_for(criterion)
     n = g.n
     b = sources.shape[0]
     d0, status0 = _fresh_rows(sources, n)
     zeros_b = jnp.zeros((b,), jnp.int32)
     zeros_b_u = jnp.zeros((b,), jnp.uint32)
     ring = jnp.zeros((b, trace_len), jnp.int32)
-    n_terms = len(C.attribution_terms(plan))
+    n_terms = len(policy.attribution_terms())
     return BatchState(
         dist=d0,
         status=status0,
@@ -303,11 +315,9 @@ def _init_state(g: Graph, out_deg: jax.Array, sources: jax.Array, dist_true,
         relax_edges_hi=zeros_b,
         out_deg=out_deg,
         crit_keys=(
-            jnp.zeros((len(plan.keys), b, n), jnp.float32) if plan.keys else None
+            policy.fresh_keys(b, n) if policy.num_key_slots() else None
         ),
-        keys_valid=(
-            jnp.asarray(False) if plan.in_scan_keys else None
-        ),
+        keys_valid=policy.init_keys_valid(),
         dist_true=dist_true,
         settled_trace=ring,
         fringe_trace=ring if telemetry else None,
@@ -316,22 +326,23 @@ def _init_state(g: Graph, out_deg: jax.Array, sources: jax.Array, dist_true,
             jnp.zeros((b, trace_len, n_terms), jnp.int32) if telemetry
             else None
         ),
+        delta=delta,
         criterion=criterion,
     )
 
 
-def _validate_dist_true(dist_true, plan: C.CritPlan, b: int, n: int):
-    """(B, n) f32 dist_true when the plan reads it, else None.
+def _validate_dist_true(dist_true, policy: P.PhasePolicy, b: int, n: int):
+    """(B, n) f32 dist_true when the policy reads it, else None.
 
-    A provided ``dist_true`` on a non-oracle plan is dropped (the reference
-    ``run_phased`` accepts-and-ignores it the same way), so callers can
-    plumb it unconditionally.
+    A provided ``dist_true`` on a non-oracle policy is dropped (the
+    reference ``run_phased`` accepts-and-ignores it the same way), so
+    callers can plumb it unconditionally.
     """
-    if not plan.needs_oracle:
+    if not policy.needs_oracle:
         return None
     if dist_true is None:
         raise ValueError(
-            f"criterion {plan.criterion!r} includes 'oracle': per-lane "
+            f"criterion {policy.spec!r} includes 'oracle': per-lane "
             f"dist_true of shape ({b}, {n}) is required"
         )
     dt = jnp.asarray(dist_true, jnp.float32)
@@ -342,6 +353,32 @@ def _validate_dist_true(dist_true, plan: C.CritPlan, b: int, n: int):
     return dt
 
 
+def _validate_delta(policy: P.PhasePolicy, g: Graph, delta):
+    """Scalar f32 bucket width for delta-policy states, else None.
+
+    Delta-stepping needs a positive finite ``delta`` (defaulting to the
+    Meyer-Sanders heuristic); criterion policies must not receive one —
+    silently ignoring it would read as "the engine used my bucket width".
+    """
+    if not policy.uses_delta:
+        if delta is not None:
+            raise ValueError(
+                f"criterion {policy.spec!r} does not take a delta bucket "
+                f"width; use criterion='delta' for delta-stepping"
+            )
+        return None
+    if delta is None:
+        from repro.core.delta_stepping import default_delta
+
+        delta = default_delta(g)
+    delta = float(delta)
+    if not (np.isfinite(delta) and delta > 0):
+        raise ValueError(
+            f"delta must be a positive finite bucket width; got {delta}"
+        )
+    return jnp.float32(delta)
+
+
 def init_batch_state(
     g: Graph,
     sources,
@@ -349,6 +386,7 @@ def init_batch_state(
     dist_true=None,
     trace_len: int = 1,
     telemetry: bool = False,
+    delta: float | None = None,
 ) -> BatchState:
     """Fresh ``(B, n)`` stepper state for B lanes over one shared graph.
 
@@ -356,12 +394,16 @@ def init_batch_state(
     all-+inf fixed point with no fringe that costs nothing per phase and can
     later be populated with :func:`reset_lane`.
 
-    ``criterion`` is any string ``run_phased`` accepts; it is canonicalised
-    and stored as static metadata on the state, selecting the compiled step
-    program. A plan containing ``'oracle'`` additionally requires per-lane
-    ``dist_true`` rows ``(B, n)``. ``trace_len`` sizes the per-lane
-    settled-per-phase ring (``>=`` expected phases records the full profile;
-    the default 1 keeps the state small).
+    ``criterion`` is any policy spec: a string ``run_phased`` accepts (a
+    criterion plan) or ``"delta"`` (delta-stepping on the same stepper —
+    see :mod:`repro.core.policies`); it is canonicalised and stored as
+    static metadata on the state, selecting the compiled step program. A
+    plan containing ``'oracle'`` additionally requires per-lane
+    ``dist_true`` rows ``(B, n)``; ``criterion="delta"`` takes the bucket
+    width ``delta`` (default: the Meyer-Sanders heuristic) as pure data.
+    ``trace_len`` sizes the per-lane settled-per-phase ring (``>=``
+    expected phases records the full profile; the default 1 keeps the
+    state small).
 
     ``telemetry=True`` additionally allocates the fringe/relax rings and the
     ``(B, trace_len, T)`` per-criterion settle-attribution ring that
@@ -369,128 +411,44 @@ def init_batch_state(
     extra rings change the pytree structure (one recompile) and add scatter
     writes per phase.
     """
-    plan = C.plan_for(criterion)
+    policy = P.policy_for(criterion)
     src_np = validate_sources(
         sources, g.n, EMPTY_LANE, f"in [0, {g.n}) or -1 for an empty lane"
     )
     if trace_len < 1:
         raise ValueError(f"trace_len must be >= 1; got {trace_len}")
-    dt = _validate_dist_true(dist_true, plan, src_np.shape[0], g.n)
+    dt = _validate_dist_true(dist_true, policy, src_np.shape[0], g.n)
+    dl = _validate_delta(policy, g, delta)
     # out-degrees memoised per Graph instance: admission (init/reset) runs
     # per query in serving, the segment-sum it used to pay does not
     return _init_state(
-        g, out_degrees(g), jnp.asarray(src_np), dt, plan.criterion,
+        g, out_degrees(g), jnp.asarray(src_np), dt, dl, policy.spec,
         int(trace_len), bool(telemetry)
     )
-
-
-def _spec_by_name(plan: C.CritPlan, name: str) -> C.KeySpec:
-    return plan.keys[[k.name for k in plan.keys].index(name)]
-
-
-def _compute_out_keys(plan: C.CritPlan, g: Graph, status, ell_out,
-                      use_pallas: bool) -> dict:
-    """The plan's out-side dynamic keys for the current status, from ONE
-    fused scan over the outgoing adjacency: name -> (B, n) f32.
-
-    Independent keys (elementwise gates) share the scan's tile loads; the
-    dependent ``out_full`` adds a second sweep inside the same launch,
-    gated by the ``out_dyn`` the first sweep produced (paper Eq. 2's
-    two-hop slack).
-    """
-    if not (plan.out_scan_keys or plan.out_scan_dep):
-        return {}
-    gates = jnp.stack([
-        C.key_gate(_spec_by_name(plan, nm), status, g.in_min_static,
-                   g.out_min_static, {})
-        for nm in plan.out_scan_keys
-    ])
-    dep_parts = None
-    names = list(plan.out_scan_keys)
-    if plan.out_scan_dep is not None:
-        spec = _spec_by_name(plan, plan.out_scan_dep)
-        dga, dgb = C.dep_gate_parts(spec, status)
-        dep_parts = (dga, dgb, plan.out_scan_keys.index(spec.aux))
-        names.append(plan.out_scan_dep)
-    keys = kops.out_scan_keys_batch(gates, dep_parts, ell_out,
-                                    use_pallas=use_pallas)
-    return {nm: keys[i] for i, nm in enumerate(names)}
-
-
-def _recompute_in_keys(plan: C.CritPlan, g: Graph, status, ell_in,
-                       use_pallas: bool) -> jax.Array:
-    """(K_in, B, n) in-side keys for the *current* status via composed
-    key-min passes — the priming path after admission; the steady state
-    carries them out of the fused in-scan instead."""
-    return jnp.stack([
-        kops.key_min_batch_any(
-            C.key_gate(_spec_by_name(plan, nm), status, g.in_min_static,
-                       g.out_min_static, {}),
-            ell_in, use_pallas=use_pallas,
-        )
-        for nm in plan.in_scan_keys
-    ])
-
-
-def _in_slot_indices(plan: C.CritPlan) -> list[int]:
-    """Positions of the in-scan keys inside the ``plan.keys`` stack."""
-    order = [k.name for k in plan.keys]
-    return [order.index(nm) for nm in plan.in_scan_keys]
-
-
-def _threshold_keys(plan: C.CritPlan, g: Graph, keys: dict, b: int):
-    """Key stack for the fused lane reduction: None (no OUT members),
-    ``(K, n)`` shared (all static — the default plan pays no per-lane key
-    traffic), or ``(K, B, n)`` per-lane (any dynamic OUT key)."""
-    if not plan.out_terms:
-        return None
-    if all(t == "static" for t in plan.out_terms):
-        return g.out_min_static[None]
-    return jnp.stack([
-        jnp.broadcast_to(g.out_min_static, (b, g.n)) if t == "static"
-        else keys[t]
-        for t in plan.out_terms
-    ])
 
 
 def _step_batch_impl(
     g: Graph, ell_in, ell_out, state: BatchState,
     k_phases, use_pallas: bool, stop_on_lane_finish: bool = False,
 ) -> BatchState:
-    plan = C.plan_for(state.criterion)
+    """The stepper chassis: policy phases inside a chunked while_loop.
+
+    The policy (selected by ``state.criterion``, static) owns the settle
+    decision and the carried ``crit_keys`` stack; the chassis owns the loop
+    condition, ring writes, and the two-limb work counters — all gated per
+    lane on ``n_fringe > 0`` so finished/empty lanes stay fixed points.
+    """
+    policy = P.policy_for(state.criterion)
     b = state.dist.shape[0]
     start = state.trips
     live0 = jnp.any(state.status == 1, axis=1)  # (B,) lanes live at entry
     trace_len = state.settled_trace.shape[1]
     rows_b = jnp.arange(b)
-    in_slots = _in_slot_indices(plan)
 
-    def relax_plain(d, settle):
-        if hasattr(ell_in, "slices"):
-            return kops.relax_settled_batch_sliced(
-                d, settle, ell_in, use_pallas=use_pallas
-            )
-        return kops.relax_settled_batch(
-            d, settle, ell_in[0], ell_in[1], use_pallas=use_pallas
-        )
-
-    if in_slots:
-        # re-prime carried in-side keys once per chunk: admission (init /
-        # reset) touches status without scanning the adjacency, so the
-        # carried slots may be stale. Recomputing equals the carried values
-        # bitwise wherever they were valid (exact min), so one cond per
-        # *chunk* — not per phase — restores the invariant the loop body
-        # relies on: crit_keys in-side slots always match s.status.
-        primed = jax.lax.cond(
-            state.keys_valid,
-            lambda: state.crit_keys,
-            lambda: state.crit_keys.at[jnp.asarray(in_slots)].set(
-                _recompute_in_keys(plan, g, state.status, ell_in, use_pallas)
-            ),
-        )
-        state = dataclasses.replace(
-            state, crit_keys=primed, keys_valid=jnp.asarray(True)
-        )
+    # once-per-chunk invariant repair (e.g. re-priming carried in-side keys
+    # after admission) + loop-invariant operands the body closes over
+    state = policy.prime(g, ell_in, state, use_pallas)
+    aux = policy.prepare(g, ell_in, ell_out, state, use_pallas)
 
     def cond(s):
         live = jnp.any(s.status == 1, axis=1)  # lanes never revive, live <= live0
@@ -502,72 +460,15 @@ def _step_batch_impl(
         return go
 
     def body(s):
-        d, status = s.dist, s.status
-        fringe = status == 1
-        # --- out-scan: every out-side dynamic key from one fused launch
-        keys = _compute_out_keys(plan, g, status, ell_out, use_pallas)
-        # in-side keys ride in from the previous phase's in-scan (or the
-        # pre-loop priming); by invariant they match the current status
-        for i, nm in zip(in_slots, plan.in_scan_keys):
-            keys[nm] = s.crit_keys[i]
-        mins, n_f = kops.crit_thresholds_batch(
-            d, status, _threshold_keys(plan, g, keys, b),
-            use_pallas=use_pallas,
-        )
-        term_masks = None
-        if s.attr_trace is not None:
-            # telemetry path: materialise each member's settle mask so the
-            # attribution ring can credit every settled vertex to the first
-            # member that proved it; the union is boolean-identical to
-            # plan_union_mask (same masks, OR'd)
-            term_masks = C.plan_term_masks(
-                plan, d, fringe, mins, keys, g.in_min_static, s.dist_true
-            )
-            settle = term_masks[0]
-            for m in term_masks[1:]:
-                settle = settle | m
-        else:
-            settle = C.plan_union_mask(
-                plan, d, fringe, mins, keys, g.in_min_static, s.dist_true
-            )
-        if plan.needs_fallback:
-            # bare-oracle plans can produce an empty mask on a non-empty
-            # fringe (f32-vs-f64 tolerance); reproduce evaluate()'s DIJK
-            # guard per lane so progress — and run_phased parity — hold
-            dijk = fringe & (d <= mins[0][:, None])
-            settle = jnp.where(
-                jnp.any(settle, axis=1, keepdims=True), settle, dijk
-            )
-        # --- in-scan: relax this phase; fused plans also emit the NEXT
-        # phase's in-side keys from the same tile loads
-        next_in = None
-        if in_slots:
-            parts = [
-                C.in_scan_gate_parts(_spec_by_name(plan, nm), status, settle,
-                                     g.in_min_static[None])
-                for nm in plan.in_scan_keys
-            ]
-            upd, next_in = kops.in_scan_relax_keys_batch(
-                d, settle, parts, ell_in, use_pallas=use_pallas
-            )
-        else:
-            upd = relax_plain(d, settle)
-        new_d = jnp.minimum(d, upd)
-        new_status = jnp.where(
-            settle, 2, jnp.where((status == 0) & (upd < INF), 1, status)
-        )
+        out = policy.phase(g, aux, s, use_pallas)
+        n_f, n_settled, relax_inc = out.n_fringe, out.n_settled, out.relax_inc
         live = (n_f > 0).astype(jnp.int32)  # finished/empty lanes stop counting
         # ring write: phase p lands in slot p % trace_len; dead lanes must
         # not write (their stuck slot may hold a wrapped live entry)
         idx = s.phases % trace_len
-        n_settled = jnp.sum(settle, axis=1, dtype=jnp.int32)
         lane_on = n_f > 0
         trace = s.settled_trace.at[rows_b, idx].set(
             jnp.where(lane_on, n_settled, s.settled_trace[rows_b, idx])
-        )
-        relax_inc = jnp.sum(
-            jnp.where(settle, s.out_deg[None], 0).astype(jnp.uint32),
-            axis=1, dtype=jnp.uint32,
         )
         fringe_trace, relax_trace, attr_trace = (
             s.fringe_trace, s.relax_trace, s.attr_trace
@@ -580,29 +481,10 @@ def _step_batch_impl(
                 jnp.where(lane_on, relax_inc.astype(jnp.int32),
                           relax_trace[rows_b, idx])
             )
-            # first-true claiming partitions the settled set over the plan's
-            # members in canonical order; a vertex proven by several members
-            # counts once, so per-term counts sum exactly to n_settled
-            claimed = jnp.zeros_like(settle)
-            attr_counts = []
-            for m in term_masks:
-                take = m & settle & ~claimed
-                attr_counts.append(jnp.sum(take, axis=1, dtype=jnp.int32))
-                claimed = claimed | take
-            if plan.needs_fallback:
-                # residual slot: vertices the DIJK progress guard settled
-                attr_counts.append(n_settled - sum(attr_counts))
-            counts = jnp.stack(attr_counts, axis=1)  # (B, T)
             attr_trace = attr_trace.at[rows_b, idx].set(
-                jnp.where(lane_on[:, None], counts, attr_trace[rows_b, idx])
+                jnp.where(lane_on[:, None], out.attr_counts,
+                          attr_trace[rows_b, idx])
             )
-        crit_keys = s.crit_keys
-        if plan.keys:
-            crit_keys = jnp.stack([
-                keys[k.name] for k in plan.keys
-            ])
-            for j, i in enumerate(in_slots):
-                crit_keys = crit_keys.at[i].set(next_in[j])
         # cumulative work counters are two-limb (u32 lo + i32 hi): summing
         # the per-phase increments in uint32 keeps even a >2^31-edge phase
         # exact, and the carry extends past 2^32
@@ -611,8 +493,8 @@ def _step_batch_impl(
         )
         re_lo, re_hi = _limb_add(s.relax_edges, s.relax_edges_hi, relax_inc)
         return BatchState(
-            dist=new_d,
-            status=new_status,
+            dist=out.dist,
+            status=out.status,
             trips=s.trips + 1,
             phases=s.phases + live,
             sum_fringe=sf_lo,
@@ -620,13 +502,14 @@ def _step_batch_impl(
             relax_edges=re_lo,
             relax_edges_hi=re_hi,
             out_deg=s.out_deg,
-            crit_keys=crit_keys,
+            crit_keys=out.crit_keys,
             keys_valid=s.keys_valid,
             dist_true=s.dist_true,
             settled_trace=trace,
             fringe_trace=fringe_trace,
             relax_trace=relax_trace,
             attr_trace=attr_trace,
+            delta=s.delta,
             criterion=s.criterion,
         )
 
@@ -659,15 +542,15 @@ def step_batch(
     as any lane that was live on entry terminates (the continuous batcher
     uses this to refill finished lanes with zero idle trips). ``k_phases`` is
     a traced operand, so varying it does not trigger recompilation; shapes
-    are fixed by ``(B, n)`` and the state's criterion plan selects the
-    compiled body (stored as static metadata, so each criterion compiles
+    are fixed by ``(B, n)`` and the state's policy spec selects the
+    compiled body (stored as static metadata, so each policy compiles
     once).
 
     ``ell``/``ell_out`` accept the padded ``(cols, ws)`` pair *or* a
     degree-sliced ``SlicedEll`` (``to_ell_in_sliced``/``to_ell_out_sliced``)
     — results are bit-identical between layouts. ``ell_out`` is built (and
-    memoised) on demand only when the plan carries OUT-side dynamic keys,
-    matching ``ell``'s layout when it must be derived.
+    memoised) on demand only when the policy needs the outgoing adjacency
+    (OUT-side dynamic keys), matching ``ell``'s layout when derived.
 
     ``donate=True`` donates the input state's buffers so accelerator
     backends update them in place rather than copying ~8·B·n bytes per
@@ -676,8 +559,8 @@ def step_batch(
     """
     if ell is None:
         ell = to_ell_in(g)
-    plan = C.plan_for(state.criterion)
-    if plan.needs_out_adjacency:
+    policy = P.policy_for(state.criterion)
+    if policy.needs_out_adjacency:
         if ell_out is None:
             ell_out = (
                 to_ell_out_sliced(g) if hasattr(ell, "slices") else to_ell_out(g)
@@ -714,7 +597,11 @@ def _reset_lanes_impl(state: BatchState, sources, new_dist_true) -> BatchState:
         out_deg=state.out_deg,
         crit_keys=(
             None if state.crit_keys is None
-            else jnp.where(touch[None, :, None], 0.0, state.crit_keys)
+            else jnp.where(
+                touch[None, :, None],
+                P.policy_for(state.criterion).fresh_keys(b, n),
+                state.crit_keys,
+            )
         ),
         # a touched lane's in-side key slots no longer match its status;
         # the next step_batch re-primes them (one composed pass) before
@@ -737,6 +624,7 @@ def _reset_lanes_impl(state: BatchState, sources, new_dist_true) -> BatchState:
             None if state.attr_trace is None
             else jnp.where(touch[:, None, None], 0, state.attr_trace)
         ),
+        delta=state.delta,
         criterion=state.criterion,
     )
 
@@ -888,20 +776,23 @@ def run_phased_static(
     trace_len: int | None = None,
     ell_out=None,
     layout: str = "padded",
+    delta: float | None = None,
 ) -> PhasedResult:
-    """Phased SSSP via the Pallas kernels (B=1 stepper), any criterion.
+    """Phased SSSP via the Pallas kernels (B=1 stepper), any policy spec.
 
     ``trace_len`` sizes the settled-per-phase ring; the default (None)
     covers the phase cap so the result carries the *full* per-phase profile
-    — every criterion settles >= 1 vertex per phase, so the ring never
-    wraps and matches ``run_phased``'s trace exactly. ``dist_true`` is the
-    (n,) true-distance row, required iff the criterion includes 'oracle'.
-    ``layout`` selects the ELL views built when none are passed ("sliced"
-    buckets rows by degree — bit-identical results, faster on skewed
-    graphs).
+    — the policy's cap bounds its phase count, so the ring never wraps
+    (criterion plans match ``run_phased``'s trace exactly). ``dist_true``
+    is the (n,) true-distance row, required iff the criterion includes
+    'oracle'. ``delta`` is the bucket width for ``criterion="delta"``
+    (default ``default_delta(g)``). ``layout`` selects the ELL views built
+    when none are passed ("sliced" buckets rows by degree — bit-identical
+    results, faster on skewed graphs).
     """
     ell, ell_out = _resolve_layout(g, ell, ell_out, layout)
-    cap = int(max_phases) if max_phases is not None else g.n + 1
+    policy = P.policy_for(criterion)
+    cap = int(max_phases) if max_phases is not None else policy.phase_cap(g.n)
     if not 0 <= int(source) < g.n:
         raise ValueError(f"source must be in [0, {g.n}); got {source}")
     if trace_len is None:
@@ -911,7 +802,7 @@ def run_phased_static(
         dt = jnp.asarray(dist_true, jnp.float32).reshape(1, g.n)
     state = init_batch_state(
         g, [int(source)], criterion=criterion, dist_true=dt,
-        trace_len=trace_len,
+        trace_len=trace_len, delta=delta,
     )
     state = step_batch(
         g, state, cap, ell=ell, use_pallas=use_pallas, ell_out=ell_out
@@ -943,6 +834,7 @@ def run_phased_static_batch(
     ell_out=None,
     layout: str = "padded",
     telemetry: bool = False,
+    delta: float | None = None,
 ) -> BatchedResult:
     """Batched phased SSSP: B sources, one graph, one phase loop.
 
@@ -954,19 +846,23 @@ def run_phased_static_batch(
         ELL build is paid once (both builders also memoise per Graph
         instance).
       use_pallas: kernels (True) vs ref.py oracles (False); bit-identical.
-      max_phases: safety cap on loop trips (default n+1: every live row
-        settles >= 1 vertex per phase, so all rows end within n phases).
+      max_phases: safety cap on loop trips (default the policy's cap:
+        criterion plans settle >= 1 vertex per phase so n+1 suffices;
+        delta-stepping uses the legacy 4n+16 light/heavy-round bound).
       criterion: any registered criterion disjunction (default the paper's
-        ``instatic|outstatic``); selects the compiled plan.
+        ``instatic|outstatic``) or ``"delta"`` for bucketed delta-stepping;
+        selects the compiled policy.
       dist_true: (B, n) per-row true distances, required iff the criterion
         includes 'oracle'.
       trace_len: settled-per-phase ring length per row (default 1 = off).
       ell_out: optional precomputed outgoing view for dynamic OUT keys.
       layout: ELL layout built when none is passed ("padded" | "sliced");
         bit-identical results either way.
-      telemetry: also record fringe/relax-edge rings and per-criterion
-        settle attribution (exposed on the result when ``trace_len > 1``);
+      telemetry: also record fringe/relax-edge rings and per-term settle
+        attribution (exposed on the result when ``trace_len > 1``);
         see :mod:`repro.obs.telemetry` for the decoder.
+      delta: bucket width for ``criterion="delta"`` (default
+        ``default_delta(g)``); rejected for criterion policies.
 
     Row ``i`` of the result equals ``run_phased_static(g, sources[i],
     criterion=criterion)`` exactly (same float ops in the same phase
@@ -976,10 +872,11 @@ def run_phased_static_batch(
     # fail loudly on any invalid id: out-of-range sources would otherwise be
     # silently dropped by the scatter (all-inf row, 0 phases)
     src_np = validate_sources(sources, g.n, 0, f"in [0, {g.n})")
-    cap = int(max_phases) if max_phases is not None else g.n + 1
+    policy = P.policy_for(criterion)
+    cap = int(max_phases) if max_phases is not None else policy.phase_cap(g.n)
     state = init_batch_state(
         g, src_np, criterion=criterion, dist_true=dist_true,
-        trace_len=trace_len, telemetry=telemetry,
+        trace_len=trace_len, telemetry=telemetry, delta=delta,
     )
     state = step_batch(
         g, state, cap, ell=ell, use_pallas=use_pallas, ell_out=ell_out

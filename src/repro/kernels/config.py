@@ -164,6 +164,62 @@ def ledger_key(kind: str, n: int, d_pad: int, b: int, lanes: int = 1) -> str:
     return f"{kernel_mode()}:{kind}:n{n}:d{d_pad}:b{b}:l{lanes}"
 
 
+def portfolio_ledger_key(family: str, b: int, policy: str, layout: str) -> str:
+    """Ledger key for one measured serving engine configuration.
+
+    Keyed by graph *family* (a degree-distribution bucket, not a concrete
+    graph), lane count, policy spec and ELL layout — the decision the
+    portfolio router makes at admission time. Unlike :func:`ledger_key`
+    these records are backend-agnostic on purpose: they store end-to-end
+    measured walls, not tile choices.
+    """
+    return f"portfolio:{family}:b{int(b)}:{policy}:{layout}"
+
+
+def record_portfolio(ledger: "TuningLedger", family: str, b: int, policy: str,
+                     layout: str, *, wall_s: float, phases: int, queries: int,
+                     delta: float | None = None,
+                     attribution: dict[str, int] | None = None) -> dict:
+    """Write one measured portfolio entry and return it.
+
+    The entry keeps the raw measurement (``wall_s`` for ``queries`` solves
+    over ``phases`` total phases) plus the derived rates the router ranks
+    by, and — when the probe ran with telemetry — the policy's
+    ``settle_attribution`` term totals, so ``repro.obs dashboard`` can
+    explain *why* a policy won (e.g. delta's light/heavy split vs a
+    criterion plan's member shares).
+    """
+    entry: dict = {
+        "wall_s": float(wall_s),
+        "phases": int(phases),
+        "queries": int(queries),
+        "per_phase_s": float(wall_s) / max(int(phases), 1),
+        "qps": float(queries) / max(float(wall_s), 1e-12),
+    }
+    if delta is not None:
+        entry["delta"] = float(delta)
+    if attribution is not None:
+        entry["settle_attribution"] = {
+            str(k): int(v) for k, v in attribution.items()
+        }
+    ledger.put(portfolio_ledger_key(family, b, policy, layout), entry)
+    return entry
+
+
+def portfolio_entries(ledger: "TuningLedger", family: str,
+                      b: int) -> dict[tuple[str, str], dict]:
+    """All recorded engine configs for one (family, lanes): (policy, layout)
+    -> entry. Policy specs may themselves contain ``:``-free member names
+    joined by ``|``, so only the final ``:`` splits policy from layout."""
+    prefix = f"portfolio:{family}:b{int(b)}:"
+    out: dict[tuple[str, str], dict] = {}
+    for key, entry in ledger.entries.items():
+        if key.startswith(prefix):
+            policy, layout = key[len(prefix):].rsplit(":", 1)
+            out[(policy, layout)] = entry
+    return out
+
+
 def slicing_ledger_key(side: str, n: int) -> str:
     """Ledger key for a graph's tuned slice boundaries.
 

@@ -274,6 +274,61 @@ def key_min_batch_any(gate, ell, **kw) -> jax.Array:
     return key_min_batch(gate, ell[0], ell[1], **kw)
 
 
+def weight_gated_ell(ell, delta):
+    """Light/heavy weight-gated twins of an adjacency view.
+
+    The Delta-stepping lowering: ``light`` keeps edge weights ``w <= delta``
+    and masks the rest to +inf (min-neutral, exactly like padding slots);
+    ``heavy`` keeps ``w > delta``. Column ids are shared with the input
+    view, so both twins ride the ordinary key-min/gather kernels unchanged
+    — the light/heavy split costs a weights-only elementwise pass, not a
+    second adjacency layout. ``delta`` may be a traced scalar: the gates
+    are data, so every bucket width shares one compiled program. Works on
+    the padded ``(cols, ws)`` pair and on ``SlicedEll`` (per-slice gating;
+    +inf padding lands in the heavy gate's +inf branch unchanged).
+    """
+    if _is_sliced(ell):
+        def gated(keep_light: bool):
+            return ell._replace(slices=tuple(
+                s._replace(ws=jnp.where((s.ws <= delta) == keep_light,
+                                        s.ws, INF))
+                for s in ell.slices
+            ))
+        return gated(True), gated(False)
+    cols, ws = ell
+    return ((cols, jnp.where(ws <= delta, ws, INF)),
+            (cols, jnp.where(ws > delta, ws, INF)))
+
+
+def delta_relax_batch(
+    d: jax.Array,  # (B, n) f32 tentative distances
+    light_from: jax.Array,  # (B, n) bool — this light round's work set
+    heavy_from: jax.Array,  # (B, n) bool — removed set on its heavy turn
+    ell_light,  # light-gated incoming view (padded pair or SlicedEll)
+    ell_heavy,  # heavy-gated incoming view (same layout)
+    *,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Delta-stepping candidate updates (B, n): the light relaxation of
+    ``light_from`` and the heavy relaxation of ``heavy_from``, min-merged.
+
+    Both sides are ordinary +inf-gated key-min scans over the
+    :func:`weight_gated_ell` twins — a lane on a light round carries an
+    empty heavy gate (and vice versa), so mixed-mode batches stay one
+    uniform program. Masking mirrors :func:`relax_settled_batch` (shared
+    padding path), so kernel and ref paths cannot drift bitwise.
+    """
+    kw = dict(block_rows=block_rows, interpret=interpret,
+              use_pallas=use_pallas)
+    upd_light = key_min_batch_any(jnp.where(light_from, d, INF), ell_light,
+                                  **kw)
+    upd_heavy = key_min_batch_any(jnp.where(heavy_from, d, INF), ell_heavy,
+                                  **kw)
+    return jnp.minimum(upd_light, upd_heavy)
+
+
 # ---------------------------------------------------------------------------
 # Fused single-scan entry points (DESIGN.md Sec. 9)
 # ---------------------------------------------------------------------------
@@ -552,6 +607,21 @@ def register_kernels(reg):
             R.SpecCase("sliced", (d, settle, gp, sl)),
         )
 
+    def cases_delta_relax():
+        delta = jnp.float32(0.5)
+        ell_l, ell_h = weight_gated_ell(R.fixture_ell(), delta)
+        sl_l, sl_h = weight_gated_ell(R.fixture_sliced(side="in"), delta)
+        d = R.fixture_rows((b, n), seed=70)
+        light_from = R.fixture_status((b, n), seed=71) == 1
+        heavy_from = R.fixture_status((b, n), seed=72) == 2
+        return (
+            R.SpecCase("padded", (d, light_from, heavy_from, ell_l, ell_h)),
+            R.SpecCase("padded_multi_tile",
+                       (d, light_from, heavy_from, ell_l, ell_h),
+                       {"block_rows": R.SMALL_BLOCK_ROWS}),
+            R.SpecCase("sliced", (d, light_from, heavy_from, sl_l, sl_h)),
+        )
+
     def cases_out_scan():
         ell = R.fixture_ell()
         sl = R.fixture_sliced(side="out")
@@ -582,6 +652,7 @@ def register_kernels(reg):
          cases_crit_thresholds, thr),
         ("key_min_batch", key_min_batch, cases_key_min, {}),
         ("key_min_batch_any", key_min_batch_any, cases_key_min_any, {}),
+        ("delta_relax_batch", delta_relax_batch, cases_delta_relax, {}),
         ("in_scan_relax_keys_batch", in_scan_relax_keys_batch,
          cases_in_scan, {"resident_outputs": (0, 1)}),
         ("out_scan_keys_batch", out_scan_keys_batch, cases_out_scan,

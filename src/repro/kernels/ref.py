@@ -210,6 +210,8 @@ def register_kernels(reg):
         ("key_min_batch", no_pallas(ops.key_min_batch, use_pallas=False)),
         ("key_min_batch_any",
          no_pallas(ops.key_min_batch_any, use_pallas=False)),
+        ("delta_relax_batch",
+         no_pallas(ops.delta_relax_batch, use_pallas=False)),
         ("in_scan_relax_keys_batch",
          no_pallas(ops.in_scan_relax_keys_batch, use_pallas=False)),
         ("out_scan_keys_batch",

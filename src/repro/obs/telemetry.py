@@ -35,9 +35,11 @@ import numpy as np
 class PhaseTelemetry:
     """One engine phase of one lane, fully decoded.
 
-    ``attribution`` maps criterion member name -> vertices that member
-    settled this phase (empty dict when the state carried no attribution
-    ring); its values always sum to ``settled``.
+    ``attribution`` maps attribution term -> count for this phase (empty
+    dict when the state carried no attribution ring). For criterion plans
+    the terms are plan members and the values sum to ``settled``; for the
+    ``"delta"`` policy they are light/heavy/bucket gauges (see
+    :func:`attribution_terms`).
     """
 
     lane: int
@@ -52,10 +54,15 @@ class PhaseTelemetry:
 
 
 def attribution_terms(criterion: str) -> tuple[str, ...]:
-    """The criterion's attribution slot names, in recorded order."""
-    from repro.core import criteria as C
+    """The policy's attribution slot names, in recorded order.
 
-    return C.attribution_terms(C.plan_for(criterion))
+    For criterion plans these partition the settled set (counts sum to
+    ``settled``); the ``"delta"`` policy instead records light-round
+    fringe size, heavy-round settle count and the active bucket id.
+    """
+    from repro.core import policies as P
+
+    return P.policy_for(criterion).attribution_terms()
 
 
 def _ring_rows(state) -> tuple[np.ndarray, np.ndarray, int]:

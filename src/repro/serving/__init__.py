@@ -6,12 +6,24 @@ saturated by refilling finished rows from an :class:`ArrivalQueue`,
 duplicate queries short-circuit through a :class:`DistCache`, and
 :class:`ServingMetrics` emits the throughput/latency report. The engine is
 pluggable behind the :class:`EngineBackend` adapter — the single-device
-static stepper (:class:`StaticBackend`, default) or the mesh-sharded
-stepper (:class:`ShardedBackend`) — with identical scheduling semantics.
+static stepper (:class:`StaticBackend`, default), the mesh-sharded
+stepper (:class:`ShardedBackend`), or :class:`PortfolioBackend`, which
+routes to the measured-best policy x layout from the tuning ledger's
+portfolio records — all with identical scheduling semantics.
 Every admitted query's distances are bit-exact vs a standalone
 ``run_phased_static`` solve.
 """
-from repro.serving.backends import EngineBackend, ShardedBackend, StaticBackend
+from repro.serving.backends import (
+    DEFAULT_CANDIDATES,
+    EngineBackend,
+    EngineCandidate,
+    PortfolioBackend,
+    ShardedBackend,
+    StaticBackend,
+    graph_family,
+    measure_portfolio,
+    pick_engine,
+)
 from repro.serving.cache import DistCache, graph_key
 from repro.serving.metrics import ServingMetrics
 from repro.serving.queue import ArrivalQueue, Request
@@ -23,6 +35,12 @@ __all__ = [
     "EngineBackend",
     "StaticBackend",
     "ShardedBackend",
+    "PortfolioBackend",
+    "EngineCandidate",
+    "DEFAULT_CANDIDATES",
+    "graph_family",
+    "measure_portfolio",
+    "pick_engine",
     "ArrivalQueue",
     "Request",
     "DistCache",

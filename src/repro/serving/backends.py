@@ -21,6 +21,7 @@ completed request's distances are bit-exact against a standalone
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Protocol, runtime_checkable
 
 import jax
@@ -28,8 +29,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import criteria as C
+from repro.core import policies as P
+from repro.core.delta_stepping import default_delta
 from repro.core.graph import (
     Graph,
+    out_degrees,
     to_ell_in,
     to_ell_in_sliced,
     to_ell_out,
@@ -41,6 +45,7 @@ from repro.core.static_engine import (
     BatchState,
     init_batch_state,
     reset_lanes,
+    run_phased_static_batch,
     step_batch,
 )
 
@@ -58,6 +63,21 @@ def _serving_plan(criterion: str) -> C.CritPlan:
             "per-query true distances up front"
         )
     return plan
+
+
+def _serving_policy(spec: str) -> P.PhasePolicy:
+    """Validate and resolve a serving policy spec (criterion or "delta").
+
+    Same oracle rejection as :func:`_serving_plan`, lifted to the policy
+    layer so delta-stepping backends pass through.
+    """
+    pol = P.policy_for(spec)
+    if pol.needs_oracle:
+        raise ValueError(
+            "serving backends cannot run the 'oracle' criterion: it requires "
+            "per-query true distances up front"
+        )
+    return pol
 
 
 @jax.jit
@@ -117,14 +137,20 @@ class StaticBackend:
     ``layout`` selects the resident adjacency views ("padded" ELL or the
     degree-sliced "sliced" layout — bit-identical results, the sliced one
     wins on skewed degree distributions); an explicit ``ell`` overrides it.
+    ``policy`` accepts any policy spec (criterion disjunction or
+    ``"delta"``) and takes precedence over ``criterion`` — the two
+    keywords exist so pre-portfolio callers keep working; ``delta`` is the
+    bucket width for the delta policy (default ``default_delta(g)``).
     Execution mode / tile sizes resolve through ``repro.kernels.config``
     (env overrides + tuning ledger), so a server process tuned at startup
     serves every later query with the tuned configuration.
     """
 
     def __init__(self, g: Graph, ell=None, use_pallas: bool = True,
-                 criterion: str = DEFAULT_CRITERION, layout: str = "padded"):
-        plan = _serving_plan(criterion)
+                 criterion: str = DEFAULT_CRITERION, layout: str = "padded",
+                 policy: str | None = None, delta: float | None = None):
+        spec = policy if policy is not None else criterion
+        pol = _serving_policy(spec)
         if layout not in ("padded", "sliced"):
             raise ValueError(
                 f"layout must be 'padded' or 'sliced'; got {layout!r}"
@@ -135,10 +161,18 @@ class StaticBackend:
             ell = to_ell_in_sliced(g) if sliced else to_ell_in(g)
         self.ell = ell
         self.ell_out = None
-        if plan.needs_out_adjacency:
+        if pol.needs_out_adjacency:
             self.ell_out = to_ell_out_sliced(g) if sliced else to_ell_out(g)
         self.use_pallas = bool(use_pallas)
-        self.criterion = plan.criterion
+        self.criterion = pol.spec
+        self.delta = None
+        if pol.uses_delta:
+            self.delta = float(delta) if delta is not None else default_delta(g)
+        elif delta is not None:
+            raise ValueError(
+                f"policy {pol.spec!r} does not take a delta bucket width; "
+                "use policy='delta' for delta-stepping"
+            )
 
     @property
     def n(self) -> int:
@@ -146,7 +180,7 @@ class StaticBackend:
 
     def init(self, lanes: int) -> BatchState:
         return init_batch_state(self.g, np.full(lanes, EMPTY_LANE, np.int32),
-                                criterion=self.criterion)
+                                criterion=self.criterion, delta=self.delta)
 
     def step(self, state, k_phases, *, stop_on_lane_finish=True, donate=False):
         return step_batch(
@@ -230,3 +264,215 @@ class ShardedBackend:
         # slice off the padding columns so consumers (cache, parity checks)
         # see the same (n,) row shape as the static backend
         return np.asarray(_take_row(state.dist, jnp.int32(lane)))[: state.n]
+
+
+# ---------------------------------------------------------------------------
+# Engine portfolio: measured policy x layout routing
+# ---------------------------------------------------------------------------
+
+
+def graph_family(g: Graph) -> str:
+    """Coarse degree-distribution bucket the portfolio ledger keys on.
+
+    ``max/mean`` out-degree >= 4 reads as a skewed (power-law-ish) graph —
+    the regime where the sliced layout and bucketed scheduling pay off —
+    everything else as flat. Two buckets is deliberately crude: the ledger
+    records *measurements*, so a family only needs to be stable enough that
+    graphs sharing it rank the candidates the same way.
+    """
+    deg = np.asarray(out_degrees(g), np.float64)
+    mean = float(deg.mean()) if deg.size else 0.0
+    if mean <= 0.0:
+        return "flat"
+    return "skew" if float(deg.max()) / mean >= 4.0 else "flat"
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCandidate:
+    """One engine configuration the portfolio may route a workload to."""
+
+    policy: str  # policy spec ("in|out", "delta", ...)
+    layout: str  # "padded" | "sliced"
+    delta: float | None = None  # bucket width override (delta policy only)
+
+    @property
+    def spec(self) -> str:
+        return P.canonical_spec(self.policy)
+
+
+DEFAULT_CANDIDATES: tuple[EngineCandidate, ...] = (
+    EngineCandidate("instatic|outstatic", "padded"),
+    EngineCandidate("in|out", "padded"),
+    EngineCandidate("in|out", "sliced"),
+    EngineCandidate("delta", "padded"),
+    EngineCandidate("delta", "sliced"),
+)
+
+
+def _attribution_totals(result, spec: str) -> dict[str, int]:
+    """Sum the harvested ``settle_attribution`` ring over lanes and phases,
+    restricted to the policy's share terms (criterion members, or
+    light/heavy for delta — the bucket-id gauge is not summable)."""
+    if result.settle_attribution is None:
+        return {}
+    pol = P.policy_for(spec)
+    terms = pol.attribution_terms()
+    share = set(pol.share_terms())
+    attr = np.asarray(result.settle_attribution)  # (B, trace_len, T)
+    return {
+        t: int(attr[:, :, k].sum())
+        for k, t in enumerate(terms)
+        if t in share
+    }
+
+
+def measure_portfolio(
+    g: Graph,
+    *,
+    lanes: int = 8,
+    candidates: tuple[EngineCandidate, ...] = DEFAULT_CANDIDATES,
+    ledger=None,
+    use_pallas: bool = True,
+    registry=None,
+    repeats: int = 2,
+) -> dict[tuple[str, str], dict]:
+    """Probe every candidate on ``g`` and record measured entries.
+
+    Each candidate solves the same ``lanes``-source batch twice: once with
+    telemetry (doubles as compile warmup; yields phase counts and the
+    policy's settle-attribution shares) and then timed without telemetry
+    (median of ``repeats``). Entries land in the tuning ledger under
+    :func:`~repro.kernels.config.portfolio_ledger_key` so later processes
+    can route without re-probing; returns (policy, layout) -> entry.
+    """
+    from repro.kernels import config as kcfg
+    from repro.obs.timer import timed
+
+    if ledger is None:
+        ledger = kcfg.global_ledger()
+    family = graph_family(g)
+    sources = (np.arange(lanes, dtype=np.int64) * 7919) % g.n
+    out: dict[tuple[str, str], dict] = {}
+    for cand in candidates:
+        spec = cand.spec
+        pol = P.policy_for(spec)
+        kw: dict = {"criterion": spec, "layout": cand.layout,
+                    "use_pallas": use_pallas}
+        if pol.uses_delta:
+            kw["delta"] = cand.delta  # None -> default_delta(g) downstream
+        probe = run_phased_static_batch(
+            g, sources, trace_len=pol.phase_cap(g.n), telemetry=True, **kw
+        )
+        jax.block_until_ready(probe.dist)
+
+        def solve(kw=kw):
+            return jax.block_until_ready(
+                run_phased_static_batch(g, sources, **kw).dist
+            )
+
+        # the telemetry probe compiled a *different* program (rings on),
+        # so warm the timed one explicitly — timed() has no implicit warmup
+        solve()
+        wall_s, _ = timed(solve, repeats=repeats)
+        entry = kcfg.record_portfolio(
+            ledger, family, lanes, spec, cand.layout,
+            wall_s=wall_s,
+            phases=int(np.asarray(probe.phases).sum()),
+            queries=lanes,
+            delta=cand.delta,
+            attribution=_attribution_totals(probe, spec),
+        )
+        out[(spec, cand.layout)] = entry
+        if registry is not None:
+            registry.gauge(
+                f"portfolio.qps.{spec}.{cand.layout}",
+                "measured queries/s for one portfolio candidate",
+            ).set(entry["qps"])
+    return out
+
+
+def pick_engine(
+    family: str,
+    lanes: int,
+    candidates: tuple[EngineCandidate, ...] = DEFAULT_CANDIDATES,
+    ledger=None,
+) -> EngineCandidate:
+    """The measured-best candidate for (family, lanes) from the ledger.
+
+    Ranks by recorded qps over the candidates that have entries; with no
+    entries at all the first candidate (the paper's default criterion) is
+    the safe fallback — routing never blocks on a probe.
+    """
+    from repro.kernels import config as kcfg
+
+    if ledger is None:
+        ledger = kcfg.global_ledger()
+    entries = kcfg.portfolio_entries(ledger, family, lanes)
+    best, best_qps = None, -1.0
+    for cand in candidates:
+        entry = entries.get((cand.spec, cand.layout))
+        if entry is not None and entry.get("qps", 0.0) > best_qps:
+            best, best_qps = cand, float(entry["qps"])
+    return best if best is not None else candidates[0]
+
+
+class PortfolioBackend:
+    """An :class:`EngineBackend` that picks its engine from the ledger.
+
+    At construction it resolves ``graph_family(g)``, consults the tuning
+    ledger's portfolio records for that (family, lanes) and instantiates
+    the measured-best policy x layout as an inner :class:`StaticBackend`
+    (``probe=True`` — or an empty ledger — runs :func:`measure_portfolio`
+    first, so the first server against a new family pays one probe and
+    every later one routes from the recorded entries). All five protocol
+    methods delegate, so the scheduler sees an ordinary backend whose
+    ``criterion`` reflects the routed policy.
+    """
+
+    def __init__(self, g: Graph, lanes_hint: int = 8,
+                 candidates: tuple[EngineCandidate, ...] = DEFAULT_CANDIDATES,
+                 ledger=None, use_pallas: bool = True, probe: bool = False,
+                 registry=None):
+        from repro.kernels import config as kcfg
+
+        if not candidates:
+            raise ValueError("candidates must be non-empty")
+        if ledger is None:
+            ledger = kcfg.global_ledger()
+        self.family = graph_family(g)
+        self.lanes_hint = int(lanes_hint)
+        if probe or not kcfg.portfolio_entries(ledger, self.family,
+                                               self.lanes_hint):
+            measure_portfolio(
+                g, lanes=self.lanes_hint, candidates=candidates,
+                ledger=ledger, use_pallas=use_pallas, registry=registry,
+            )
+        self.choice = pick_engine(self.family, self.lanes_hint, candidates,
+                                  ledger)
+        self.inner = StaticBackend(
+            g, use_pallas=use_pallas, layout=self.choice.layout,
+            policy=self.choice.policy, delta=self.choice.delta,
+        )
+        self.g = g
+        self.criterion = self.inner.criterion
+
+    @property
+    def n(self) -> int:
+        return self.inner.n
+
+    def init(self, lanes: int) -> BatchState:
+        return self.inner.init(lanes)
+
+    def step(self, state, k_phases, *, stop_on_lane_finish=True, donate=False):
+        return self.inner.step(state, k_phases,
+                               stop_on_lane_finish=stop_on_lane_finish,
+                               donate=donate)
+
+    def reset_lanes(self, state, sources, *, donate=False):
+        return self.inner.reset_lanes(state, sources, donate=donate)
+
+    def peek(self, state):
+        return self.inner.peek(state)
+
+    def take_row(self, state, lane):
+        return self.inner.take_row(state, lane)

@@ -132,9 +132,9 @@ class ContinuousBatcher:
                 "backend was built over a different Graph instance than `g`"
             )
         elif criterion is not None:
-            from repro.core.criteria import canonical
+            from repro.core.policies import canonical_spec
 
-            if canonical(criterion) != backend.criterion:
+            if canonical_spec(criterion) != backend.criterion:
                 raise ValueError(
                     f"criterion {criterion!r} disagrees with the backend's "
                     f"{backend.criterion!r}; configure the backend instead"

@@ -1,0 +1,210 @@
+"""The "delta" phase policy on the static stepper substrate.
+
+Pins, deterministically (fixed graphs/seeds — the hypothesis sweep lives in
+``test_property_sssp.py``):
+
+  * bit-exact distances AND phase counts vs the legacy host-scheduled
+    ``run_delta`` loop across bucket widths x layouts x batch sizes;
+  * input-validation parity between ``run_delta`` and the phased entry
+    points (bad weights, bad sources, bad delta);
+  * delta-state serving semantics: park/keep/refill lane resets, chunked
+    stepping, and the criterion/delta keyword contract;
+  * telemetry shape: the heavy attribution slot reconciles exactly with
+    ``settled_per_phase`` and the bucket-id slot is monotone per lane.
+"""
+import numpy as np
+import pytest
+
+from repro.core import from_coo, run_delta, run_delta_stepping
+from repro.core.delta_stepping import default_delta
+from repro.core.static_engine import (
+    EMPTY_LANE,
+    KEEP_LANE,
+    init_batch_state,
+    lanes_active,
+    reset_lanes,
+    run_phased_static,
+    run_phased_static_batch,
+    step_batch,
+)
+from repro.graphs import kronecker, uniform_gnp
+
+
+@pytest.fixture(scope="module", params=["gnp", "kron"])
+def graph(request):
+    if request.param == "gnp":
+        return uniform_gnp(96, 8.0 / 96, seed=5)
+    return kronecker(6, seed=5)
+
+
+DELTAS = [0.05, 0.35, None, 50.0]  # None -> default_delta(g)
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the legacy loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("layout", ["padded", "sliced"])
+def test_delta_policy_matches_legacy_bitwise(graph, layout):
+    g = graph
+    for delta in DELTAS:
+        dl = float(delta) if delta is not None else default_delta(g)
+        res = run_phased_static(g, 3, criterion="delta", delta=dl,
+                                layout=layout)
+        leg = run_delta(g, 3, delta=dl)
+        np.testing.assert_array_equal(np.asarray(res.dist),
+                                      np.asarray(leg.dist))
+        assert int(res.phases) == int(leg.phases)
+
+
+@pytest.mark.parametrize("layout", ["padded", "sliced"])
+@pytest.mark.parametrize("b", [1, 3, 5])
+def test_delta_policy_batch_rows_independent(graph, layout, b):
+    g = graph
+    srcs = [(7 * i + 2) % g.n for i in range(b)]
+    res = run_phased_static_batch(g, srcs, criterion="delta", layout=layout)
+    for i, s in enumerate(srcs):
+        leg = run_delta(g, s)
+        np.testing.assert_array_equal(np.asarray(res.dist[i]),
+                                      np.asarray(leg.dist))
+        assert int(res.phases[i]) == int(leg.phases)
+
+
+def test_delta_is_traced_data_not_static(graph):
+    """Two widths solve through the SAME compiled program: delta rides as
+    a data field of the state, so sweeping it cannot recompile."""
+    g = graph
+    d1 = run_phased_static(g, 0, criterion="delta", delta=0.1).dist
+    d2 = run_phased_static(g, 0, criterion="delta", delta=2.0).dist
+    # final distances are delta-independent (unique f32 fixed point)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_chunked_stepping_and_lane_reset(graph):
+    g = graph
+    state = init_batch_state(g, [1, EMPTY_LANE, 4], criterion="delta")
+    while lanes_active(state).any():
+        state = step_batch(g, state, 2)
+    for lane, s in ((0, 1), (2, 4)):
+        leg = run_delta(g, s)
+        np.testing.assert_array_equal(np.asarray(state.dist[lane]),
+                                      np.asarray(leg.dist))
+    # parked lane stayed a fixed point
+    assert not np.isfinite(np.asarray(state.dist[1])).any()
+    # refill lane 1, keep the others: bitwise a fresh solve
+    state = reset_lanes(state, np.asarray([KEEP_LANE, 9, KEEP_LANE], np.int32))
+    while lanes_active(state).any():
+        state = step_batch(g, state, 3)
+    leg = run_delta(g, 9)
+    np.testing.assert_array_equal(np.asarray(state.dist[1]),
+                                  np.asarray(leg.dist))
+    leg0 = run_delta(g, 1)
+    np.testing.assert_array_equal(np.asarray(state.dist[0]),
+                                  np.asarray(leg0.dist))
+
+
+# ---------------------------------------------------------------------------
+# validation parity (legacy entry point + phased keywords)
+# ---------------------------------------------------------------------------
+
+
+def _line_graph(w):
+    """3-vertex path with the given weights; bad values are smuggled in
+    AFTER ``from_coo`` (which rejects them at build time) — modelling a
+    Graph assembled by other means, the case the solver-level validation
+    exists for."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    g = from_coo([0, 1], [1, 2], [1.0, 1.0], 3)
+    return dataclasses.replace(g, w=jnp.asarray(np.asarray(w, np.float32)))
+
+
+def test_run_delta_rejects_nan_weights():
+    g = _line_graph([1.0, np.nan])
+    with pytest.raises(ValueError, match="NaN/-inf"):
+        run_delta(g, 0)
+
+
+def test_run_delta_rejects_neg_inf_weights():
+    g = _line_graph([1.0, -np.inf])
+    with pytest.raises(ValueError, match="non-negative|NaN/-inf"):
+        run_delta(g, 0)
+
+
+def test_run_delta_rejects_negative_weights():
+    g = _line_graph([1.0, -0.5])
+    with pytest.raises(ValueError, match="non-negative"):
+        run_delta(g, 0)
+
+
+def test_run_delta_accepts_inf_padding():
+    g = _line_graph([1.0, np.inf])
+    res = run_delta(g, 0)
+    assert float(res.dist[1]) == 1.0 and not np.isfinite(float(res.dist[2]))
+
+
+@pytest.mark.parametrize("source", [-1, 3, 100])
+def test_run_delta_rejects_bad_source(source):
+    g = _line_graph([1.0, 2.0])
+    with pytest.raises(ValueError, match="source must be in"):
+        run_delta(g, source)
+
+
+@pytest.mark.parametrize("delta", [0.0, -1.0, np.inf, np.nan])
+def test_run_delta_rejects_bad_delta(delta):
+    g = _line_graph([1.0, 2.0])
+    with pytest.raises(ValueError, match="delta must be"):
+        run_delta(g, 0, delta=delta)
+
+
+@pytest.mark.parametrize("delta", [0.0, -1.0, np.inf, np.nan])
+def test_phased_delta_policy_rejects_bad_delta(delta):
+    g = _line_graph([1.0, 2.0])
+    with pytest.raises(ValueError, match="delta must be"):
+        run_phased_static(g, 0, criterion="delta", delta=delta)
+
+
+def test_phased_criterion_rejects_delta_kwarg():
+    g = _line_graph([1.0, 2.0])
+    with pytest.raises(ValueError, match="does not take a delta"):
+        run_phased_static(g, 0, criterion="in|out", delta=0.5)
+
+
+def test_run_delta_is_run_delta_stepping():
+    assert run_delta is run_delta_stepping
+
+
+# ---------------------------------------------------------------------------
+# telemetry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_delta_telemetry_heavy_reconciles_and_buckets_monotone(graph):
+    g = graph
+    srcs = [0, g.n // 2]
+    res = run_phased_static_batch(
+        g, srcs, criterion="delta", trace_len=4 * g.n + 16, telemetry=True,
+    )
+    from repro.obs.telemetry import attribution_terms
+
+    assert attribution_terms("delta") == ("light", "heavy", "bucket")
+    attr = np.asarray(res.settle_attribution)  # (B, ring, 3)
+    settled = np.asarray(res.settled_per_phase)
+    phases = np.asarray(res.phases)
+    for lane in range(len(srcs)):
+        p = int(phases[lane])
+        # settling happens exclusively on heavy rounds, one bucket at a time
+        np.testing.assert_array_equal(attr[lane, :p, 1], settled[lane, :p])
+        heavy = attr[lane, :p, 1] > 0
+        light = attr[lane, :p, 0] > 0
+        assert np.array_equal(light, ~heavy)  # each phase is one or the other
+        # the active bucket index never goes back down
+        buckets = attr[lane, :p, 2]
+        assert (np.diff(buckets) >= 0).all()
+    # work totals: every settled vertex exactly once, phase counts = legacy
+    total = settled.sum(axis=1)
+    finite = np.isfinite(np.asarray(res.dist)).sum(axis=1)
+    np.testing.assert_array_equal(total, finite)

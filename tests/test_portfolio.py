@@ -1,0 +1,146 @@
+"""Engine-portfolio routing: ledger schema, measurement, backend delegation.
+
+The routing contract: :func:`measure_portfolio` records measured
+(policy, layout) entries per graph family in the tuning ledger,
+:func:`pick_engine` returns the recorded-qps argmax, and
+:class:`PortfolioBackend` serves through exactly that engine — bit-exact
+against standalone solves, like every other backend.
+"""
+import numpy as np
+import pytest
+
+from repro.core.static_engine import run_phased_static
+from repro.graphs import kronecker, uniform_gnp
+from repro.kernels.config import (
+    TuningLedger,
+    portfolio_entries,
+    portfolio_ledger_key,
+    record_portfolio,
+)
+from repro.serving import (
+    ContinuousBatcher,
+    EngineCandidate,
+    PortfolioBackend,
+    StaticBackend,
+    graph_family,
+    measure_portfolio,
+    pick_engine,
+)
+
+CANDS = (
+    EngineCandidate("instatic|outstatic", "padded"),
+    EngineCandidate("delta", "sliced"),
+)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return uniform_gnp(64, 8.0 / 64, seed=2)
+
+
+# ---------------------------------------------------------------------------
+# ledger schema
+# ---------------------------------------------------------------------------
+
+
+def test_portfolio_ledger_key_roundtrips_policy_with_pipe():
+    led = TuningLedger()
+    record_portfolio(led, "flat", 4, "instatic|outstatic", "padded",
+                     wall_s=0.5, phases=10, queries=4)
+    record_portfolio(led, "flat", 4, "delta", "sliced",
+                     wall_s=0.25, phases=20, queries=4, delta=0.3,
+                     attribution={"light": 7, "heavy": 5})
+    record_portfolio(led, "skew", 4, "delta", "sliced",
+                     wall_s=1.0, phases=5, queries=4)
+    got = portfolio_entries(led, "flat", 4)
+    assert set(got) == {("instatic|outstatic", "padded"), ("delta", "sliced")}
+    e = got[("delta", "sliced")]
+    assert e["qps"] == pytest.approx(16.0)
+    assert e["per_phase_s"] == pytest.approx(0.0125)
+    assert e["delta"] == pytest.approx(0.3)
+    assert e["settle_attribution"] == {"light": 7, "heavy": 5}
+    # other family / lane count never leaks in
+    assert portfolio_entries(led, "skew", 4).keys() == {("delta", "sliced")}
+    assert portfolio_entries(led, "flat", 8) == {}
+
+
+def test_portfolio_entries_survive_save_load(tmp_path):
+    led = TuningLedger()
+    record_portfolio(led, "flat", 2, "in|out", "padded",
+                     wall_s=0.1, phases=3, queries=2)
+    path = str(tmp_path / "ledger.json")
+    led.save(path)
+    led2 = TuningLedger(path)
+    key = portfolio_ledger_key("flat", 2, "in|out", "padded")
+    assert led2.get(key) == led.get(key)
+
+
+def test_graph_family_buckets():
+    assert graph_family(uniform_gnp(128, 8.0 / 128, seed=0)) == "flat"
+    assert graph_family(kronecker(7, seed=0)) == "skew"
+
+
+# ---------------------------------------------------------------------------
+# measurement + routing
+# ---------------------------------------------------------------------------
+
+
+def test_measure_then_pick_is_qps_argmax(graph):
+    led = TuningLedger()
+    entries = measure_portfolio(graph, lanes=2, candidates=CANDS, ledger=led,
+                                repeats=1)
+    assert set(entries) == {(c.spec, c.layout) for c in CANDS}
+    for entry in entries.values():
+        assert entry["qps"] > 0 and entry["phases"] > 0
+    # the delta entry carries explainable light/heavy shares
+    delta_entry = entries[("delta", "sliced")]
+    attr = delta_entry["settle_attribution"]
+    assert set(attr) == {"light", "heavy"} and attr["heavy"] > 0
+    choice = pick_engine(graph_family(graph), 2, CANDS, led)
+    best = max(entries, key=lambda k: entries[k]["qps"])
+    assert (choice.spec, choice.layout) == best
+
+
+def test_pick_engine_falls_back_to_first_candidate_on_empty_ledger():
+    choice = pick_engine("flat", 2, CANDS, TuningLedger())
+    assert choice is CANDS[0]
+
+
+def test_portfolio_backend_serves_bit_exact(graph):
+    g = graph
+    led = TuningLedger()
+    backend = PortfolioBackend(g, lanes_hint=2, candidates=CANDS, ledger=led)
+    # the empty ledger forced a probe; the routed engine is recorded
+    assert portfolio_entries(led, graph_family(g), 2)
+    server = ContinuousBatcher(g, lanes=2, backend=backend)
+    srcs = [0, 9, 17, 33]
+    for s in srcs:
+        server.submit(s)
+    done = server.drain(max_steps=10_000)
+    assert len(done) == len(srcs)
+    for req in done:
+        ref = run_phased_static(g, req.source)
+        np.testing.assert_array_equal(np.asarray(req.dist),
+                                      np.asarray(ref.dist))
+
+
+# ---------------------------------------------------------------------------
+# backend keyword contract
+# ---------------------------------------------------------------------------
+
+
+def test_static_backend_policy_keyword(graph):
+    b = StaticBackend(graph, policy="delta", layout="sliced")
+    assert b.criterion == "delta" and b.delta > 0
+    # scheduler-side spec check accepts the policy spelling
+    ContinuousBatcher(graph, lanes=2, backend=b, criterion="delta")
+
+
+def test_static_backend_rejects_delta_on_criterion_policy(graph):
+    with pytest.raises(ValueError, match="does not take a delta"):
+        StaticBackend(graph, criterion="in|out", delta=0.5)
+
+
+def test_static_backend_rejects_oracle_policy(graph):
+    with pytest.raises(ValueError, match="oracle"):
+        StaticBackend(graph, policy="oracle")
