@@ -143,7 +143,7 @@ def bench_portfolio(fams: dict, lanes: int, queries_per_family: int,
     # family, served at each engine's measured qps on that family
     fixed_walls = {}
     for cand in DEFAULT_CANDIDATES:
-        key = f"{cand.spec}:{cand.layout}"
+        key = f"{cand.ledger_policy}:{cand.layout}"
         fixed_walls[key] = sum(
             queries_per_family / measured[name][key]["qps"] for name in fams
         )
@@ -151,7 +151,7 @@ def bench_portfolio(fams: dict, lanes: int, queries_per_family: int,
               for name, g in fams.items()}
     portfolio_wall = sum(
         queries_per_family
-        / measured[name][f"{c.spec}:{c.layout}"]["qps"]
+        / measured[name][f"{c.ledger_policy}:{c.layout}"]["qps"]
         for name, c in routed.items()
     )
     best_fixed = min(fixed_walls.values())
@@ -178,14 +178,14 @@ def bench_portfolio(fams: dict, lanes: int, queries_per_family: int,
         serve()  # warmup
         wall, _ = timed(serve, repeats=max(1, reps - 1))
         served[name] = {
-            "engine": f"{routed[name].spec}:{routed[name].layout}",
+            "engine": f"{routed[name].ledger_policy}:{routed[name].layout}",
             "wall_s": wall,
             "qps": queries_per_family / wall,
         }
 
     return {
         "measured": measured,
-        "routed": {n: f"{c.spec}:{c.layout}" for n, c in routed.items()},
+        "routed": {n: f"{c.ledger_policy}:{c.layout}" for n, c in routed.items()},
         "fixed_trace_wall_s": fixed_walls,
         "portfolio_trace_wall_s": portfolio_wall,
         "served": served,

@@ -317,17 +317,44 @@ class CriterionPolicy(PhasePolicy):
             settle = jnp.where(
                 jnp.any(settle, axis=1, keepdims=True), settle, dijk
             )
+        # --- goal-directed pruning bound (target lanes only): the target's
+        # current tentative distance. Settled sources at or beyond it can
+        # never improve tent(target) (non-negative f32 adds are monotone
+        # and the bound never drops below the target's final distance), so
+        # the gated relax variants drop them from the scans — the settle
+        # DECISION above is untouched, only the relax work shrinks. The
+        # branch is structural: target-free states trace the exact
+        # pre-target program.
+        bound = None
+        if s.target is not None:
+            b_rows = jnp.arange(b)
+            tcol = jnp.clip(s.target, 0, d.shape[1] - 1)
+            bound = jnp.where(s.target >= 0, d[b_rows, tcol], INF)
+            relax_from = settle & (d < bound[:, None])
+        else:
+            relax_from = settle
         # --- in-scan: relax this phase; fused plans also emit the NEXT
         # phase's in-side keys from the same tile loads
         next_in = None
         if in_slots:
+            # key gates come from the FULL settle mask (they encode the
+            # post-settle status, which pruning does not change)
             parts = [
                 C.in_scan_gate_parts(_spec_by_name(plan, nm), status, settle,
                                      g.in_min_static[None])
                 for nm in plan.in_scan_keys
             ]
-            upd, next_in = kops.in_scan_relax_keys_batch(
-                d, settle, parts, ell_in, use_pallas=use_pallas
+            if bound is not None:
+                upd, next_in = kops.in_scan_relax_keys_gated_batch(
+                    d, settle, bound, parts, ell_in, use_pallas=use_pallas
+                )
+            else:
+                upd, next_in = kops.in_scan_relax_keys_batch(
+                    d, settle, parts, ell_in, use_pallas=use_pallas
+                )
+        elif bound is not None:
+            upd = kops.relax_settled_gated_batch(
+                d, settle, bound, ell_in, use_pallas=use_pallas
             )
         elif kops._is_sliced(ell_in):
             upd = kops.relax_settled_batch_sliced(
@@ -343,7 +370,7 @@ class CriterionPolicy(PhasePolicy):
         )
         n_settled = jnp.sum(settle, axis=1, dtype=jnp.int32)
         relax_inc = jnp.sum(
-            jnp.where(settle, s.out_deg[None], 0).astype(jnp.uint32),
+            jnp.where(relax_from, s.out_deg[None], 0).astype(jnp.uint32),
             axis=1, dtype=jnp.uint32,
         )
         attr_counts = None

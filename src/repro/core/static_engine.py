@@ -128,7 +128,7 @@ def combine_limbs(lo, hi) -> np.ndarray:
         "dist", "status", "trips", "phases", "sum_fringe", "sum_fringe_hi",
         "relax_edges", "relax_edges_hi",
         "out_deg", "crit_keys", "keys_valid", "dist_true", "settled_trace",
-        "fringe_trace", "relax_trace", "attr_trace", "delta",
+        "fringe_trace", "relax_trace", "attr_trace", "delta", "target",
     ],
     meta_fields=["criterion"],
 )
@@ -192,6 +192,15 @@ class BatchState:
     delta: jax.Array | None  # scalar f32 bucket width, only on DeltaPolicy
     #   states (pure data: every bucket width shares one compiled program);
     #   None on criterion-policy states
+    target: jax.Array | None  # (B,) int32 per-lane target vertex for s->t
+    #   queries (-1 = full solve), or None when the state was initialised
+    #   without target lanes. Pytree-STRUCTURAL like the telemetry rings:
+    #   target=None states keep the exact pre-target pytree (and therefore
+    #   the exact compiled programs). When present, a lane's fringe is
+    #   demoted the phase its target settles (early exit) and the criterion
+    #   policies prune relax sources at ``tent >= dist[target]`` — so only
+    #   ``dist[lane, target[lane]]`` (plus every vertex nearer than it) is
+    #   guaranteed final on a target lane; the rest of the row is partial.
     criterion: str  # canonical policy spec; static: selects the compiled
     #   phase policy (criterion string -> CriterionPolicy, "delta" ->
     #   DeltaPolicy — see repro.core.policies)
@@ -219,7 +228,7 @@ class BatchState:
     data_fields=[
         "dist", "status", "phases", "sum_fringe", "relax_edges", "total_phases",
         "settled_per_phase", "fringe_per_phase", "relax_per_phase",
-        "settle_attribution",
+        "settle_attribution", "target",
     ],
     meta_fields=[],
 )
@@ -246,6 +255,9 @@ class BatchedResult:
     settle_attribution: jax.Array | None = None  # (B, trace_len, T) int32
     #   per-criterion settle attribution ring (BatchState.attr_trace), only
     #   with telemetry; T indexes criteria.attribution_terms(plan)
+    target: jax.Array | None = None  # (B,) int32 per-lane target vertex
+    #   (-1 = full solve), only from target-enabled states: on a target
+    #   lane only dist[lane, target[lane]] (and nearer vertices) is final
 
 
 def validate_sources(sources, n: int, lo: int, range_desc: str,
@@ -294,7 +306,7 @@ def _fresh_rows(sources, n: int):
 
 @partial(jax.jit, static_argnames=("criterion", "trace_len", "telemetry"))
 def _init_state(g: Graph, out_deg: jax.Array, sources: jax.Array, dist_true,
-                delta, criterion: str, trace_len: int,
+                delta, targets, criterion: str, trace_len: int,
                 telemetry: bool = False) -> BatchState:
     policy = P.policy_for(criterion)
     n = g.n
@@ -327,8 +339,22 @@ def _init_state(g: Graph, out_deg: jax.Array, sources: jax.Array, dist_true,
             else None
         ),
         delta=delta,
+        target=targets,
         criterion=criterion,
     )
+
+
+def _validate_targets(targets, b: int, n: int):
+    """(B,) int32 target vector (or None): each entry a vertex id for an
+    s->t lane or -1 for a full solve. Reuses the source gatekeeper — the
+    same silent-wrong-answer hazards (wrapping ids, bad shapes) apply."""
+    if targets is None:
+        return None
+    t_np = validate_sources(
+        targets, n, EMPTY_LANE, f"in [0, {n}) or -1 for a full-solve lane",
+        expect_lanes=b,
+    )
+    return jnp.asarray(t_np)
 
 
 def _validate_dist_true(dist_true, policy: P.PhasePolicy, b: int, n: int):
@@ -387,6 +413,7 @@ def init_batch_state(
     trace_len: int = 1,
     telemetry: bool = False,
     delta: float | None = None,
+    targets=None,
 ) -> BatchState:
     """Fresh ``(B, n)`` stepper state for B lanes over one shared graph.
 
@@ -410,6 +437,15 @@ def init_batch_state(
     :func:`repro.obs.telemetry.phase_telemetry` decodes. Off by default: the
     extra rings change the pytree structure (one recompile) and add scatter
     writes per phase.
+
+    ``targets`` enables per-lane s->t queries: a ``(B,)`` int vector where
+    entry ``i`` is lane ``i``'s target vertex (-1 = ordinary full solve).
+    Like the telemetry rings it is pytree-structural — the default None
+    keeps the state (and every compiled program touching it) bit-identical
+    to a target-free build. On a target lane the stepper exits as soon as
+    the target settles and the criterion policies prune relax work beyond
+    ``dist[target]``, so only the target's distance (and every vertex that
+    settles nearer) is guaranteed on that lane's harvested row.
     """
     policy = P.policy_for(criterion)
     src_np = validate_sources(
@@ -419,10 +455,11 @@ def init_batch_state(
         raise ValueError(f"trace_len must be >= 1; got {trace_len}")
     dt = _validate_dist_true(dist_true, policy, src_np.shape[0], g.n)
     dl = _validate_delta(policy, g, delta)
+    tg = _validate_targets(targets, src_np.shape[0], g.n)
     # out-degrees memoised per Graph instance: admission (init/reset) runs
     # per query in serving, the segment-sum it used to pay does not
     return _init_state(
-        g, out_degrees(g), jnp.asarray(src_np), dt, dl, policy.spec,
+        g, out_degrees(g), jnp.asarray(src_np), dt, dl, tg, policy.spec,
         int(trace_len), bool(telemetry)
     )
 
@@ -462,6 +499,21 @@ def _step_batch_impl(
     def body(s):
         out = policy.phase(g, aux, s, use_pallas)
         n_f, n_settled, relax_inc = out.n_fringe, out.n_settled, out.relax_inc
+        new_status = out.status
+        if s.target is not None:
+            # target-aware early exit: the phase a lane's target settles,
+            # its answer dist[target] is final under the active criterion
+            # (a settled vertex never updates again), so the remaining
+            # fringe is demoted and the lane becomes a fixed point. Every
+            # done-lane consumer — the cond below, stop_on_lane_finish,
+            # lanes_active, the serving peek — already reads "no fringe",
+            # so the exit rides the existing chunking unchanged. The phase
+            # itself still counts (the lane was live through it).
+            tcol = jnp.clip(s.target, 0, s.dist.shape[1] - 1)
+            hit = (s.target >= 0) & (new_status[rows_b, tcol] == 2)
+            new_status = jnp.where(
+                hit[:, None] & (new_status == 1), 0, new_status
+            )
         live = (n_f > 0).astype(jnp.int32)  # finished/empty lanes stop counting
         # ring write: phase p lands in slot p % trace_len; dead lanes must
         # not write (their stuck slot may hold a wrapped live entry)
@@ -494,7 +546,7 @@ def _step_batch_impl(
         re_lo, re_hi = _limb_add(s.relax_edges, s.relax_edges_hi, relax_inc)
         return BatchState(
             dist=out.dist,
-            status=out.status,
+            status=new_status,
             trips=s.trips + 1,
             phases=s.phases + live,
             sum_fringe=sf_lo,
@@ -510,6 +562,7 @@ def _step_batch_impl(
             relax_trace=relax_trace,
             attr_trace=attr_trace,
             delta=s.delta,
+            target=s.target,
             criterion=s.criterion,
         )
 
@@ -574,7 +627,8 @@ def step_batch(
     )
 
 
-def _reset_lanes_impl(state: BatchState, sources, new_dist_true) -> BatchState:
+def _reset_lanes_impl(state: BatchState, sources, new_dist_true,
+                      new_targets=None) -> BatchState:
     b, n = state.dist.shape
     touch = sources >= EMPTY_LANE  # KEEP_LANE rows pass through unchanged
     fresh_d, fresh_s = _fresh_rows(sources, n)
@@ -585,6 +639,13 @@ def _reset_lanes_impl(state: BatchState, sources, new_dist_true) -> BatchState:
     dist_true = state.dist_true
     if dist_true is not None and new_dist_true is not None:
         dist_true = jnp.where(touch[:, None], new_dist_true, dist_true)
+    target = state.target
+    if target is not None:
+        # touched lanes take their new target (default -1 = full solve);
+        # KEEP_LANE rows keep theirs — in-flight s->t queries unaffected
+        fresh_t = (jnp.full((b,), EMPTY_LANE, jnp.int32)
+                   if new_targets is None else new_targets)
+        target = jnp.where(touch, fresh_t, target)
     return BatchState(
         dist=jnp.where(touch[:, None], fresh_d, state.dist),
         status=jnp.where(touch[:, None], fresh_s, state.status),
@@ -625,14 +686,18 @@ def _reset_lanes_impl(state: BatchState, sources, new_dist_true) -> BatchState:
             else jnp.where(touch[:, None, None], 0, state.attr_trace)
         ),
         delta=state.delta,
+        target=target,
         criterion=state.criterion,
     )
 
 
-def _reset_lane_impl(state: BatchState, lane, source) -> BatchState:
+def _reset_lane_impl(state: BatchState, lane, source, target) -> BatchState:
     b = state.dist.shape[0]
     vec = jnp.full((b,), KEEP_LANE, jnp.int32).at[lane].set(source)
-    return _reset_lanes_impl(state, vec, None)
+    tvec = None
+    if state.target is not None:
+        tvec = jnp.full((b,), EMPTY_LANE, jnp.int32).at[lane].set(target)
+    return _reset_lanes_impl(state, vec, None, tvec)
 
 
 _reset_lane = jax.jit(_reset_lane_impl)
@@ -644,7 +709,7 @@ _reset_lanes_donate = jax.jit(_reset_lanes_impl, donate_argnums=(0,))
 
 
 def reset_lanes(state: BatchState, sources, donate: bool = False,
-                dist_true=None) -> BatchState:
+                dist_true=None, targets=None) -> BatchState:
     """Re-initialise several lanes in one device call.
 
     ``sources`` is a ``(B,)`` int vector aligned with the lanes: entry
@@ -657,12 +722,25 @@ def reset_lanes(state: BatchState, sources, donate: bool = False,
     On an oracle-plan state, refilling a lane with a real source requires
     fresh per-lane ``dist_true`` rows ``(B, n)`` (touched rows replace the
     stored ones); parking/keeping lanes does not.
+
+    On a target-enabled state (``init_batch_state(..., targets=...)``),
+    ``targets`` optionally assigns each *touched* lane its new target
+    vertex (-1 = full solve, the default when omitted); KEEP_LANE rows
+    keep their current target. A target-free state rejects ``targets`` —
+    the field is pytree-structural and cannot appear mid-flight.
     """
     src_np = validate_sources(
         sources, state.n, KEEP_LANE,
         f"in [0, {state.n}), -1 (park) or -2 (keep)",
         expect_lanes=state.num_lanes,
     )
+    if targets is not None and state.target is None:
+        raise ValueError(
+            "state was initialised without target lanes; pass "
+            "init_batch_state(..., targets=...) to enable s->t queries "
+            "(the target field is pytree-structural)"
+        )
+    tg = _validate_targets(targets, state.num_lanes, state.n)
     dt = None
     if state.dist_true is not None:
         if dist_true is None and (src_np >= 0).any():
@@ -681,11 +759,12 @@ def reset_lanes(state: BatchState, sources, donate: bool = False,
             f"criterion {state.criterion!r} does not read dist_true"
         )
     fn = _reset_lanes_donate if donate else _reset_lanes
-    return fn(state, jnp.asarray(src_np), dt)
+    return fn(state, jnp.asarray(src_np), dt, tg)
 
 
 def reset_lane(
-    state: BatchState, lane: int, source: int = EMPTY_LANE, donate: bool = False
+    state: BatchState, lane: int, source: int = EMPTY_LANE,
+    donate: bool = False, target: int = EMPTY_LANE,
 ) -> BatchState:
     """Re-initialise one lane's ``(n,)`` slice for a new query (or park it).
 
@@ -708,8 +787,18 @@ def reset_lane(
             "criterion includes 'oracle': use reset_lanes(..., dist_true=...) "
             "to refill a lane with its true-distance row"
         )
+    if target != EMPTY_LANE:
+        if state.target is None:
+            raise ValueError(
+                "state was initialised without target lanes; pass "
+                "init_batch_state(..., targets=...) to enable s->t queries"
+            )
+        if not EMPTY_LANE <= target < state.n:
+            raise ValueError(
+                f"target must be in [0, {state.n}) or -1; got {target}"
+            )
     fn = _reset_lane_donate if donate else _reset_lane
-    return fn(state, jnp.int32(lane), jnp.int32(source))
+    return fn(state, jnp.int32(lane), jnp.int32(source), jnp.int32(target))
 
 
 def lanes_active(state: BatchState) -> np.ndarray:
@@ -746,6 +835,7 @@ def harvest(state: BatchState) -> BatchedResult:
         fringe_per_phase=ring(state.fringe_trace),
         relax_per_phase=ring(state.relax_trace),
         settle_attribution=ring(state.attr_trace),
+        target=state.target,
     )
 
 
@@ -777,6 +867,7 @@ def run_phased_static(
     ell_out=None,
     layout: str = "padded",
     delta: float | None = None,
+    target: int | None = None,
 ) -> PhasedResult:
     """Phased SSSP via the Pallas kernels (B=1 stepper), any policy spec.
 
@@ -789,6 +880,11 @@ def run_phased_static(
     (default ``default_delta(g)``). ``layout`` selects the ELL views built
     when none are passed ("sliced" buckets rows by degree — bit-identical
     results, faster on skewed graphs).
+
+    ``target`` turns the run into an s->t query: the loop exits the phase
+    the target settles (with goal-directed pruning on criterion plans), so
+    only ``dist[target]`` — bit-exact against the full solve — and the
+    vertices that settled before it are guaranteed on the returned row.
     """
     ell, ell_out = _resolve_layout(g, ell, ell_out, layout)
     policy = P.policy_for(criterion)
@@ -803,6 +899,7 @@ def run_phased_static(
     state = init_batch_state(
         g, [int(source)], criterion=criterion, dist_true=dt,
         trace_len=trace_len, delta=delta,
+        targets=None if target is None else [int(target)],
     )
     state = step_batch(
         g, state, cap, ell=ell, use_pallas=use_pallas, ell_out=ell_out
@@ -835,6 +932,7 @@ def run_phased_static_batch(
     layout: str = "padded",
     telemetry: bool = False,
     delta: float | None = None,
+    targets=None,
 ) -> BatchedResult:
     """Batched phased SSSP: B sources, one graph, one phase loop.
 
@@ -863,6 +961,10 @@ def run_phased_static_batch(
         see :mod:`repro.obs.telemetry` for the decoder.
       delta: bucket width for ``criterion="delta"`` (default
         ``default_delta(g)``); rejected for criterion policies.
+      targets: optional (B,) per-lane target vertices (-1 = full solve):
+        target lanes early-exit (and prune, on criterion plans) the phase
+        their target settles — only ``dist[i, targets[i]]`` is guaranteed
+        on those rows, bit-exact against the full solve.
 
     Row ``i`` of the result equals ``run_phased_static(g, sources[i],
     criterion=criterion)`` exactly (same float ops in the same phase
@@ -877,6 +979,7 @@ def run_phased_static_batch(
     state = init_batch_state(
         g, src_np, criterion=criterion, dist_true=dist_true,
         trace_len=trace_len, telemetry=telemetry, delta=delta,
+        targets=targets,
     )
     state = step_batch(
         g, state, cap, ell=ell, use_pallas=use_pallas, ell_out=ell_out

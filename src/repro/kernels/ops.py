@@ -330,6 +330,74 @@ def delta_relax_batch(
 
 
 # ---------------------------------------------------------------------------
+# Goal-directed (bound-gated) variants: s->t pruning (DESIGN.md Sec. 13)
+# ---------------------------------------------------------------------------
+
+
+def _bound_gate(d: jax.Array, settle_mask: jax.Array,
+                bound: jax.Array) -> jax.Array:
+    """Prune relax sources at or beyond the lane's target bound.
+
+    ``bound`` is (B,) f32 — the target's current tentative distance (+inf
+    on full-solve lanes, which makes the gate a per-lane no-op). A settled
+    vertex with ``d >= bound`` can only emit updates ``>= bound`` (f32 add
+    of a non-negative weight is monotone), and ``bound`` never rises below
+    the target's final distance, so dropping these sources can never
+    change ``dist[target]`` — the correctness argument DESIGN.md Sec. 13
+    spells out. The ``>=`` edge is safe: equality at the bound implies the
+    target's tentative already equals its final distance.
+    """
+    return settle_mask & (d < bound[:, None])
+
+
+def relax_settled_gated_batch(
+    d: jax.Array,  # (B, n) f32 tentative distances
+    settle_mask: jax.Array,  # (B, n) bool — vertices settled this phase
+    bound: jax.Array,  # (B,) f32 per-lane pruning bound (+inf = off)
+    ell,  # (cols, ws) padded ELL or SlicedEll — incoming adjacency
+    *,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Goal-directed twin of :func:`relax_settled_batch` (either layout):
+    settled sources at or beyond ``bound`` are masked out of the scan."""
+    gated = _bound_gate(d, settle_mask, bound)
+    kw = dict(block_rows=block_rows, interpret=interpret,
+              use_pallas=use_pallas)
+    if _is_sliced(ell):
+        return relax_settled_batch_sliced(d, gated, ell, **kw)
+    return relax_settled_batch(d, gated, ell[0], ell[1], **kw)
+
+
+def in_scan_relax_keys_gated_batch(
+    d: jax.Array,  # (B, n) f32 tentative distances
+    settle_mask: jax.Array,  # (B, n) bool — vertices settled this phase
+    bound: jax.Array,  # (B,) f32 per-lane pruning bound (+inf = off)
+    gate_parts,  # tuple of (ga, gb, gc) triples, one per in-scan key
+    ell,  # (cols, ws) padded ELL or SlicedEll — incoming adjacency
+    *,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+):
+    """Goal-directed twin of :func:`in_scan_relax_keys_batch`.
+
+    Only the RELAX side is bound-gated; the key gates (built by the caller
+    from the full post-settle status) pass through untouched, and the
+    fused kernel's ``fin(upd)`` fringe-entry term then reflects the pruned
+    update — so the emitted keys stay bitwise what re-deriving them from
+    the pruned state's status would give (the carried-key invariant the
+    stepper's priming relies on survives pruning unchanged).
+    """
+    gated = _bound_gate(d, settle_mask, bound)
+    return in_scan_relax_keys_batch(
+        d, gated, gate_parts, ell, block_rows=block_rows,
+        interpret=interpret, use_pallas=use_pallas,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Fused single-scan entry points (DESIGN.md Sec. 9)
 # ---------------------------------------------------------------------------
 
@@ -622,6 +690,34 @@ def register_kernels(reg):
             R.SpecCase("sliced", (d, light_from, heavy_from, sl_l, sl_h)),
         )
 
+    def cases_relax_gated():
+        ell = R.fixture_ell()
+        sl = R.fixture_sliced(side="in")
+        d = R.fixture_rows((b, n), seed=80)
+        settle = R.fixture_status((b, n), seed=81) == 1
+        # mix of active bounds and +inf (full-solve) lanes
+        bound = R.fixture_rows((b,), seed=82, inf_frac=0.4)
+        return (
+            R.SpecCase("padded", (d, settle, bound, ell)),
+            R.SpecCase("padded_multi_tile", (d, settle, bound, ell),
+                       {"block_rows": R.SMALL_BLOCK_ROWS}),
+            R.SpecCase("sliced", (d, settle, bound, sl)),
+        )
+
+    def cases_in_scan_gated():
+        ell = R.fixture_ell()
+        sl = R.fixture_sliced(side="in")
+        d = R.fixture_rows((b, n), seed=83)
+        settle = R.fixture_status((b, n), seed=84) == 1
+        bound = R.fixture_rows((b,), seed=85, inf_frac=0.4)
+        gp = _gate_parts(86)
+        return (
+            R.SpecCase("fused", (d, settle, bound, gp, ell)),
+            R.SpecCase("split", (d, settle, bound, gp, ell),
+                       {"block_rows": R.SMALL_BLOCK_ROWS}),
+            R.SpecCase("sliced", (d, settle, bound, gp, sl)),
+        )
+
     def cases_out_scan():
         ell = R.fixture_ell()
         sl = R.fixture_sliced(side="out")
@@ -653,6 +749,10 @@ def register_kernels(reg):
         ("key_min_batch", key_min_batch, cases_key_min, {}),
         ("key_min_batch_any", key_min_batch_any, cases_key_min_any, {}),
         ("delta_relax_batch", delta_relax_batch, cases_delta_relax, {}),
+        ("relax_settled_gated_batch", relax_settled_gated_batch,
+         cases_relax_gated, {}),
+        ("in_scan_relax_keys_gated_batch", in_scan_relax_keys_gated_batch,
+         cases_in_scan_gated, {"resident_outputs": (0, 1)}),
         ("in_scan_relax_keys_batch", in_scan_relax_keys_batch,
          cases_in_scan, {"resident_outputs": (0, 1)}),
         ("out_scan_keys_batch", out_scan_keys_batch, cases_out_scan,

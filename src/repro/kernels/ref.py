@@ -212,6 +212,10 @@ def register_kernels(reg):
          no_pallas(ops.key_min_batch_any, use_pallas=False)),
         ("delta_relax_batch",
          no_pallas(ops.delta_relax_batch, use_pallas=False)),
+        ("relax_settled_gated_batch",
+         no_pallas(ops.relax_settled_gated_batch, use_pallas=False)),
+        ("in_scan_relax_keys_gated_batch",
+         no_pallas(ops.in_scan_relax_keys_gated_batch, use_pallas=False)),
         ("in_scan_relax_keys_batch",
          no_pallas(ops.in_scan_relax_keys_batch, use_pallas=False)),
         ("out_scan_keys_batch",

@@ -13,7 +13,13 @@ Subcommands:
   * ``dashboard REPORT`` — render a registry snapshot JSON (from
     ``MetricsRegistry.to_json()``) as a text dashboard: counters/gauges as
     aligned key-values, histograms as exact aggregates + windowed
-    percentiles with a unicode spark-bar over p50/p90/p99/max.
+    percentiles with a unicode spark-bar over p50/p90/p99/max. A saved
+    tuning ledger (or any JSON carrying ``portfolio:...`` keys) instead
+    renders the portfolio view: per graph family, each candidate engine's
+    routed win rate over the recorded lane counts, measured qps, its
+    ``settle_attribution`` shares, and each share's drift from that
+    engine's fleet-wide mean — the "why did this family route there"
+    answer at a glance.
 """
 from __future__ import annotations
 
@@ -114,13 +120,106 @@ def render_dashboard(report: dict, out=None) -> None:
         line("(empty report)")
 
 
+def _parse_portfolio(entries: dict) -> dict:
+    """``portfolio:<family>:b<B>:<policy>:<layout>`` keys, nested:
+    family -> lane count -> "policy:layout" -> entry. Policy specs contain
+    ``|``/``@`` but never ``:``, so the layout is the final segment."""
+    out: dict = {}
+    for key, e in entries.items():
+        if not (isinstance(key, str) and key.startswith("portfolio:")
+                and isinstance(e, dict)):
+            continue
+        try:
+            family, btok, rest = key[len("portfolio:"):].split(":", 2)
+            policy, layout = rest.rsplit(":", 1)
+            b = int(btok.removeprefix("b"))
+        except ValueError:
+            continue
+        out.setdefault(family, {}).setdefault(b, {})[f"{policy}:{layout}"] = e
+    return out
+
+
+def _attr_shares(entry: dict) -> dict[str, float]:
+    attr = entry.get("settle_attribution") or {}
+    total = sum(attr.values())
+    if not total:
+        return {}
+    return {term: v / total for term, v in sorted(attr.items())}
+
+
+def render_portfolio(entries: dict, out=None) -> None:
+    """Portfolio view over ledger entries: win rates + attribution drift."""
+    out = out or sys.stdout
+
+    def line(s=""):
+        print(s, file=out)
+
+    fams = _parse_portfolio(entries)
+    if not fams:
+        return
+    # fleet-wide mean share per (engine, term): the drift baseline — a
+    # family whose shares sit far from it is settling for different
+    # reasons than the fleet, a routing-review signal
+    fleet: dict[str, dict[str, list[float]]] = {}
+    for lanes in fams.values():
+        for engines in lanes.values():
+            for eng, e in engines.items():
+                for term, s in _attr_shares(e).items():
+                    fleet.setdefault(eng, {}).setdefault(term, []).append(s)
+    fleet_mean = {
+        eng: {term: sum(v) / len(v) for term, v in terms.items()}
+        for eng, terms in fleet.items()
+    }
+    line("== portfolio (measured routing ledger) ==")
+    for family in sorted(fams):
+        lanes = fams[family]
+        wins: dict[str, int] = {}
+        for engines in lanes.values():
+            best = max(engines, key=lambda k: engines[k].get("qps", 0.0))
+            wins[best] = wins.get(best, 0) + 1
+        rounds = len(lanes)
+        line(f"  family {family}  "
+             f"(lane counts: {', '.join(str(b) for b in sorted(lanes))})")
+        engs = sorted({e for engines in lanes.values() for e in engines})
+        w = max(len(e) for e in engs)
+        for eng in engs:
+            qps = [engines[eng].get("qps", 0.0)
+                   for engines in lanes.values() if eng in engines]
+            mean_qps = sum(qps) / len(qps)
+            rate = wins.get(eng, 0) / rounds
+            seg = (f"    {eng:<{w}}  win {rate:>4.0%}  "
+                   f"qps {_fmt(mean_qps):>10}")
+            shares = {}
+            for engines in lanes.values():
+                if eng in engines and _attr_shares(engines[eng]):
+                    shares = _attr_shares(engines[eng])
+            if shares:
+                base = fleet_mean.get(eng, {})
+                drift = max(
+                    (abs(s - base.get(term, s)) for term, s in shares.items()),
+                    default=0.0,
+                )
+                seg += "  shares " + " ".join(
+                    f"{term}={s:.2f}" for term, s in shares.items()
+                )
+                seg += f"  drift {drift:.2f}"
+            line(seg)
+
+
 def cmd_dashboard(args) -> int:
     with open(args.report) as f:
         report = json.load(f)
     if not isinstance(report, dict):
         print(f"{args.report}: not a registry snapshot (expected an object)")
         return 1
-    render_dashboard(report)
+    portfolio = {k: v for k, v in report.items()
+                 if isinstance(k, str) and k.startswith("portfolio:")}
+    metrics = {k: v for k, v in report.items()
+               if isinstance(v, dict) and v.get("kind") in
+               ("counter", "gauge", "histogram")}
+    if metrics or not portfolio:
+        render_dashboard(metrics if portfolio else report)
+    render_portfolio(portfolio)
     return 0
 
 

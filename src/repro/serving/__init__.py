@@ -20,12 +20,14 @@ from repro.serving.backends import (
     PortfolioBackend,
     ShardedBackend,
     StaticBackend,
+    family_fallbacks,
     graph_family,
     measure_portfolio,
     pick_engine,
 )
 from repro.serving.cache import DistCache, graph_key
 from repro.serving.metrics import ServingMetrics
+from repro.serving.point import PointBackend, PointResult, run_point_to_point
 from repro.serving.queue import ArrivalQueue, Request
 from repro.serving.scheduler import ContinuousBatcher, DrainStalled
 
@@ -39,8 +41,12 @@ __all__ = [
     "EngineCandidate",
     "DEFAULT_CANDIDATES",
     "graph_family",
+    "family_fallbacks",
     "measure_portfolio",
     "pick_engine",
+    "PointBackend",
+    "PointResult",
+    "run_point_to_point",
     "ArrivalQueue",
     "Request",
     "DistCache",

@@ -116,8 +116,12 @@ class EngineBackend(Protocol):
         """Advance up to ``k_phases`` trips (early exit on lane finish)."""
         ...
 
-    def reset_lanes(self, state, sources: np.ndarray, *, donate: bool = False):
-        """Re-init the lanes ``sources`` selects (KEEP_LANE passes through)."""
+    def reset_lanes(self, state, sources: np.ndarray, *, donate: bool = False,
+                    targets: np.ndarray | None = None):
+        """Re-init the lanes ``sources`` selects (KEEP_LANE passes through).
+
+        ``targets`` (point-capable backends only) gives each admitted lane
+        its s->t target vertex, ``EMPTY_LANE`` for a full solve."""
         ...
 
     def peek(self, state) -> tuple[int, np.ndarray, np.ndarray]:
@@ -144,11 +148,18 @@ class StaticBackend:
     Execution mode / tile sizes resolve through ``repro.kernels.config``
     (env overrides + tuning ledger), so a server process tuned at startup
     serves every later query with the tuned configuration.
+
+    ``point_queries=True`` initialises target-capable lane state (the
+    pytree-structural ``BatchState.target`` field, DESIGN.md Sec. 13), so
+    the scheduler can mix full solves and early-exiting s->t lanes in one
+    batch. Off by default: a target-free server stays bit-identical to the
+    pre-target engine program.
     """
 
     def __init__(self, g: Graph, ell=None, use_pallas: bool = True,
                  criterion: str = DEFAULT_CRITERION, layout: str = "padded",
-                 policy: str | None = None, delta: float | None = None):
+                 policy: str | None = None, delta: float | None = None,
+                 point_queries: bool = False):
         spec = policy if policy is not None else criterion
         pol = _serving_policy(spec)
         if layout not in ("padded", "sliced"):
@@ -165,6 +176,7 @@ class StaticBackend:
             self.ell_out = to_ell_out_sliced(g) if sliced else to_ell_out(g)
         self.use_pallas = bool(use_pallas)
         self.criterion = pol.spec
+        self.point_queries = bool(point_queries)
         self.delta = None
         if pol.uses_delta:
             self.delta = float(delta) if delta is not None else default_delta(g)
@@ -179,8 +191,11 @@ class StaticBackend:
         return self.g.n
 
     def init(self, lanes: int) -> BatchState:
-        return init_batch_state(self.g, np.full(lanes, EMPTY_LANE, np.int32),
-                                criterion=self.criterion, delta=self.delta)
+        empty = np.full(lanes, EMPTY_LANE, np.int32)
+        return init_batch_state(
+            self.g, empty, criterion=self.criterion, delta=self.delta,
+            targets=empty if self.point_queries else None,
+        )
 
     def step(self, state, k_phases, *, stop_on_lane_finish=True, donate=False):
         return step_batch(
@@ -189,8 +204,8 @@ class StaticBackend:
             ell_out=self.ell_out,
         )
 
-    def reset_lanes(self, state, sources, *, donate=False):
-        return reset_lanes(state, sources, donate=donate)
+    def reset_lanes(self, state, sources, *, donate=False, targets=None):
+        return reset_lanes(state, sources, donate=donate, targets=targets)
 
     def peek(self, state):
         trips, active, phases = _peek(state)
@@ -251,9 +266,14 @@ class ShardedBackend:
             donate=donate,
         )
 
-    def reset_lanes(self, state, sources, *, donate=False):
+    def reset_lanes(self, state, sources, *, donate=False, targets=None):
         from repro.core.distributed import reset_sharded_lanes
 
+        if targets is not None:
+            raise ValueError(
+                "ShardedBackend does not support s->t target lanes; serve "
+                "point queries through a point-capable StaticBackend"
+            )
         return reset_sharded_lanes(state, sources, donate=donate)
 
     def peek(self, state):
@@ -271,20 +291,98 @@ class ShardedBackend:
 # ---------------------------------------------------------------------------
 
 
-def graph_family(g: Graph) -> str:
-    """Coarse degree-distribution bucket the portfolio ledger keys on.
-
-    ``max/mean`` out-degree >= 4 reads as a skewed (power-law-ish) graph —
-    the regime where the sliced layout and bucketed scheduling pay off —
-    everything else as flat. Two buckets is deliberately crude: the ledger
-    records *measurements*, so a family only needs to be stable enough that
-    graphs sharing it rank the candidates the same way.
-    """
+def _degree_bucket(g: Graph) -> str:
+    """``max/mean`` out-degree >= 4 reads as a skewed (power-law-ish) graph
+    — the regime where the sliced layout and bucketed scheduling pay off —
+    everything else as flat."""
     deg = np.asarray(out_degrees(g), np.float64)
     mean = float(deg.mean()) if deg.size else 0.0
     if mean <= 0.0:
         return "flat"
     return "skew" if float(deg.max()) / mean >= 4.0 else "flat"
+
+
+def _weight_bucket(g: Graph) -> str:
+    """Coefficient of variation of the (finite) edge weights: >= 0.9 reads
+    as heavy-tailed (exponential sits at 1.0, uniform at ~0.58) — the
+    regime where delta-stepping's bucket width choice actually matters."""
+    w = np.asarray(g.w, np.float64)
+    w = w[np.isfinite(w)]
+    mean = float(w.mean()) if w.size else 0.0
+    if mean <= 0.0:
+        return "uniform"
+    return "heavy" if float(w.std()) / mean >= 0.9 else "uniform"
+
+
+def _depth_bucket(g: Graph) -> str:
+    """Cheap hop-diameter proxy: one host BFS (out-edges, unweighted) from
+    the max-out-degree vertex; eccentricity > 2*log2(n) reads as a deep
+    (road/grid-like) graph, where phase counts scale with depth rather
+    than log n and static criteria lose ground to dynamic ones. (A grid's
+    centre eccentricity ~sqrt(n) clears the bound from ~6x6 up; expander
+    families sit at O(log n) and never do.)"""
+    from repro.core.graph import to_numpy_csr
+
+    n = g.n
+    if n <= 1:
+        return "shallow"
+    indptr, indices, _ = to_numpy_csr(g)
+    counts_all = np.diff(indptr)
+    start = int(np.argmax(counts_all))
+    seen = np.zeros(n, bool)
+    seen[start] = True
+    frontier = np.array([start], np.int64)
+    ecc = 0
+    while frontier.size:
+        starts = indptr[frontier]
+        counts = counts_all[frontier]
+        total = int(counts.sum())
+        if total == 0:
+            break
+        offs = np.repeat(starts, counts) + (
+            np.arange(total) - np.repeat(np.cumsum(counts) - counts, counts)
+        )
+        nbr = np.unique(indices[offs])
+        nbr = nbr[~seen[nbr]]
+        if nbr.size == 0:
+            break
+        seen[nbr] = True
+        frontier = nbr
+        ecc += 1
+    return "deep" if ecc > 2.0 * np.log2(n) else "shallow"
+
+
+def graph_family(g: Graph) -> str:
+    """Workload bucket the portfolio ledger keys on: ``<deg>-<wt>-<depth>``.
+
+    Three cheap axes — degree skew (``flat``/``skew``), weight tail
+    (``uniform``/``heavy``) and a BFS hop-diameter proxy
+    (``shallow``/``deep``) — each the regime boundary for one routing
+    decision: layout, bucket width, and criterion dynamism respectively.
+    The buckets are deliberately crude: the ledger records *measurements*,
+    so a family only needs to be stable enough that graphs sharing it rank
+    the candidates the same way. Memoised on the graph instance (the depth
+    proxy walks the CSR once); never contains ``:`` (ledger key syntax)
+    or ``-``-free ambiguity — :func:`family_fallbacks` parses the leading
+    axis back out for pre-rich-key ledger records.
+    """
+    fam = g.__dict__.get("_graph_family")
+    if fam is None:
+        fam = f"{_degree_bucket(g)}-{_weight_bucket(g)}-{_depth_bucket(g)}"
+        g.__dict__["_graph_family"] = fam
+    return fam
+
+
+def family_fallbacks(family: str) -> tuple[str, ...]:
+    """Ledger lookup order for a family key.
+
+    The rich ``<deg>-<wt>-<depth>`` family first, then its leading degree
+    bucket — which IS the whole family name records carried before the
+    weight/depth axes existed — so a ledger written by an older process
+    keeps routing traffic instead of forcing a re-probe.
+    """
+    coarse = family.split("-", 1)[0]
+    return (family,) if coarse == family else (family, coarse)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -293,11 +391,37 @@ class EngineCandidate:
 
     policy: str  # policy spec ("in|out", "delta", ...)
     layout: str  # "padded" | "sliced"
-    delta: float | None = None  # bucket width override (delta policy only)
+    delta: float | None = None  # absolute bucket width override (delta only)
+    delta_scale: float | None = None  # x default_delta(g): the graph-relative
+    #   form a Delta-grid needs — an absolute width only means something for
+    #   one weight distribution, a scale sweeps around the Meyer-Sanders
+    #   default on every family
 
     @property
     def spec(self) -> str:
         return P.canonical_spec(self.policy)
+
+    @property
+    def ledger_policy(self) -> str:
+        """The policy segment of the portfolio ledger key.
+
+        Delta-grid members must not collide in the ledger, so the bucket
+        override is part of the name; the no-override spelling stays the
+        bare spec, keeping every pre-grid ledger record addressable.
+        """
+        if self.delta is not None:
+            return f"{self.spec}@d{self.delta:g}"
+        if self.delta_scale is not None:
+            return f"{self.spec}@x{self.delta_scale:g}"
+        return self.spec
+
+    def resolve_delta(self, g: Graph) -> float | None:
+        """The absolute bucket width this candidate runs ``g`` with."""
+        if self.delta is not None:
+            return float(self.delta)
+        if self.delta_scale is not None:
+            return float(self.delta_scale) * default_delta(g)
+        return None  # policy default (default_delta) downstream
 
 
 DEFAULT_CANDIDATES: tuple[EngineCandidate, ...] = (
@@ -306,6 +430,12 @@ DEFAULT_CANDIDATES: tuple[EngineCandidate, ...] = (
     EngineCandidate("in|out", "sliced"),
     EngineCandidate("delta", "padded"),
     EngineCandidate("delta", "sliced"),
+    # Delta-grid around the Meyer-Sanders default (delta's strong layout):
+    # bucket width steers the light/heavy phase split, and the best point
+    # is a measured property of the family, not a closed form
+    EngineCandidate("delta", "sliced", delta_scale=0.5),
+    EngineCandidate("delta", "sliced", delta_scale=2.0),
+    EngineCandidate("delta", "sliced", delta_scale=4.0),
 )
 
 
@@ -343,7 +473,8 @@ def measure_portfolio(
     policy's settle-attribution shares) and then timed without telemetry
     (median of ``repeats``). Entries land in the tuning ledger under
     :func:`~repro.kernels.config.portfolio_ledger_key` so later processes
-    can route without re-probing; returns (policy, layout) -> entry.
+    can route without re-probing; returns (ledger_policy, layout) -> entry
+    (Delta-grid members carry their bucket override in the policy name).
     """
     from repro.kernels import config as kcfg
     from repro.obs.timer import timed
@@ -358,8 +489,10 @@ def measure_portfolio(
         pol = P.policy_for(spec)
         kw: dict = {"criterion": spec, "layout": cand.layout,
                     "use_pallas": use_pallas}
+        delta_eff = None
         if pol.uses_delta:
-            kw["delta"] = cand.delta  # None -> default_delta(g) downstream
+            delta_eff = cand.resolve_delta(g)
+            kw["delta"] = delta_eff  # None -> default_delta(g) downstream
         probe = run_phased_static_batch(
             g, sources, trace_len=pol.phase_cap(g.n), telemetry=True, **kw
         )
@@ -375,17 +508,17 @@ def measure_portfolio(
         solve()
         wall_s, _ = timed(solve, repeats=repeats)
         entry = kcfg.record_portfolio(
-            ledger, family, lanes, spec, cand.layout,
+            ledger, family, lanes, cand.ledger_policy, cand.layout,
             wall_s=wall_s,
             phases=int(np.asarray(probe.phases).sum()),
             queries=lanes,
-            delta=cand.delta,
+            delta=delta_eff,
             attribution=_attribution_totals(probe, spec),
         )
-        out[(spec, cand.layout)] = entry
+        out[(cand.ledger_policy, cand.layout)] = entry
         if registry is not None:
             registry.gauge(
-                f"portfolio.qps.{spec}.{cand.layout}",
+                f"portfolio.qps.{cand.ledger_policy}.{cand.layout}",
                 "measured queries/s for one portfolio candidate",
             ).set(entry["qps"])
     return out
@@ -399,18 +532,24 @@ def pick_engine(
 ) -> EngineCandidate:
     """The measured-best candidate for (family, lanes) from the ledger.
 
-    Ranks by recorded qps over the candidates that have entries; with no
-    entries at all the first candidate (the paper's default criterion) is
-    the safe fallback — routing never blocks on a probe.
+    Ranks by recorded qps over the candidates that have entries, reading
+    the rich family key first and falling back to its pre-rich coarse
+    degree bucket (:func:`family_fallbacks`); with no entries at all the
+    first candidate (the paper's default criterion) is the safe fallback —
+    routing never blocks on a probe.
     """
     from repro.kernels import config as kcfg
 
     if ledger is None:
         ledger = kcfg.global_ledger()
-    entries = kcfg.portfolio_entries(ledger, family, lanes)
+    entries: dict = {}
+    for fam in family_fallbacks(family):
+        entries = kcfg.portfolio_entries(ledger, fam, lanes)
+        if entries:
+            break
     best, best_qps = None, -1.0
     for cand in candidates:
-        entry = entries.get((cand.spec, cand.layout))
+        entry = entries.get((cand.ledger_policy, cand.layout))
         if entry is not None and entry.get("qps", 0.0) > best_qps:
             best, best_qps = cand, float(entry["qps"])
     return best if best is not None else candidates[0]
@@ -432,7 +571,7 @@ class PortfolioBackend:
     def __init__(self, g: Graph, lanes_hint: int = 8,
                  candidates: tuple[EngineCandidate, ...] = DEFAULT_CANDIDATES,
                  ledger=None, use_pallas: bool = True, probe: bool = False,
-                 registry=None):
+                 registry=None, point_queries: bool = False):
         from repro.kernels import config as kcfg
 
         if not candidates:
@@ -441,8 +580,10 @@ class PortfolioBackend:
             ledger = kcfg.global_ledger()
         self.family = graph_family(g)
         self.lanes_hint = int(lanes_hint)
-        if probe or not kcfg.portfolio_entries(ledger, self.family,
-                                               self.lanes_hint):
+        if probe or not any(
+            kcfg.portfolio_entries(ledger, fam, self.lanes_hint)
+            for fam in family_fallbacks(self.family)
+        ):
             measure_portfolio(
                 g, lanes=self.lanes_hint, candidates=candidates,
                 ledger=ledger, use_pallas=use_pallas, registry=registry,
@@ -451,10 +592,12 @@ class PortfolioBackend:
                                   ledger)
         self.inner = StaticBackend(
             g, use_pallas=use_pallas, layout=self.choice.layout,
-            policy=self.choice.policy, delta=self.choice.delta,
+            policy=self.choice.policy, delta=self.choice.resolve_delta(g),
+            point_queries=point_queries,
         )
         self.g = g
         self.criterion = self.inner.criterion
+        self.point_queries = self.inner.point_queries
 
     @property
     def n(self) -> int:
@@ -468,8 +611,9 @@ class PortfolioBackend:
                                stop_on_lane_finish=stop_on_lane_finish,
                                donate=donate)
 
-    def reset_lanes(self, state, sources, *, donate=False):
-        return self.inner.reset_lanes(state, sources, donate=donate)
+    def reset_lanes(self, state, sources, *, donate=False, targets=None):
+        return self.inner.reset_lanes(state, sources, donate=donate,
+                                      targets=targets)
 
     def peek(self, state):
         return self.inner.peek(state)

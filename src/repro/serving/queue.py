@@ -30,6 +30,8 @@ class Request:
     req_id: int
     source: int
     t_arrival: float
+    target: int | None = None  # s->t query: only dist[target] is guaranteed
+    #   on the completed row (None = ordinary full solve)
     t_admitted: float | None = None
     t_completed: float | None = None
     lane: int | None = None  # None for cache hits (never occupied a lane)
@@ -37,6 +39,14 @@ class Request:
     cache_hit: bool = False
     coalesced: bool = False  # deduplicated onto an in-flight identical query
     dist: np.ndarray | None = dataclasses.field(default=None, repr=False)
+
+    @property
+    def distance(self) -> float | None:
+        """The query's scalar answer: ``dist[target]`` for an s->t query,
+        None for full solves (read ``dist``) or while incomplete."""
+        if self.dist is None or self.target is None:
+            return None
+        return float(self.dist[self.target])
 
     @property
     def latency(self) -> float | None:
@@ -61,9 +71,11 @@ class ArrivalQueue:
         self._next_id = 0
         self.total_enqueued = 0
 
-    def push(self, source: int, t_arrival: float) -> Request:
+    def push(self, source: int, t_arrival: float,
+             target: int | None = None) -> Request:
         req = Request(req_id=self._next_id, source=int(source),
-                      t_arrival=float(t_arrival))
+                      t_arrival=float(t_arrival),
+                      target=None if target is None else int(target))
         self._next_id += 1
         self.total_enqueued += 1
         self._q.append(req)

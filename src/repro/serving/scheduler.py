@@ -38,7 +38,7 @@ import jax
 import numpy as np
 
 from repro.core.graph import Graph
-from repro.core.static_engine import KEEP_LANE
+from repro.core.static_engine import EMPTY_LANE, KEEP_LANE
 from repro.obs import NULL_TRACER, Observability, timer
 from repro.serving.backends import EngineBackend, StaticBackend
 from repro.serving.cache import DistCache, graph_key
@@ -95,6 +95,16 @@ class ContinuousBatcher:
       donate: buffer-donation override. Default (None) donates on
         accelerator backends only (CPU ignores donation); tests force True
         to pin the copy-before-donate discipline.
+      point_queries: enable s->t point queries (``submit(..., target=t)``).
+        With a default backend this builds the :class:`StaticBackend` with
+        target-capable lane state; with an explicit backend it must already
+        be point-capable. Point lanes early-exit the moment their target
+        settles and prune relaxations past the target's tentative distance
+        (DESIGN.md Sec. 13), so only ``dist[target]`` is guaranteed on the
+        completed row — point results are therefore never inserted into the
+        cache, while cached *full* rows for the same source serve point
+        queries as zero-phase hits. Off by default: a target-free server
+        runs the exact pre-target engine program.
       obs: optional :class:`repro.obs.Observability` bundle. When given,
         serving metrics additionally stream into its registry
         (``serving.*`` counters/gauges/histograms) and its tracer records
@@ -119,6 +129,7 @@ class ContinuousBatcher:
         donate: bool | None = None,
         criterion: str | None = None,
         obs: Observability | None = None,
+        point_queries: bool = False,
     ):
         if lanes < 1:
             raise ValueError(f"lanes must be >= 1; got {lanes}")
@@ -126,7 +137,13 @@ class ContinuousBatcher:
             raise ValueError(f"phases_per_step must be >= 1; got {phases_per_step}")
         if backend is None:
             kw = {} if criterion is None else {"criterion": criterion}
-            backend = StaticBackend(g, ell=ell, use_pallas=use_pallas, **kw)
+            backend = StaticBackend(g, ell=ell, use_pallas=use_pallas,
+                                    point_queries=point_queries, **kw)
+        elif point_queries and not getattr(backend, "point_queries", False):
+            raise ValueError(
+                "point_queries=True needs a point-capable backend; build it "
+                "with point_queries=True (StaticBackend/PortfolioBackend)"
+            )
         elif backend.g is not g:
             raise ValueError(
                 "backend was built over a different Graph instance than `g`"
@@ -142,6 +159,7 @@ class ContinuousBatcher:
         self.g = g
         self.backend = backend
         self.criterion = backend.criterion
+        self.point_queries = bool(getattr(backend, "point_queries", False))
         self.lanes = int(lanes)
         self.phases_per_step = int(phases_per_step)
         self.cache = cache
@@ -186,15 +204,33 @@ class ContinuousBatcher:
 
     # -- submission ---------------------------------------------------------
 
-    def submit(self, source: int, t_arrival: float | None = None) -> Request:
-        """Enqueue one query; returns its tracking :class:`Request`."""
+    def submit(self, source: int, t_arrival: float | None = None,
+               target: int | None = None) -> Request:
+        """Enqueue one query; returns its tracking :class:`Request`.
+
+        ``target`` turns it into an s->t point query: the serving lane
+        early-exits once ``target`` settles and only ``dist[target]`` (the
+        :attr:`Request.distance` property) is guaranteed on the completed
+        row. Requires a point-capable server (``point_queries=True``).
+        """
         source = int(source)
         if not 0 <= source < self.backend.n:
             raise ValueError(
                 f"source must be in [0, {self.backend.n}); got {source}"
             )
+        if target is not None:
+            if not self.point_queries:
+                raise ValueError(
+                    "this server was built without point_queries=True; "
+                    "s->t targets need target-capable lane state"
+                )
+            target = int(target)
+            if not 0 <= target < self.backend.n:
+                raise ValueError(
+                    f"target must be in [0, {self.backend.n}); got {target}"
+                )
         t = self.clock() if t_arrival is None else float(t_arrival)
-        return self.queue.push(source, t)
+        return self.queue.push(source, t, target=target)
 
     # -- introspection ------------------------------------------------------
 
@@ -228,10 +264,14 @@ class ContinuousBatcher:
         served: list[Request] = []
         now = self.clock()
         admit_vec: np.ndarray | None = None  # lane -> new source, KEEP elsewhere
+        tgt_vec: np.ndarray | None = None  # lane -> s->t target, EMPTY for full
         while self.queue:
             req = self.queue.pop()
             # each arrival is classified exactly once, so this is the one
-            # cache lookup of its lifetime — get() owns all hit/miss stats
+            # cache lookup of its lifetime — get() owns all hit/miss stats.
+            # The key carries no target: a cached FULL row for this source
+            # answers s->t queries too (req.distance indexes dist[target]),
+            # so point traffic against a warmed source is zero engine phases
             hit = (
                 self.cache.get(self._gkey, self.criterion, req.source)
                 if self.cache is not None
@@ -250,8 +290,9 @@ class ContinuousBatcher:
                                      cat="request", tid="scheduler")
                 continue
             if self.cache is not None and req.source in self._inflight:
-                # a lane is already solving this source: ride along instead
-                # of burning a second lane on a bit-identical solve
+                # a lane is already solving this source IN FULL (point lanes
+                # never enter _inflight): ride along instead of burning a
+                # second lane — the full row answers point followers too
                 req.coalesced = True
                 req.t_admitted = now
                 self._followers.setdefault(self._inflight[req.source], []).append(req)
@@ -277,11 +318,14 @@ class ContinuousBatcher:
                     self._tracer.name_thread(tid, f"serving lane {lane}")
                     self._tracer.begin(f"src {req.source}", cat="request",
                                        tid=tid, source=req.source)
-                if self.cache is not None:
+                if self.cache is not None and req.target is None:
                     # _inflight backs coalescing, which needs the cache's
                     # source-per-lane uniqueness invariant — without a cache
                     # duplicate sources may legally occupy several lanes and
-                    # the map would be wrong, so don't maintain it at all
+                    # the map would be wrong, so don't maintain it at all.
+                    # Point lanes never register either: their rows are
+                    # partial (only dist[target] is guaranteed past the
+                    # pruning bound), so nothing may ride along on them
                     self._inflight[req.source] = lane
                     # queued duplicates of this source ride along on the lane
                     for dup in peers:
@@ -294,13 +338,20 @@ class ContinuousBatcher:
                     del self._by_source[req.source]
                 if admit_vec is None:
                     admit_vec = np.full(self.lanes, KEEP_LANE, np.int32)
+                    if self.point_queries:
+                        tgt_vec = np.full(self.lanes, EMPTY_LANE, np.int32)
                 admit_vec[lane] = req.source
+                if tgt_vec is not None and req.target is not None:
+                    tgt_vec[lane] = req.target
                 break
         if admit_vec is not None:
             # one device call resets every admitted lane's (n,) slice,
-            # however large the burst; untouched lanes pass through bitwise
+            # however large the burst; untouched lanes pass through bitwise.
+            # The targets kwarg is only passed on point-capable servers so
+            # plain backends keep their exact pre-target call signature
+            kw = {} if tgt_vec is None else {"targets": tgt_vec}
             self.state = self.backend.reset_lanes(
-                self.state, admit_vec, donate=self._donate
+                self.state, admit_vec, donate=self._donate, **kw
             )
         if not self._ready_live and self._ready:
             # only lazily-skipped dead entries (already-coalesced requests)
@@ -351,7 +402,12 @@ class ContinuousBatcher:
                 if row.flags.writeable:  # shared with followers/retention:
                     row.flags.writeable = False  # mutation must fail loudly
                 req.dist = row
-                if self.cache is not None:
+                if self.cache is not None and req.target is None:
+                    # point rows never enter the cache: past the pruning
+                    # bound they are partial, and the cache contract is
+                    # "full solve for this source". (_inflight holds no
+                    # entry for point lanes either — popping here keyed on
+                    # source would evict a concurrent full solve's entry.)
                     self.cache.put(self._gkey, self.criterion, req.source,
                                    req.dist)
                     self._inflight.pop(req.source, None)

@@ -169,6 +169,39 @@ def test_cli_validate_export_dashboard(tmp_path, capsys):
     assert "serving.completed" in out and "serving.latency_s" in out
 
 
+def test_cli_dashboard_portfolio_view(tmp_path, capsys):
+    # a saved tuning ledger renders the portfolio view: per-family win
+    # rates over lane counts, qps, and settle-attribution share drift
+    ledger = {
+        "portfolio:flat-uniform-shallow:b4:delta@x2:sliced": {
+            "qps": 40.0, "settle_attribution": {"light": 6, "heavy": 2},
+        },
+        "portfolio:flat-uniform-shallow:b4:instatic|outstatic:padded": {
+            "qps": 10.0,
+            "settle_attribution": {"instatic": 9, "outstatic": 1},
+        },
+        "portfolio:skew-uniform-shallow:b4:delta@x2:sliced": {
+            "qps": 20.0, "settle_attribution": {"light": 2, "heavy": 6},
+        },
+        "mosaic:relax:n64:d8:b1:l1": {"block_rows": 64},  # non-portfolio key
+    }
+    path = tmp_path / "ledger.json"
+    path.write_text(json.dumps(ledger))
+    capsys.readouterr()
+    assert obs_main(["dashboard", str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "family flat-uniform-shallow" in out
+    assert "family skew-uniform-shallow" in out
+    assert "delta@x2:sliced" in out and "win 100%" in out
+    assert "instatic|outstatic:padded" in out and "win   0%" in out
+    # shares render normalised; drift is measured against the fleet mean
+    assert "light=0.75" in out and "heavy=0.75" in out
+    # delta@x2's shares flip between families: each sits 0.25 from the
+    # fleet mean of 0.5; the one-family engine drifts 0.00 by definition
+    assert "drift 0.25" in out and "drift 0.00" in out
+    assert "mosaic:relax" not in out
+
+
 def test_disabled_tracer_is_inert():
     assert NULL_TRACER.span("x") is _NULL_SPAN  # shared, no allocation
     NULL_TRACER.begin("x")

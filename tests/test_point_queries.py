@@ -1,0 +1,285 @@
+"""Target lanes, goal-directed pruning, and point-to-point serving.
+
+The s->t contract (DESIGN.md Sec. 13): target lanes are pytree-structural
+(target-free programs are the exact pre-target programs), a target lane's
+``dist[target]`` is bit-exact against the full solve while never running
+more phases, the bidirectional :class:`PointBackend` keeps the forward
+lane authoritative (mu only retires the backward lane / certifies
+unreachability), and the server answers s->t hits from cached FULL rows
+with zero engine work while never caching partial point rows.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import dijkstra_numpy, from_coo, run_phased
+from repro.core.static_engine import (
+    EMPTY_LANE,
+    KEEP_LANE,
+    init_batch_state,
+    lanes_active,
+    reset_lane,
+    reset_lanes,
+    run_phased_static,
+    run_phased_static_batch,
+    step_batch,
+)
+from repro.graphs import uniform_gnp
+from repro.serving import (
+    ContinuousBatcher,
+    DistCache,
+    PointBackend,
+    run_point_to_point,
+)
+
+INF = float("inf")
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return uniform_gnp(96, 8.0 / 96, seed=5)
+
+
+@pytest.fixture(scope="module")
+def island_graph():
+    """256-vertex gnp plus 4 edge-free vertices: certified-unreachable
+    targets whose in-balls are empty (the backward lane exhausts fast)."""
+    base = uniform_gnp(256, 10.0 / 256, seed=7)
+    return from_coo(np.asarray(base.src, np.int64),
+                    np.asarray(base.dst, np.int64),
+                    np.asarray(base.w, np.float32), 260)
+
+
+# ---------------------------------------------------------------------------
+# target lanes in the stepper
+# ---------------------------------------------------------------------------
+
+
+def test_target_pytree_parity(graph):
+    """target=None is structural absence: the pytree (hence the traced
+    program) is the pre-target one, and all-(-1) target vectors produce
+    bitwise the same solve as no targets at all."""
+    g = graph
+    srcs = np.array([3, 41], np.int32)
+    off = init_batch_state(g, srcs)
+    on = init_batch_state(g, srcs, targets=np.array([-1, -1], np.int32))
+    assert off.target is None and on.target is not None
+    assert jax.tree_util.tree_structure(off) != jax.tree_util.tree_structure(on)
+    plain = run_phased_static_batch(g, srcs)
+    alloff = run_phased_static_batch(g, srcs,
+                                     targets=np.array([-1, -1], np.int32))
+    assert plain.target is None
+    np.testing.assert_array_equal(np.asarray(plain.dist),
+                                  np.asarray(alloff.dist))
+    np.testing.assert_array_equal(np.asarray(plain.phases),
+                                  np.asarray(alloff.phases))
+
+
+def test_target_validation(graph):
+    g = graph
+    with pytest.raises(ValueError, match=r"in \[0, "):
+        init_batch_state(g, [0], targets=[g.n])
+    state = init_batch_state(g, [0, 1])  # target-free
+    with pytest.raises(ValueError, match="without target lanes"):
+        reset_lanes(state, [2, KEEP_LANE], targets=[5, -1])
+    with pytest.raises(ValueError, match="without target lanes"):
+        reset_lane(state, 0, 2, target=5)
+    tstate = init_batch_state(g, [0], targets=[7])
+    with pytest.raises(ValueError, match="target must be"):
+        reset_lane(tstate, 0, 2, target=g.n)
+
+
+def test_reset_lanes_target_semantics(graph):
+    """KEEP_LANE lanes keep their target; touched lanes default to a full
+    solve unless the reset assigns a new one."""
+    g = graph
+    state = init_batch_state(g, [0, 1], targets=np.array([10, 20], np.int32))
+    state = reset_lanes(state, [KEEP_LANE, 2])
+    np.testing.assert_array_equal(np.asarray(state.target), [10, EMPTY_LANE])
+    state = reset_lanes(state, [3, KEEP_LANE], targets=[30, -1])
+    np.testing.assert_array_equal(np.asarray(state.target), [30, EMPTY_LANE])
+    state = reset_lane(state, 1, 4, target=40)
+    np.testing.assert_array_equal(np.asarray(state.target), [30, 40])
+
+
+def test_target_lane_early_exit_is_bit_exact(graph):
+    """dist[t] bitwise vs the full solve, phases never more, both layouts,
+    single- and batched front-ends."""
+    g = graph
+    pairs = [(0, 57), (12, 12), (88, 3)]
+    for layout in ("padded", "sliced"):
+        for s, t in pairs:
+            full = run_phased(g, s)
+            res = run_phased_static(g, s, target=t, layout=layout)
+            assert res.phases <= full.phases
+            np.testing.assert_array_equal(np.asarray(res.dist)[t],
+                                          np.asarray(full.dist)[t])
+    srcs = np.array([p[0] for p in pairs], np.int32)
+    tgts = np.array([p[1] for p in pairs], np.int32)
+    batch = run_phased_static_batch(g, srcs, targets=tgts)
+    for i, (s, t) in enumerate(pairs):
+        full = run_phased(g, s)
+        assert int(batch.phases[i]) <= int(full.phases)
+        np.testing.assert_array_equal(np.asarray(batch.dist[i])[t],
+                                      np.asarray(full.dist)[t])
+
+
+def test_target_lane_is_fixed_point_after_exit(graph):
+    """An early-exited lane is an ordinary finished lane: further chunks
+    pass it through bitwise (the exit demotes the fringe, no new states)."""
+    g = graph
+    state = init_batch_state(g, [0], targets=np.array([57], np.int32))
+    while lanes_active(state).any():
+        state = step_batch(g, state, 1)
+    before = np.asarray(state.dist).copy()
+    state = step_batch(g, state, 5)
+    np.testing.assert_array_equal(np.asarray(state.dist), before)
+    assert not lanes_active(state).any()
+
+
+# ---------------------------------------------------------------------------
+# bidirectional point backend
+# ---------------------------------------------------------------------------
+
+
+def test_point_to_point_matches_full_solve(graph):
+    g = graph
+    rng = np.random.default_rng(11)
+    for s, t in rng.integers(0, g.n, (6, 2)):
+        full = run_phased(g, int(s))
+        res = run_point_to_point(g, int(s), int(t))
+        np.testing.assert_array_equal(res.distance, np.asarray(full.dist)[t])
+        assert res.phases_forward <= int(full.phases)
+        if np.isfinite(res.mu):
+            # mu is a real-path upper bound on the answer (modulo the f32
+            # re-association slack that is exactly why it may not prune)
+            assert res.mu >= np.float32(res.distance) or np.isclose(
+                res.mu, res.distance, rtol=1e-6)
+            assert res.meeting_vertex is not None
+    # memoised backend: one instance per resolved config
+    assert len(g.__dict__["_point_backends"]) == 1
+    run_point_to_point(g, 0, 1, layout="sliced")
+    assert len(g.__dict__["_point_backends"]) == 2
+
+
+def test_point_backend_forward_only_mode(graph):
+    g = graph
+    b = PointBackend(g, bidirectional=False)
+    full = run_phased(g, 4)
+    res = b.query(4, 71)
+    np.testing.assert_array_equal(res.distance, np.asarray(full.dist)[71])
+    assert res.phases_backward == 0 and res.mu == INF
+    assert res.meeting_vertex is None
+
+
+def test_point_backend_certifies_unreachable(island_graph):
+    """The backward lane exhausts an edge-free target's in-ball in one
+    phase, certifying no-path phases before the forward flood would."""
+    g = island_graph
+    full = run_phased(g, 0)
+    b = PointBackend(g, phases_per_chunk=4)
+    res = b.query(0, 258)
+    assert res.distance == INF
+    assert res.unreachable_certified
+    assert res.phases_forward < int(full.phases)
+
+
+def test_point_backend_validates(graph):
+    b = PointBackend(graph)
+    with pytest.raises(ValueError, match="target must be"):
+        b.query(0, graph.n)
+    with pytest.raises(ValueError, match="source must be"):
+        b.query(-1, 0)
+    with pytest.raises(ValueError, match="layout"):
+        PointBackend(graph, layout="mosaic")
+
+
+# ---------------------------------------------------------------------------
+# serving point queries
+# ---------------------------------------------------------------------------
+
+
+def test_server_requires_point_capability(graph):
+    server = ContinuousBatcher(graph, lanes=2)
+    with pytest.raises(ValueError, match="point_queries=True"):
+        server.submit(0, target=5)
+
+
+def test_cached_full_row_serves_point_hits_with_zero_engine_work(graph):
+    g = graph
+    server = ContinuousBatcher(g, lanes=2, cache=DistCache(),
+                               point_queries=True)
+    server.submit(7)
+    server.drain(max_steps=10_000)
+    trips = server.metrics.engine_trips
+    req = server.submit(7, target=33)
+    done = server.drain(max_steps=10)
+    assert done == [req] and req.cache_hit and req.phases == 0
+    assert server.metrics.engine_trips == trips  # no engine step launched
+    full = run_phased(g, 7)
+    np.testing.assert_array_equal(req.distance, np.asarray(full.dist)[33])
+
+
+def test_point_rows_are_never_cached(graph):
+    """A cold point query solves on a lane but must not poison the cache:
+    its row is partial past the pruning bound. The next full query for the
+    same source therefore misses and re-solves."""
+    g = graph
+    cache = DistCache()
+    server = ContinuousBatcher(g, lanes=2, cache=cache, point_queries=True)
+    preq = server.submit(9, target=50)
+    server.drain(max_steps=10_000)
+    full = run_phased(g, 9)
+    np.testing.assert_array_equal(preq.distance, np.asarray(full.dist)[50])
+    assert preq.phases <= int(full.phases) and not preq.cache_hit
+    freq = server.submit(9)
+    server.drain(max_steps=10_000)
+    assert not freq.cache_hit  # the point row never entered the cache
+    np.testing.assert_array_equal(np.asarray(freq.dist),
+                                  np.asarray(full.dist))
+    # ... and the full row NOW serves point hits
+    hit = server.submit(9, target=50)
+    server.drain(max_steps=10)
+    assert hit.cache_hit
+
+
+def test_point_query_coalesces_onto_inflight_full_solve(graph):
+    """A point request for a source already being solved IN FULL rides
+    along as a follower (the full row answers it), consuming no lane."""
+    g = graph
+    server = ContinuousBatcher(g, lanes=1, cache=DistCache(),
+                               point_queries=True, phases_per_step=1)
+    full_req = server.submit(13)
+    server.step()  # admits the full solve onto the only lane
+    point_req = server.submit(13, target=60)
+    done = server.drain(max_steps=10_000)
+    assert full_req in done and point_req in done
+    assert point_req.coalesced and point_req.phases == 0
+    ref = run_phased(g, 13)
+    np.testing.assert_array_equal(point_req.distance,
+                                  np.asarray(ref.dist)[60])
+
+
+def test_mixed_full_and_point_traffic_is_bit_exact(graph):
+    g = graph
+    rng = np.random.default_rng(23)
+    server = ContinuousBatcher(g, lanes=3, cache=DistCache(),
+                               point_queries=True)
+    reqs = []
+    for _ in range(12):
+        s = int(rng.integers(0, g.n))
+        t = int(rng.integers(0, g.n)) if rng.integers(0, 2) else None
+        reqs.append((server.submit(s, target=t), s, t))
+    done = server.drain(max_steps=10_000)
+    assert len(done) == len(reqs)
+    for req, s, t in reqs:
+        ref = dijkstra_numpy(g, s)
+        want = run_phased(g, s)
+        if t is None:
+            np.testing.assert_array_equal(np.asarray(req.dist),
+                                          np.asarray(want.dist))
+        else:
+            np.testing.assert_array_equal(req.distance,
+                                          np.asarray(want.dist)[t])
+            if np.isfinite(ref[t]):
+                np.testing.assert_allclose(req.distance, ref[t], rtol=1e-4)

@@ -9,8 +9,10 @@ against standalone solves, like every other backend.
 import numpy as np
 import pytest
 
+from repro.core.delta_stepping import default_delta
+from repro.core.graph import from_coo
 from repro.core.static_engine import run_phased_static
-from repro.graphs import kronecker, uniform_gnp
+from repro.graphs import grid_road, kronecker, uniform_gnp
 from repro.kernels.config import (
     TuningLedger,
     portfolio_entries,
@@ -18,10 +20,12 @@ from repro.kernels.config import (
     record_portfolio,
 )
 from repro.serving import (
+    DEFAULT_CANDIDATES,
     ContinuousBatcher,
     EngineCandidate,
     PortfolioBackend,
     StaticBackend,
+    family_fallbacks,
     graph_family,
     measure_portfolio,
     pick_engine,
@@ -76,8 +80,33 @@ def test_portfolio_entries_survive_save_load(tmp_path):
 
 
 def test_graph_family_buckets():
-    assert graph_family(uniform_gnp(128, 8.0 / 128, seed=0)) == "flat"
-    assert graph_family(kronecker(7, seed=0)) == "skew"
+    # three axes: degree skew, weight tail, BFS hop-depth proxy
+    assert graph_family(uniform_gnp(128, 8.0 / 128, seed=0)) == \
+        "flat-uniform-shallow"
+    assert graph_family(kronecker(7, seed=0)) == "skew-uniform-shallow"
+    assert graph_family(grid_road(22, 22, seed=0)) == "flat-uniform-deep"
+    g0 = uniform_gnp(128, 8.0 / 128, seed=0)
+    rng = np.random.default_rng(0)
+    heavy = from_coo(
+        np.asarray(g0.src, np.int64), np.asarray(g0.dst, np.int64),
+        rng.pareto(1.5, size=np.asarray(g0.src).shape[0]).astype(np.float32)
+        + 0.01,
+        128,
+    )
+    assert graph_family(heavy) == "flat-heavy-shallow"
+
+
+def test_family_fallbacks_cover_pre_rich_records():
+    assert family_fallbacks("skew-uniform-shallow") == \
+        ("skew-uniform-shallow", "skew")
+    assert family_fallbacks("flat") == ("flat",)
+    # a ledger written before the weight/depth axes existed still routes:
+    # records under the coarse bucket are found via the fallback
+    led = TuningLedger()
+    record_portfolio(led, "flat", 2, "delta", "sliced",
+                     wall_s=0.1, phases=3, queries=2)
+    choice = pick_engine("flat-uniform-shallow", 2, CANDS, led)
+    assert (choice.spec, choice.layout) == ("delta", "sliced")
 
 
 # ---------------------------------------------------------------------------
@@ -104,6 +133,64 @@ def test_measure_then_pick_is_qps_argmax(graph):
 def test_pick_engine_falls_back_to_first_candidate_on_empty_ledger():
     choice = pick_engine("flat", 2, CANDS, TuningLedger())
     assert choice is CANDS[0]
+
+
+def test_default_candidates_carry_a_delta_grid():
+    scales = {c.delta_scale for c in DEFAULT_CANDIDATES
+              if c.spec == "delta" and c.delta_scale is not None}
+    assert len(scales) >= 2  # sweeps around the Meyer-Sanders default
+    # grid members get distinct ledger identities; the no-override
+    # spelling stays the bare spec so pre-grid records keep resolving
+    names = [c.ledger_policy for c in DEFAULT_CANDIDATES]
+    assert len(set((n, c.layout) for n, c in
+                   zip(names, DEFAULT_CANDIDATES))) == len(DEFAULT_CANDIDATES)
+    assert EngineCandidate("delta", "sliced").ledger_policy == "delta"
+    assert EngineCandidate("delta", "sliced",
+                           delta_scale=0.5).ledger_policy == "delta@x0.5"
+    assert EngineCandidate("delta", "sliced",
+                           delta=0.25).ledger_policy == "delta@d0.25"
+
+
+def test_engine_candidate_resolves_delta_relative_to_default(graph):
+    base = default_delta(graph)
+    assert EngineCandidate("delta", "sliced").resolve_delta(graph) is None
+    assert EngineCandidate("delta", "sliced", delta_scale=2.0).resolve_delta(
+        graph) == pytest.approx(2.0 * base)
+    assert EngineCandidate("delta", "sliced", delta=0.125).resolve_delta(
+        graph) == 0.125
+
+
+def test_pick_engine_selects_across_the_delta_grid():
+    # seed a ledger where a non-default bucket width measures fastest and
+    # assert the router actually reaches across the grid to pick it
+    grid = (
+        EngineCandidate("delta", "sliced"),
+        EngineCandidate("delta", "sliced", delta_scale=0.5),
+        EngineCandidate("delta", "sliced", delta_scale=2.0),
+    )
+    led = TuningLedger()
+    for cand, qps in zip(grid, (10.0, 40.0, 20.0)):
+        record_portfolio(led, "flat", 4, cand.ledger_policy, cand.layout,
+                         wall_s=4.0 / qps, phases=10, queries=4)
+    choice = pick_engine("flat", 4, grid, led)
+    assert choice.delta_scale == 0.5
+
+
+def test_measure_portfolio_separates_delta_grid_entries(graph):
+    grid = (
+        EngineCandidate("delta", "padded"),
+        EngineCandidate("delta", "padded", delta_scale=4.0),
+    )
+    led = TuningLedger()
+    entries = measure_portfolio(graph, lanes=2, candidates=grid, ledger=led,
+                                repeats=1)
+    assert set(entries) == {("delta", "padded"), ("delta@x4", "padded")}
+    # the recorded absolute width reflects the scale
+    assert entries[("delta@x4", "padded")]["delta"] == pytest.approx(
+        4.0 * default_delta(graph))
+    # wider buckets -> no more phases than the default (sanity, not perf)
+    assert entries[("delta@x4", "padded")]["phases"] <= \
+        entries[("delta", "padded")]["phases"]
 
 
 def test_portfolio_backend_serves_bit_exact(graph):

@@ -134,6 +134,68 @@ def test_delta_policy_bit_exact_on_random_graphs(g, delta, seed, b, layout, k):
                                   np.asarray(leg2.dist))
 
 
+@settings(max_examples=10, deadline=None)
+@given(g=random_graph(), seed=st.integers(0, 2 ** 20), b=st.integers(1, 4),
+       crit=st.sampled_from(["instatic|outstatic", "in|out", "delta"]),
+       layout=st.sampled_from(["padded", "sliced"]))
+def test_target_early_exit_bit_exact_on_random_graphs(g, seed, b, crit,
+                                                      layout):
+    """Target lanes answer s->t with BIT-exactly the full solve's dist[t]
+    while never running more phases, across criteria x layouts x batch
+    sizes; a target-free lane mixed into the same batch stays bitwise
+    identical to the target-free program (the pruning gate may only drop
+    work at labels >= dist[t], which the early exit then discards)."""
+    rng = np.random.default_rng(seed)
+    srcs = rng.integers(0, g.n, b)
+    tgts = rng.integers(0, g.n, b).astype(np.int32)
+    if b > 1:
+        tgts[rng.integers(0, b)] = -1  # mix a full-solve lane in
+    kw = {"criterion": crit, "layout": layout}
+    if crit == "delta":
+        kw["delta"] = float(rng.uniform(0.05, 2.0))
+    full = run_phased_static_batch(g, srcs, **kw)
+    point = run_phased_static_batch(g, srcs, targets=tgts, **kw)
+    for i, t in enumerate(tgts):
+        assert int(point.phases[i]) <= int(full.phases[i])
+        if t < 0:
+            np.testing.assert_array_equal(np.asarray(point.dist[i]),
+                                          np.asarray(full.dist[i]))
+        else:
+            got = np.asarray(point.dist[i])[t]
+            want = np.asarray(full.dist[i])[t]
+            np.testing.assert_array_equal(got, want)
+    if crit == "instatic|outstatic":
+        # and the full solve itself is the single-source engine, bitwise
+        ref = run_phased(g, int(srcs[0]))
+        np.testing.assert_array_equal(np.asarray(full.dist[0]),
+                                      np.asarray(ref.dist))
+
+
+def test_target_lane_s_equals_t_and_unreachable_target():
+    """Degenerate targets are deterministic: s == t exits after the phase
+    that settles the source (distance exactly 0.0), and an unreachable
+    target never trips the exit — the lane runs to exhaustion and reports
+    +inf, matching the full solve's phase count bit-for-bit."""
+    rng = np.random.default_rng(3)
+    n = 32  # vertices 30/31 kept edge-free: certified-unreachable targets
+    src = rng.integers(0, 30, 140)
+    dst = rng.integers(0, 30, 140)
+    keep = src != dst
+    w = rng.uniform(0.1, 1.0, int(keep.sum())).astype(np.float32)
+    g = from_coo(src[keep], dst[keep], w, n)
+    full = run_phased(g, 5)
+    res = run_phased_static_batch(
+        g, [5, 5], targets=np.array([5, 31], np.int32))
+    # s == t: the source settles in phase 1 and the lane stops right there
+    assert float(res.dist[0][5]) == 0.0
+    assert int(res.phases[0]) == 1 <= int(full.phases)
+    # unreachable t: full exhaustion, +inf answer, full-solve phase count
+    assert np.isinf(float(res.dist[1][31]))
+    assert int(res.phases[1]) == int(full.phases)
+    np.testing.assert_array_equal(np.asarray(res.dist[1]),
+                                  np.asarray(full.dist))
+
+
 @settings(max_examples=15, deadline=None)
 @given(g=random_graph(), seed=st.integers(0, 100))
 def test_source_invariance(g, seed):
