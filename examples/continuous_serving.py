@@ -19,7 +19,15 @@ lane, queue-depth counter track) and prints the metrics-registry dashboard.
 ``python -m repro.obs validate PATH`` checks the exported file; CI does
 exactly that as the obs smoke test.
 
-CI runs this with tiny arguments as a smoke test of the serving subsystem.
+``--chaos SEED`` swaps the server for a ``ResilientBatcher`` behind a
+seeded random fault plan (``FaultyBackend`` + ``FaultyDistCache``): rows
+get corrupted at harvest, engine steps fail, the device stalls, cached
+rows rot in memory — and every completed answer is still validated
+bit-exactly. The run ends by printing which faults fired and what the
+recovery machinery did about them (quarantines, retries, rebuilds).
+
+CI runs this with tiny arguments as a smoke test of the serving subsystem,
+and once more with ``--chaos`` as the resilience smoke.
 """
 from __future__ import annotations
 
@@ -30,7 +38,16 @@ import numpy as np
 from repro.core.static_engine import run_phased_static
 from repro.graphs import grid_road
 from repro.obs import Observability
-from repro.serving import ContinuousBatcher, DistCache
+from repro.serving import (
+    ContinuousBatcher,
+    DistCache,
+    FaultPlan,
+    FaultyBackend,
+    FaultyDistCache,
+    ResilientBatcher,
+    StaticBackend,
+    VirtualClock,
+)
 
 
 def main():
@@ -49,6 +66,10 @@ def main():
     ap.add_argument("--report", default=None, metavar="PATH",
                     help="write the registry snapshot JSON here "
                          "(with --trace)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="serve through a ResilientBatcher under a seeded "
+                         "random fault plan (faults fire, answers stay "
+                         "bit-exact)")
     args = ap.parse_args()
 
     side = max(2, int(np.sqrt(args.n)))
@@ -58,10 +79,26 @@ def main():
           f"lanes={args.lanes}, k={args.phases_per_step}")
 
     obs = Observability.enabled() if args.trace else None
-    server = ContinuousBatcher(
-        g, lanes=args.lanes, phases_per_step=args.phases_per_step,
-        cache=DistCache(capacity=256), obs=obs,
-    )
+    if args.chaos is not None:
+        plan = FaultPlan.random(args.chaos, n_faults=5,
+                                horizon=4 * args.queries, lanes=args.lanes)
+        clock = VirtualClock()
+        print(f"chaos plan (seed {args.chaos}):")
+        for f in plan.faults:
+            print(f"  {f.kind:<12} at step {f.at}"
+                  + (f" lane {f.lane}" if f.lane is not None else "")
+                  + f" magnitude {f.magnitude:.2f}")
+        server = ResilientBatcher(
+            g, lanes=args.lanes, phases_per_step=args.phases_per_step,
+            cache=FaultyDistCache(DistCache(capacity=256), plan),
+            backend=FaultyBackend(StaticBackend(g), plan, clock=clock),
+            clock=clock.now, obs=obs,
+        )
+    else:
+        server = ContinuousBatcher(
+            g, lanes=args.lanes, phases_per_step=args.phases_per_step,
+            cache=DistCache(capacity=256), obs=obs,
+        )
 
     # Arrival trace: mostly-unique sources plus a hot set that exercises the
     # cache (popular origins recur in any real serving mix).
@@ -100,6 +137,19 @@ def main():
                   f"{req.latency*1e3:7.1f} ms ({tag})")
 
     print(f"\nall {validated} answers bit-exact vs run_phased_static")
+    if args.chaos is not None:
+        fired = server.backend.fired
+        poisoned = server.cache.poisoned
+        m = server.metrics
+        print(f"chaos: {len(fired)} backend fault(s) fired "
+              f"({', '.join(f.kind for f in fired) or 'none'}), "
+              f"{len(poisoned)} cache row(s) poisoned")
+        print(f"recovery: {m.quarantines} quarantine(s), {m.retries} "
+              f"retr{'y' if m.retries == 1 else 'ies'}, "
+              f"{m.engine_failures} engine rebuild(s), "
+              f"{server.cache.corrupt_dropped} rotten cache row(s) dropped")
+        assert validated == args.queries, (
+            f"chaos run completed {validated}/{args.queries}")
     print(server.metrics.to_json(indent=1))
 
     if obs is not None:

@@ -29,6 +29,13 @@ Six rules (suppress a line with ``# repro: allow(<rule>)``):
     benchmark and engine measurement shares one clock discipline and can
     feed the metrics registry. ``# repro: allow(raw-timer)`` opts a line
     out.
+  * ``swallowed-exception`` — no bare ``except:`` anywhere, and no
+    ``except Exception/BaseException:`` whose entire body is ``pass``/
+    ``...``: silently eating every error is exactly the failure mode the
+    resilience layer exists to make *loud* (detected, counted, retried).
+    Handlers that catch a specific type, or that actually do something
+    with what they caught, are fine; a deliberate swallow takes
+    ``# repro: allow(swallowed-exception)``.
 """
 from __future__ import annotations
 
@@ -45,6 +52,7 @@ RULES = (
     "donate-reuse",
     "env-outside-config",
     "raw-timer",
+    "swallowed-exception",
 )
 
 _PRAGMA_RE = re.compile(r"#\s*repro:\s*allow\(([a-z0-9_,\s\-]+)\)")
@@ -165,6 +173,23 @@ def lint_source(src: str, path: str) -> list[LintFinding]:
                 emit(node.lineno, "env-outside-config",
                      f"{key} read outside kernels/config.py — all REPRO_* "
                      "env resolution belongs there")
+        if isinstance(node, ast.ExceptHandler):
+            broad = (isinstance(node.type, ast.Name)
+                     and node.type.id in ("Exception", "BaseException"))
+            body_is_noop = all(
+                isinstance(s, ast.Pass)
+                or (isinstance(s, ast.Expr) and isinstance(s.value, ast.Constant)
+                    and s.value.value is Ellipsis)
+                for s in node.body
+            )
+            if node.type is None:
+                emit(node.lineno, "swallowed-exception",
+                     "bare except: catches everything including "
+                     "KeyboardInterrupt — name the exception type")
+            elif broad and body_is_noop:
+                emit(node.lineno, "swallowed-exception",
+                     f"except {node.type.id}: pass silently swallows every "
+                     "error — handle it, count it, or narrow the type")
 
     if (saw_pallas_call and zone.in_kernels and not any(
             isinstance(n, ast.FunctionDef) and n.name == "register_kernels"

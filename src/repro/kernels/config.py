@@ -250,22 +250,48 @@ class TuningLedger:
     def put(self, key: str, entry: dict) -> None:
         self.entries[key] = dict(entry)
 
-    def load(self, path: str) -> None:
-        with open(path) as f:
-            data = json.load(f)
-        if not isinstance(data, dict) or not all(
-            isinstance(v, dict) for v in data.values()
-        ):
-            raise ValueError(f"malformed tuning ledger {path!r}")
-        self.entries.update(data)
+    def load(self, path: str) -> int:
+        """Merge entries from ``path``; returns how many were accepted.
+
+        Tolerant of a concurrent or crashed writer: unparseable JSON or a
+        non-dict top level loads nothing, and individual values that are
+        not dicts are skipped — well-formed entries are salvaged either
+        way, and the entries already in memory are never dropped. (The
+        save path is atomic, so a torn file means a *foreign* writer; a
+        tuning record is a measurement memo, and losing one re-measures —
+        crashing the engine build over it would be strictly worse.)
+        """
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            return 0
+        if not isinstance(data, dict):
+            return 0
+        good = {k: v for k, v in data.items()
+                if isinstance(k, str) and isinstance(v, dict)}
+        self.entries.update(good)
         self.path = path
+        return len(good)
 
     def save(self, path: str | None = None) -> str:
+        """Atomically persist the ledger (temp file + ``os.replace``): a
+        crash mid-save leaves the previous file intact, and a concurrent
+        reader sees either the old complete ledger or the new one —
+        never a truncated JSON prefix."""
         path = path or self.path
         if path is None:
             raise ValueError("no ledger path given and none remembered")
-        with open(path, "w") as f:
-            json.dump(self.entries, f, indent=1, sort_keys=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(self.entries, f, indent=1, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
         self.path = path
         return path
 

@@ -12,6 +12,13 @@ routes to the measured-best policy x layout from the tuning ledger's
 portfolio records — all with identical scheduling semantics.
 Every admitted query's distances are bit-exact vs a standalone
 ``run_phased_static`` solve.
+
+The fault-tolerant tier (DESIGN.md Sec. 14) layers on top:
+:class:`ResilientBatcher` verifies every harvested row against the
+relax-fixed-point certificate (:func:`verify_row`), quarantines and
+retries corrupted work, and recovers from engine step failures;
+:class:`FaultPlan`/:class:`FaultyBackend`/:class:`FaultyDistCache` are the
+deterministic chaos seam the guarantees are tested under.
 """
 from repro.serving.backends import (
     DEFAULT_CANDIDATES,
@@ -26,14 +33,38 @@ from repro.serving.backends import (
     pick_engine,
 )
 from repro.serving.cache import DistCache, graph_key
+from repro.serving.faults import (
+    Fault,
+    FaultPlan,
+    FaultyBackend,
+    FaultyDistCache,
+    InjectedFault,
+    VirtualClock,
+)
 from repro.serving.metrics import ServingMetrics
 from repro.serving.point import PointBackend, PointResult, run_point_to_point
 from repro.serving.queue import ArrivalQueue, Request
-from repro.serving.scheduler import ContinuousBatcher, DrainStalled
+from repro.serving.resilience import ResilientBatcher, verify_row
+from repro.serving.scheduler import (
+    Backpressure,
+    ContinuousBatcher,
+    DrainStalled,
+    ServerClosed,
+)
 
 __all__ = [
     "ContinuousBatcher",
+    "ResilientBatcher",
     "DrainStalled",
+    "ServerClosed",
+    "Backpressure",
+    "verify_row",
+    "Fault",
+    "FaultPlan",
+    "FaultyBackend",
+    "FaultyDistCache",
+    "InjectedFault",
+    "VirtualClock",
     "EngineBackend",
     "StaticBackend",
     "ShardedBackend",

@@ -46,6 +46,19 @@ class ServingMetrics:
         self.coalesced = 0
         self.engine_served = 0  # completions that ran on an engine lane
         self.total_phases = 0  # engine phases attributed to completed queries
+        # failure/degradation stream (DESIGN.md Sec. 14) — all exact
+        # lifetime counts, disjoint from the completion aggregates above so
+        # a shed request never pollutes a latency mean
+        self.shed = 0  # dropped by overload shedding or close()
+        self.deadline_expired = 0  # shed unanswered past their deadline
+        self.deadline_misses = 0  # expired-shed + answered-late
+        self.failed = 0  # retry budget exhausted under persistent faults
+        self.rejected = 0  # submit() refused at max_pending (no Request)
+        self.retries = 0  # re-solves scheduled (quarantine/engine recovery)
+        self.quarantines = 0  # harvested rows the verifier rejected
+        self.engine_failures = 0  # engine step exceptions recovered from
+        self.stale_served = 0  # completions served from an over-TTL row
+        self.downgraded = 0  # point queries widened to full solves
         self.steps = 0
         self.engine_trips = 0  # loop trips actually executed across steps
         self._busy_lane_trips = 0
@@ -90,9 +103,39 @@ class ServingMetrics:
             self._g_busy = registry.gauge(
                 "serving.busy_lanes", "lanes holding a live query at last step"
             )
+            self._c_shed = registry.counter(
+                "serving.shed", "requests dropped by shedding or close()"
+            )
+            self._c_deadline = registry.counter(
+                "serving.deadline_misses",
+                "requests not answered by their deadline (shed or late)"
+            )
+            self._c_failed = registry.counter(
+                "serving.failed", "requests whose retry budget ran out"
+            )
+            self._c_rejected = registry.counter(
+                "serving.rejected", "submissions refused at max_pending"
+            )
+            self._c_retries = registry.counter(
+                "serving.retries", "re-solves scheduled by the recovery path"
+            )
+            self._c_quar = registry.counter(
+                "serving.quarantines", "harvested rows the verifier rejected"
+            )
+            self._c_engine_fail = registry.counter(
+                "serving.engine_failures", "engine step exceptions recovered"
+            )
 
     def record_completion(self, req: Request) -> None:
         self.completed += 1
+        if req.served_stale:
+            self.stale_served += 1
+        if req.deadline is not None and req.t_completed is not None \
+                and req.t_completed > req.deadline:
+            # answered, but late: the client still sees a deadline miss
+            self.deadline_misses += 1
+            if self._registry is not None:
+                self._c_deadline.inc()
         if req.cache_hit:
             self.cache_hits += 1
         elif req.coalesced:
@@ -134,6 +177,48 @@ class ServingMetrics:
         if self._registry is not None:
             self._c_trips.inc(int(trips_advanced))
             self._g_busy.set(int(busy_lanes))
+
+    def record_failure(self, req: Request, outcome: str) -> None:
+        """One request retired without an answer. Deliberately touches none
+        of the completion aggregates: ``completed``/latency stats answer
+        "how fast were the answers", failures answer "what never got one"."""
+        if outcome == "deadline":
+            self.deadline_expired += 1
+            self.deadline_misses += 1
+            if self._registry is not None:
+                self._c_deadline.inc()
+        elif outcome == "failed":
+            self.failed += 1
+            if self._registry is not None:
+                self._c_failed.inc()
+        else:  # "shed"
+            self.shed += 1
+            if self._registry is not None:
+                self._c_shed.inc()
+
+    def record_rejection(self) -> None:
+        """submit() refused at max_pending (no Request object exists)."""
+        self.rejected += 1
+        if self._registry is not None:
+            self._c_rejected.inc()
+
+    def record_retry(self, req: Request) -> None:
+        self.retries += 1
+        if self._registry is not None:
+            self._c_retries.inc()
+
+    def record_quarantine(self, req: Request) -> None:
+        self.quarantines += 1
+        if self._registry is not None:
+            self._c_quar.inc()
+
+    def record_engine_failure(self) -> None:
+        self.engine_failures += 1
+        if self._registry is not None:
+            self._c_engine_fail.inc()
+
+    def record_downgrade(self, req: Request) -> None:
+        self.downgraded += 1
 
     @property
     def wall_span(self) -> float:
@@ -183,6 +268,17 @@ class ServingMetrics:
             "steps": self.steps,
             "engine_trips": self.engine_trips,
             "wall_span_s": span,
+            # failure/degradation stream (all exact lifetime counts)
+            "shed": self.shed,
+            "deadline_expired": self.deadline_expired,
+            "deadline_misses": self.deadline_misses,
+            "failed": self.failed,
+            "rejected": self.rejected,
+            "retries": self.retries,
+            "quarantines": self.quarantines,
+            "engine_failures": self.engine_failures,
+            "stale_served": self.stale_served,
+            "downgraded": self.downgraded,
         }
 
     def to_json(self, **dump_kw) -> str:

@@ -273,6 +273,44 @@ def test_lint_raw_timer():
     assert lint_source(ok, "benchmarks/foo.py") == []
 
 
+def test_lint_swallowed_exception():
+    bare = ("def f():\n"
+            "    try:\n"
+            "        g()\n"
+            "    except:\n"
+            "        h()\n")
+    assert [f.rule for f in lint_source(bare, "src/repro/core/foo.py")] \
+        == ["swallowed-exception"]
+    # broad catch with a pass/... body: silent swallow
+    for body in ("pass", "..."):
+        swallow = ("def f():\n"
+                   "    try:\n"
+                   "        g()\n"
+                   "    except Exception:\n"
+                   f"        {body}\n")
+        assert [f.rule for f in lint_source(swallow, "src/repro/serving/foo.py")] \
+            == ["swallowed-exception"]
+    # broad catch that HANDLES (logs/retries/re-raises) is fine, as is a
+    # narrowed type even with an empty body
+    handled = ("def f():\n"
+               "    try:\n"
+               "        g()\n"
+               "    except Exception as e:\n"
+               "        log(e)\n"
+               "    try:\n"
+               "        g()\n"
+               "    except FileNotFoundError:\n"
+               "        pass\n")
+    assert lint_source(handled, "src/repro/core/foo.py") == []
+    # pragma opt-out for a deliberate swallow
+    ok = ("def f():\n"
+          "    try:\n"
+          "        g()\n"
+          "    except Exception:  # repro: allow(swallowed-exception)\n"
+          "        pass\n")
+    assert lint_source(ok, "src/repro/core/foo.py") == []
+
+
 def test_shipped_tree_is_lint_clean():
     import pathlib
 

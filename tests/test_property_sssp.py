@@ -294,6 +294,129 @@ def test_criteria_hierarchy_end_to_end_in_stepper(seed, zero_frac):
             )
 
 
+# ---------------------------------------------------------------------------
+# chaos: the serving runtime under random fault plans
+# ---------------------------------------------------------------------------
+
+# one shared graph (and memoised reference rows) across all chaos examples:
+# the property is about fault schedules, not graph shapes, and a fixed graph
+# keeps the engine jit cache warm across examples
+_CHAOS_N = 60
+
+
+def _chaos_graph():
+    import repro.graphs as graphs
+    if not hasattr(_chaos_graph, "g"):
+        _chaos_graph.g = graphs.uniform_gnp(_CHAOS_N, 7.0 / _CHAOS_N, seed=91)
+        _chaos_graph.rows = {}
+    return _chaos_graph.g
+
+
+def _chaos_row(source):
+    from repro.core.static_engine import run_phased_static
+    g = _chaos_graph()
+    if source not in _chaos_graph.rows:
+        _chaos_graph.rows[source] = np.asarray(
+            run_phased_static(g, source).dist)
+    return _chaos_graph.rows[source]
+
+
+def _chaos_backend(kind, g, b):
+    from repro.kernels.config import TuningLedger, record_portfolio
+    from repro.serving import (
+        EngineCandidate, PortfolioBackend, StaticBackend, graph_family,
+    )
+    if kind == "static":
+        return StaticBackend(g, point_queries=True)
+    # pre-measured ledger: routing is exercised, probe runs are not
+    led = TuningLedger()
+    fam = graph_family(g)
+    record_portfolio(led, fam, b, "instatic|outstatic", "padded",
+                     wall_s=0.5, phases=10, queries=b)
+    record_portfolio(led, fam, b, "delta", "sliced",
+                     wall_s=0.25, phases=20, queries=b, delta=0.3)
+    cands = (EngineCandidate("instatic|outstatic", "padded"),
+             EngineCandidate("delta", "sliced"))
+    return PortfolioBackend(g, lanes_hint=b, candidates=cands, ledger=led,
+                            point_queries=True)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 20), b=st.integers(1, 4),
+       backend_kind=st.sampled_from(["static", "portfolio"]),
+       n_faults=st.integers(1, 6))
+def test_chaos_serving_bit_exact_under_random_faults(seed, b, backend_kind,
+                                                     n_faults):
+    """The resilient serving runtime under arbitrary fault schedules: for
+    random fault plans x {Static,Portfolio} backends x lane counts x mixed
+    point/full traffic, every completed request's answer is BIT-exact the
+    fault-free solve, retry amplification is bounded by the faults that
+    actually fired, and no corrupted row survives in the cache with a
+    valid checksum (cache-never-poisoned)."""
+    import zlib
+
+    from repro.serving import (
+        DistCache, FaultPlan, FaultyBackend, FaultyDistCache,
+        ResilientBatcher, VirtualClock,
+    )
+
+    g = _chaos_graph()
+    plan = FaultPlan.random(seed, n_faults=n_faults, horizon=30, lanes=b)
+    clock = VirtualClock()
+    cache = FaultyDistCache(DistCache(), plan)
+    backend = FaultyBackend(_chaos_backend(backend_kind, g, b), plan,
+                            clock=clock)
+    server = ResilientBatcher(g, lanes=b, backend=backend, cache=cache,
+                              clock=clock.now, retry_budget=max(6, n_faults))
+
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(10):
+        s = int(rng.integers(0, g.n))
+        t = int(rng.integers(0, g.n)) if i % 3 == 0 else None
+        reqs.append(server.submit(s, target=t))
+    server.drain(max_steps=2000)
+
+    # 1) with enough retry budget every request completes, bit-exactly
+    for r in reqs:
+        assert r.outcome == "ok", (r.fail_reason, plan.faults)
+        np.testing.assert_array_equal(np.asarray(r.dist),
+                                      _chaos_row(r.source))
+        if r.target is not None:  # verified servers widen point queries
+            assert r.downgraded
+            assert r.distance == float(_chaos_row(r.source)[r.target])
+
+    # 2) retry amplification is bounded by what actually fired: one burned
+    #    retry per corrupted row, at most b per engine failure (every
+    #    in-flight lane re-queues); stalls and cache poison burn none
+    fired = backend.fired
+    bound = sum(b if f.kind == "step_error" else 1
+                for f in fired if f.kind != "stall")
+    assert server.metrics.retries <= bound
+    assert server.metrics.quarantines == sum(
+        1 for f in fired if f.kind.startswith("row_"))
+    assert server.metrics.engine_failures == sum(
+        1 for f in fired if f.kind == "step_error")
+
+    # 3) stalls are the only thing that moves this clock
+    assert clock.now() == pytest.approx(sum(
+        f.magnitude for f in fired if f.kind == "stall"))
+
+    # 4) cache-never-poisoned: every entry either matches the fault-free
+    #    solve bit-for-bit, or its checksum is broken (a lookup drops it —
+    #    it can never be served). A wrong row with a VALID crc would mean
+    #    a corruption got past the verifier and was re-checksummed.
+    for (gkey, crit, source), e in cache._d.items():
+        if zlib.crc32(e.row.tobytes()) == e.crc:
+            np.testing.assert_array_equal(e.row, _chaos_row(source))
+    # and lookups agree: a poisoned entry is dropped, never returned
+    from repro.serving import graph_key
+    for (gkey, crit, source) in list(cache._d):
+        got = cache.get(gkey, crit, source, now=clock.now())
+        if got is not None:
+            np.testing.assert_array_equal(got, _chaos_row(source))
+
+
 @settings(max_examples=25, deadline=None)
 @given(n=st.integers(1, 300), seed=st.integers(0, 2 ** 20))
 def test_frontier_crit_property(n, seed):

@@ -1,0 +1,501 @@
+"""Deterministic tests for the fault-tolerant serving runtime.
+
+The chaos *property* (random fault plans x backends x lane counts) lives in
+``tests/test_property_sssp.py``; this module pins each mechanism one at a
+time with hand-written fault plans: the row verifier, quarantine + retry,
+engine-failure recovery, stalls and deadlines, backpressure and priority
+shedding, stale serving, point-query downgrade, shutdown discipline, and
+the crash-safe cache snapshot (including corrupt/truncated/foreign files).
+"""
+import numpy as np
+import pytest
+
+from repro.core.static_engine import run_phased_static
+from repro.graphs import grid_road, uniform_gnp
+from repro.serving import (
+    Backpressure,
+    ContinuousBatcher,
+    DistCache,
+    Fault,
+    FaultPlan,
+    FaultyBackend,
+    FaultyDistCache,
+    InjectedFault,
+    ResilientBatcher,
+    ServerClosed,
+    StaticBackend,
+    VirtualClock,
+    graph_key,
+    verify_row,
+)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return uniform_gnp(140, 8 / 140, seed=71)
+
+
+@pytest.fixture(scope="module")
+def rows(graph):
+    """Reference rows for a few sources (host f32)."""
+    return {s: np.asarray(run_phased_static(graph, s).dist)
+            for s in (0, 3, 17, 40)}
+
+
+def _expected(g, memo, source):
+    if source not in memo:
+        memo[source] = np.asarray(run_phased_static(g, source).dist)
+    return memo[source]
+
+
+# ---------------------------------------------------------------------------
+# verify_row: the relax-fixed-point certificate
+# ---------------------------------------------------------------------------
+
+
+def test_verify_accepts_engine_rows(graph, rows):
+    for s, d in rows.items():
+        assert verify_row(graph, d, s) is None
+
+
+def test_verify_catches_every_single_entry_corruption(graph, rows):
+    """Any single-entry change to a finished row — NaN, negative, raised,
+    lowered, or de-infinitied — must be detected."""
+    s = 3
+    clean = rows[s]
+    finite = np.flatnonzero(np.isfinite(clean) & (np.arange(graph.n) != s))
+    v = int(finite[5])
+    for value, why in [
+        (np.nan, "NaN"), (-1.0, "negative"),
+        (clean[v] + 0.5, "raised"), (clean[v] * 0.5, "lowered"),
+    ]:
+        bad = clean.copy()
+        bad[v] = value
+        assert verify_row(graph, bad, s) is not None, why
+    # corrupting the source, and faking reachability of an inf vertex
+    bad = clean.copy()
+    bad[s] = 0.25
+    assert "source" in verify_row(graph, bad, s)
+    inf_v = np.flatnonzero(np.isinf(clean))
+    if inf_v.size:
+        bad = clean.copy()
+        bad[int(inf_v[0])] = 7.0
+        assert verify_row(graph, bad, s) is not None
+    assert "shape" in verify_row(graph, clean[:-1], s)
+
+
+def test_verify_point_rows_sanity_only(graph, rows):
+    """A pruned point row legitimately fails the fixed point — with a
+    target, only the cheap sanity prefix applies."""
+    s = 3
+    tentative = rows[s].copy()
+    finite = np.flatnonzero(np.isfinite(tentative))
+    v = int(finite[-1])
+    tentative[v] = tentative[v] + 100.0  # an unsettled overestimate
+    assert verify_row(graph, tentative, s, target=0) is None
+    assert verify_row(graph, tentative, s) is not None
+    tentative[v] = np.nan
+    assert verify_row(graph, tentative, s, target=0) is not None
+
+
+# ---------------------------------------------------------------------------
+# fault plan / injection seam
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_is_deterministic():
+    a = FaultPlan.random(9, n_faults=6, horizon=20, lanes=4)
+    b = FaultPlan.random(9, n_faults=6, horizon=20, lanes=4)
+    assert a.faults == b.faults
+    assert FaultPlan.random(10, n_faults=6).faults != a.faults
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("meteor", at=0)
+
+
+def test_faulty_backend_without_matching_plan_is_transparent(graph):
+    plan = FaultPlan([Fault("row_nan", at=10_000, lane=0)])
+    server = ContinuousBatcher(
+        graph, lanes=2, backend=FaultyBackend(StaticBackend(graph), plan))
+    server.submit(0)
+    server.submit(17)
+    done = server.drain(max_steps=500)
+    memo = {}
+    for r in done:
+        np.testing.assert_array_equal(r.dist, _expected(graph, memo, r.source))
+    assert server.backend.fired == []
+
+
+def test_row_corruption_is_quarantined_and_resolved(graph, rows):
+    """A corrupted harvest is never delivered or cached: the lane re-solves
+    and the final answer is bit-exact."""
+    plan = FaultPlan([Fault("row_nan", at=0, lane=0),
+                      Fault("row_perturb", at=0, lane=1, magnitude=2.0)],
+                     seed=3)
+    cache = DistCache()
+    server = ResilientBatcher(
+        graph, lanes=2, cache=cache,
+        backend=FaultyBackend(StaticBackend(graph), plan))
+    reqs = [server.submit(s) for s in (0, 3)]
+    done = server.drain(max_steps=500)
+    assert len(server.backend.fired) == 2
+    assert server.metrics.quarantines == 2
+    assert server.metrics.retries == 2
+    assert {r.outcome for r in done} == {"ok"}
+    for r in reqs:
+        np.testing.assert_array_equal(r.dist, rows[r.source])
+        assert not np.asarray(r.dist).flags.writeable
+    # the cache holds only verified rows
+    for s in (0, 3):
+        hit = cache.get(graph_key(graph), server.criterion, s)
+        np.testing.assert_array_equal(hit, rows[s])
+
+
+def test_retry_budget_exhaustion_fails_loudly(graph):
+    """Persistent corruption of one lane's harvests retires the request
+    with outcome="failed" instead of looping forever."""
+    plan = FaultPlan([Fault("row_nan", at=0) for _ in range(10)], seed=4)
+    server = ResilientBatcher(
+        graph, lanes=1, retry_budget=2,
+        backend=FaultyBackend(StaticBackend(graph), plan))
+    req = server.submit(0)
+    done = server.drain(max_steps=500)
+    assert req.outcome == "failed"
+    assert "retry budget" in req.fail_reason
+    assert req.retries == 2
+    assert req.dist is None  # no corrupted row ever delivered
+    assert done[-1] is req
+    assert server.metrics.failed == 1
+    assert server.metrics.quarantines == 3  # initial try + 2 retries
+
+
+def test_lane_retirement_after_repeated_rejects(graph, rows):
+    plan = FaultPlan([Fault("row_nan", at=0, lane=0),
+                      Fault("row_nan", at=0, lane=0)], seed=5)
+    server = ResilientBatcher(
+        graph, lanes=2, retry_budget=5, quarantine_lane_after=2,
+        backend=FaultyBackend(StaticBackend(graph), plan))
+    req = server.submit(0)
+    server.drain(max_steps=500)
+    assert req.outcome == "ok"
+    np.testing.assert_array_equal(req.dist, rows[0])
+    # lane 0 ate two rejects and was retired; the re-solve ran elsewhere
+    assert server._lane_disabled[0] is True
+    assert req.lane != 0
+
+
+def test_engine_step_failure_recovers(graph, rows):
+    plan = FaultPlan([Fault("step_error", at=1)], seed=6)
+    server = ResilientBatcher(
+        graph, lanes=2, phases_per_step=4,
+        backend=FaultyBackend(StaticBackend(graph), plan))
+    reqs = [server.submit(s) for s in (0, 3)]
+    server.drain(max_steps=500)
+    assert server.metrics.engine_failures == 1
+    assert server.metrics.retries >= 1
+    for r in reqs:
+        assert r.outcome == "ok"
+        np.testing.assert_array_equal(r.dist, rows[r.source])
+
+
+def test_injected_step_error_without_resilience_propagates(graph):
+    plan = FaultPlan([Fault("step_error", at=0)])
+    server = ContinuousBatcher(
+        graph, lanes=1, backend=FaultyBackend(StaticBackend(graph), plan))
+    server.submit(0)
+    with pytest.raises(InjectedFault):
+        server.drain(max_steps=500)
+
+
+def test_stall_fault_burns_virtual_time_and_deadline(graph):
+    clock = VirtualClock()
+    plan = FaultPlan([Fault("stall", at=0, magnitude=10.0)])
+    server = ResilientBatcher(
+        graph, lanes=1, clock=clock.now,
+        backend=FaultyBackend(StaticBackend(graph), plan, clock=clock))
+    met = server.submit(0)  # no deadline: late is still ok
+    missed = server.submit(3, deadline=5.0)  # expires during the stall
+    server.drain(max_steps=500)
+    assert clock.now() == 10.0
+    assert met.outcome == "ok" and met.latency == 10.0
+    assert missed.outcome == "deadline" and missed.dist is None
+    assert server.metrics.deadline_expired == 1
+    assert server.metrics.deadline_misses == 1
+
+
+def test_late_delivery_counts_a_miss_but_still_answers(graph, rows):
+    clock = VirtualClock()
+    plan = FaultPlan([Fault("stall", at=0, magnitude=10.0)])
+    server = ResilientBatcher(
+        graph, lanes=1, clock=clock.now,
+        backend=FaultyBackend(StaticBackend(graph), plan, clock=clock))
+    req = server.submit(0, deadline=5.0)
+    server.step()  # admits, stalls past the deadline, solves on
+    server.drain(max_steps=500)
+    assert req.outcome == "ok"  # already on a lane: answered, just late
+    assert req.deadline_missed
+    np.testing.assert_array_equal(req.dist, rows[0])
+    assert server.metrics.deadline_misses == 1
+    assert server.metrics.deadline_expired == 0
+
+
+# ---------------------------------------------------------------------------
+# admission policy: priorities, backpressure, staleness, downgrade
+# ---------------------------------------------------------------------------
+
+
+def test_priority_wins_a_lane_first(graph):
+    server = ContinuousBatcher(graph, lanes=1)
+    low = [server.submit(s) for s in (0, 3, 17)]
+    high = server.submit(40, priority=5)
+    server.drain(max_steps=500)
+    # the high-priority arrival overtook every queued request; FIFO holds
+    # within the equal-priority rest
+    order = [r.req_id for r in sorted(
+        (r for r in server.completed), key=lambda r: r.t_admitted)]
+    assert order.index(high.req_id) == 0
+    assert [r.t_admitted for r in low] == sorted(r.t_admitted for r in low)
+
+
+def test_backpressure_rejects_and_priority_sheds(graph):
+    server = ContinuousBatcher(graph, lanes=1, max_pending=2)
+    a = server.submit(0)
+    b = server.submit(3)
+    assert a is not None
+    with pytest.raises(Backpressure):  # equal priority never displaces
+        server.submit(17)
+    assert server.metrics.rejected == 1
+    # a higher-priority arrival displaces the newest lowest-priority entry
+    c = server.submit(40, priority=1)
+    assert b.outcome == "shed"
+    assert server.metrics.shed == 1
+    assert server.pending == 2
+    done = server.drain(max_steps=500)
+    assert {r.req_id for r in done} == {a.req_id, c.req_id}
+
+
+def test_stale_ok_ladder(graph, rows):
+    clock = VirtualClock()
+    cache = DistCache()
+    server = ContinuousBatcher(graph, lanes=1, cache=cache,
+                               clock=clock.now, cache_max_age=5.0)
+    server.submit(0)
+    server.drain(max_steps=500)
+    clock.advance(100.0)  # the cached row is now 100 units old
+    fresh = server.submit(0)
+    stale = server.submit(0, stale_ok=True)
+    server.drain(max_steps=500)
+    assert stale.cache_hit and stale.served_stale
+    np.testing.assert_array_equal(stale.dist, rows[0])
+    assert not fresh.cache_hit  # over TTL: re-solved (then re-cached)
+    assert cache.stale_misses == 1
+    assert server.metrics.stale_served == 1
+    # the re-solve refreshed the entry: hits are fresh again
+    again = server.submit(0)
+    server.drain(max_steps=500)
+    assert again.cache_hit and not again.served_stale
+
+
+def test_point_downgrade_under_backlog(graph, rows):
+    server = ContinuousBatcher(graph, lanes=1, cache=DistCache(),
+                               point_queries=True, point_downgrade_backlog=1)
+    server.submit(0)
+    pt = server.submit(3, target=17)  # classified with a backlog behind it
+    server.drain(max_steps=500)
+    assert pt.downgraded
+    assert server.metrics.downgraded == 1
+    assert pt.effective_target is None
+    np.testing.assert_array_equal(pt.dist, rows[3])  # full, cacheable row
+    assert pt.distance == float(rows[3][17])  # still answers s->t
+    assert (graph_key(graph), server.criterion, 3) in server.cache
+
+
+def test_resilient_server_downgrades_points_for_verifiability(graph, rows):
+    server = ResilientBatcher(graph, lanes=1, point_queries=True,
+                              cache=DistCache())
+    pt = server.submit(3, target=17)
+    server.drain(max_steps=500)
+    assert pt.downgraded and pt.outcome == "ok"
+    assert pt.distance == float(rows[3][17])
+    assert verify_row(graph, pt.dist, 3) is None
+
+
+# ---------------------------------------------------------------------------
+# shutdown discipline
+# ---------------------------------------------------------------------------
+
+
+def test_close_sheds_and_submit_after_close_raises(graph):
+    server = ContinuousBatcher(graph, lanes=1, phases_per_step=1)
+    done = server.submit(0)
+    server.step()  # on a lane, mid-solve (one phase in)
+    assert done.outcome is None
+    queued = server.submit(3)
+    dropped = server.close()
+    assert {r.req_id for r in dropped} == {done.req_id, queued.req_id}
+    assert all(r.outcome == "shed" for r in dropped)
+    assert server.closed and server.idle
+    with pytest.raises(ServerClosed, match="submit"):
+        server.submit(17)
+    with pytest.raises(ServerClosed, match="step"):
+        server.step()
+    with pytest.raises(ServerClosed):
+        server.drain()
+    assert server.close() == []  # idempotent
+
+
+def test_duplicate_harvest_raises(graph):
+    server = ContinuousBatcher(graph, lanes=1)
+    req = server.submit(0)
+    server.drain(max_steps=500)
+    assert req.outcome == "ok"
+    with pytest.raises(RuntimeError, match="already retired"):
+        server._finish(req)
+    with pytest.raises(RuntimeError, match="already retired"):
+        server._fail(req, "shed", 0.0)
+
+
+# ---------------------------------------------------------------------------
+# cache integrity + crash-safe persistence
+# ---------------------------------------------------------------------------
+
+
+def test_cache_poison_is_detected_and_never_served(graph, rows):
+    plan = FaultPlan([Fault("cache_poison", at=0)], seed=8)
+    cache = FaultyDistCache(DistCache(), plan)
+    server = ResilientBatcher(graph, lanes=1, cache=cache)
+    server.submit(0)
+    server.drain(max_steps=500)
+    assert cache.poisoned  # the stored row was rotted post-checksum
+    dup = server.submit(0)  # lookup must detect the rot and re-solve
+    server.drain(max_steps=500)
+    assert not dup.cache_hit
+    assert cache.corrupt_dropped == 1
+    np.testing.assert_array_equal(dup.dist, rows[0])
+    # the re-solve re-cached a clean row (no poison fault left to fire)
+    hit = cache.get(graph_key(graph), server.criterion, 0)
+    np.testing.assert_array_equal(hit, rows[0])
+
+
+def test_snapshot_restore_roundtrip(tmp_path, graph, rows):
+    cache = DistCache()
+    gkey = graph_key(graph)
+    for s, d in rows.items():
+        cache.put(gkey, "in|out", s, d, now=float(s))
+    path = str(tmp_path / "cache.bin")
+    assert cache.snapshot(path) == len(rows)
+    assert [f.name for f in tmp_path.iterdir()] == ["cache.bin"]  # no tmp
+
+    back = DistCache()
+    assert back.restore(path, now=1000.0) == len(rows)
+    assert len(back) == len(rows)
+    for s, d in rows.items():
+        got = back.get(gkey, "in|out", s)
+        np.testing.assert_array_equal(got, d)
+        assert not got.flags.writeable
+    # relative ages survive the restart: newest restores at age 0
+    assert back.age(gkey, "in|out", 40, now=1000.0) == 0.0
+    assert back.age(gkey, "in|out", 0, now=1000.0) == 40.0
+
+
+def test_snapshot_restore_tolerates_corruption(tmp_path, graph, rows):
+    cache = DistCache()
+    gkey = graph_key(graph)
+    srcs = sorted(rows)
+    for s in srcs:
+        cache.put(gkey, "c", s, rows[s])
+    path = tmp_path / "cache.bin"
+    cache.snapshot(str(path))
+    blob = path.read_bytes()
+
+    # truncated tail: every entry before the cut survives
+    (tmp_path / "trunc.bin").write_bytes(blob[:len(blob) - 17])
+    c1 = DistCache()
+    assert c1.restore(str(tmp_path / "trunc.bin")) == len(srcs) - 1
+
+    # a bit flipped inside the LAST entry's row bytes: that entry is
+    # dropped by its checksum, the rest load (frame lengths are intact)
+    flipped = bytearray(blob)
+    flipped[-3] ^= 0xFF
+    (tmp_path / "flip.bin").write_bytes(bytes(flipped))
+    c2 = DistCache()
+    assert c2.restore(str(tmp_path / "flip.bin")) == len(srcs) - 1
+    assert c2.corrupt_dropped == 1
+    for s in srcs[:-1]:
+        np.testing.assert_array_equal(c2.get(gkey, "c", s), rows[s])
+
+    # foreign / garbage files load nothing and never raise
+    (tmp_path / "foreign.bin").write_bytes(b"PNG\x89 definitely not a cache")
+    (tmp_path / "empty.bin").write_bytes(b"")
+    c3 = DistCache()
+    assert c3.restore(str(tmp_path / "foreign.bin")) == 0
+    assert c3.restore(str(tmp_path / "empty.bin")) == 0
+    assert c3.restore(str(tmp_path / "missing.bin")) == 0
+    assert len(c3) == 0
+
+
+def test_restored_cache_serves_a_cold_server(tmp_path, graph, rows):
+    """The restart story end to end: snapshot a warm server's cache, boot a
+    cold server on the restored file, and the first query is a hit."""
+    path = str(tmp_path / "cache.bin")
+    warm = ContinuousBatcher(graph, lanes=1, cache=DistCache())
+    warm.submit(0)
+    warm.drain(max_steps=500)
+    warm.cache.snapshot(path)
+
+    restored = DistCache()
+    restored.restore(path)
+    cold = ContinuousBatcher(graph, lanes=1, cache=restored)
+    req = cold.submit(0)
+    cold.drain(max_steps=500)
+    assert req.cache_hit and req.phases == 0
+    np.testing.assert_array_equal(req.dist, rows[0])
+
+
+# ---------------------------------------------------------------------------
+# metrics + report surface
+# ---------------------------------------------------------------------------
+
+
+def test_failure_counters_stay_out_of_completion_aggregates(graph):
+    clock = VirtualClock()
+    server = ContinuousBatcher(graph, lanes=1, clock=clock.now)
+    ok = server.submit(0)
+    dead = server.submit(3, deadline=-1.0)  # born expired
+    server.drain(max_steps=500)
+    rep = server.metrics.report()
+    assert ok.outcome == "ok" and dead.outcome == "deadline"
+    assert rep["queries_completed"] == 1  # failures are not completions
+    assert rep["deadline_expired"] == rep["deadline_misses"] == 1
+    assert rep["latency_mean_s"] == ok.latency
+    import json
+    json.dumps(rep)
+
+
+def test_chaos_run_with_grid_graph_and_obs(tmp_path):
+    """One integrated run: road grid, mixed faults, obs enabled — the
+    tracer and registry must absorb the failure events without breaking
+    trace validity."""
+    from repro.obs import Observability
+    from repro.obs.tracer import validate_events
+
+    g = grid_road(9, 9, seed=2)
+    clock = VirtualClock()
+    plan = FaultPlan([Fault("row_nan", at=0, lane=1),
+                      Fault("step_error", at=3),
+                      Fault("stall", at=5, magnitude=2.0)], seed=11)
+    obs = Observability.enabled()
+    server = ResilientBatcher(
+        g, lanes=2, cache=DistCache(), clock=clock.now, obs=obs,
+        backend=FaultyBackend(StaticBackend(g), plan, clock=clock))
+    reqs = [server.submit(int(s)) for s in
+            np.random.default_rng(0).integers(0, g.n, 10)]
+    server.drain(max_steps=1000)
+    memo = {}
+    for r in reqs:
+        assert r.outcome == "ok"
+        np.testing.assert_array_equal(r.dist, _expected(g, memo, r.source))
+    assert len(server.backend.fired) == 3
+    assert validate_events(obs.tracer.events()) == []
+    snap = obs.registry.snapshot()
+    assert "serving.quarantines" in snap
+    assert "serving.engine_failures" in snap

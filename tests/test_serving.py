@@ -222,8 +222,15 @@ def test_cache_does_not_leak_across_criteria():
     a.drain(max_steps=500)
     assert (graph_key(g), a.criterion, 3) in cache
     # poison the default-criterion entry so any cross-criterion hit is loud
+    # (a well-formed entry with a matching checksum: this test is about key
+    # confinement, not the integrity machinery — see test_resilience.py)
+    import zlib
+
+    from repro.serving.cache import _Entry
+
     poisoned = np.full(g.n, -1.0, np.float32)
-    cache._d[(graph_key(g), a.criterion, 3)] = poisoned
+    cache._d[(graph_key(g), a.criterion, 3)] = _Entry(
+        poisoned, zlib.crc32(poisoned.tobytes()), 0.0)
     b = ContinuousBatcher(g, lanes=1, cache=cache, criterion="in|out")
     b.submit(3)
     done = b.drain(max_steps=500)
